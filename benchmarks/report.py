@@ -1,0 +1,92 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the dry-run
+JSONL records.
+
+    PYTHONPATH=src python -m benchmarks.report
+"""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def load(mesh: str) -> list[dict]:
+    path = os.path.join(RESULTS, f"dryrun_{mesh}.jsonl")
+    if not os.path.exists(path):
+        return []
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"])] = r   # last write wins
+    return sorted(recs.values(), key=lambda r: (r["arch"], r["shape"]))
+
+
+def fmt_ms(t: float) -> str:
+    return f"{t * 1e3:.2f}"
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = [
+        "| arch | shape | kind | mem/chip GiB | compile s | "
+        "FLOPs/chip G | HBM GB/chip | wire GB/chip |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load(mesh):
+        ro = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {r['memory'].get('total_gib', '?')} "
+            f"| {r['compile_s']} "
+            f"| {ro['hlo_gflops_per_chip']:.1f} "
+            f"| {ro['hlo_gbytes_per_chip']:.1f} "
+            f"| {ro['wire_gbytes_per_chip']:.2f} |")
+    return "\n".join(rows)
+
+
+def roofline_table(mesh: str) -> str:
+    rows = [
+        "| arch | shape | t_compute ms | t_memory ms | t_collective ms "
+        "| bound | MODEL_GF | useful ratio | step bound s |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load(mesh):
+        ro = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {fmt_ms(ro['t_compute'])} | {fmt_ms(ro['t_memory'])} "
+            f"| {fmt_ms(ro['t_collective'])} | **{ro['bottleneck']}** "
+            f"| {ro['model_gflops']:.0f} "
+            f"| {ro.get('useful_flop_ratio', 0):.3f} "
+            f"| {ro['step_time_bound_s']:.3f} |")
+    return "\n".join(rows)
+
+
+def summary(mesh: str) -> str:
+    recs = load(mesh)
+    if not recs:
+        return f"(no records for {mesh})"
+    over = [(r["arch"], r["shape"], r["memory"].get("total_gib"))
+            for r in recs if r["memory"].get("total_gib", 0) > 16]
+    from collections import Counter
+    bounds = Counter(r["roofline"]["bottleneck"] for r in recs)
+    lines = [f"{len(recs)} cells compiled on {mesh}; "
+             f"bottlenecks: {dict(bounds)}"]
+    if over:
+        lines.append(f"cells over the 16 GiB/chip budget: {over}")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n### Dry-run, {mesh}\n")
+        print(summary(mesh))
+        print()
+        print(dryrun_table(mesh))
+        print(f"\n### Roofline, {mesh}\n")
+        print(roofline_table(mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Serving example: continuous batching with mixed-length requests.
+
+A small gemma-style model (alternating local/global attention, ring +
+full KV caches) serves a queue of requests through the slot engine:
+finished requests release their slot mid-flight and queued ones are
+prefilled into it while the others keep decoding.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.serving.engine import Engine, generate
+
+
+def main() -> None:
+    cfg = T.LMConfig(
+        name="gemma-mini", n_layers=4, d_model=128, n_heads=4,
+        n_kv_heads=2, head_dim=32, d_ff=384, vocab=2048, window=16,
+        layer_pattern="local_global", attn_softcap=50.0,
+        final_softcap=30.0, post_norm=True, embed_scale=True,
+        tie_embed=True, dtype=jnp.float32, remat=False)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+
+    rng = np.random.default_rng(0)
+    eng = Engine(params, cfg, slots=4, prompt_buf=32, cache_buf=96)
+    n_req = 10
+    for i in range(n_req):
+        plen = int(rng.integers(4, 24))
+        eng.submit(rng.integers(1, cfg.vocab, plen),
+                   max_new=int(rng.integers(8, 24)))
+
+    t0 = time.perf_counter()
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    total_tokens = sum(len(r.out_tokens) for r in done)
+    print(f"served {len(done)} requests, {total_tokens} tokens in "
+          f"{dt:.2f}s ({total_tokens / dt:.1f} tok/s on CPU)")
+
+    # spot-check one request against standalone greedy decoding
+    r = done[3]
+    prompts = np.full((1, 32), -1, np.int32)
+    prompts[0, :len(r.prompt)] = r.prompt
+    ref = generate(params, cfg, prompts, max_new=len(r.out_tokens),
+                   cache_buf=96)
+    assert np.array_equal(ref[0], np.array(r.out_tokens)), \
+        "continuous batching diverged from standalone decode"
+    print("continuous-batching output == standalone greedy decode ✓")
+
+
+if __name__ == "__main__":
+    main()

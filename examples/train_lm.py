@@ -1,0 +1,82 @@
+"""End-to-end LM training driver: a ~10M-parameter qwen-style model for
+a few hundred steps through the REAL production stack — deterministic
+pipeline + prefetch, gradient accumulation, async atomic checkpointing,
+injected mid-run failure + automatic restart, cosine schedule.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import pipeline as dp
+from repro.models import transformer as T
+from repro.train import train_state
+from repro.train.fault_tolerance import (SimulatedFailure, StepWatchdog,
+                                         run_with_restarts)
+from repro.train.optimizer import AdamWConfig, adamw, cosine_schedule
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--fail-at", type=int, default=150)
+    args = ap.parse_args()
+
+    cfg = T.LMConfig(
+        name="qwen-mini", n_layers=4, d_model=256, n_heads=8,
+        n_kv_heads=4, head_dim=32, d_ff=704, vocab=4096, qkv_bias=True,
+        dtype=jnp.float32, remat=False)
+    print(f"model: {T.param_count(cfg) / 1e6:.1f}M params")
+
+    opt = adamw(AdamWConfig(
+        lr=cosine_schedule(3e-3, warmup=20, total=args.steps)))
+    raw_step = jax.jit(
+        train_state.make_train_step(
+            lambda p, b: T.loss_fn(p, b, cfg), opt, accum_steps=2),
+        donate_argnums=(0,))
+
+    tripped = {"done": False}
+
+    def step_fn(state, batch):
+        s = int(state["step"])
+        if args.fail_at and s == args.fail_at and not tripped["done"]:
+            tripped["done"] = True
+            print(f"  !! injected failure at step {s} — restarting "
+                  f"from checkpoint")
+            raise SimulatedFailure("chaos-monkey")
+        return raw_step(state, {"tokens": jnp.asarray(batch["tokens"])})
+
+    def stream_fn(start):
+        return dp.make_stream(dp.lm_batches, 0, 16, 128, cfg.vocab,
+                              start_step=start)
+
+    losses = []
+
+    def on_metrics(step, m):
+        losses.append(float(np.asarray(m["loss"])))
+        if step % 50 == 0:
+            print(f"  step {step:4d}  loss {losses[-1]:.4f}")
+
+    ckpt = os.path.join(tempfile.gettempdir(), "repro_train_lm")
+    report = run_with_restarts(
+        init_state_fn=lambda: train_state.create(
+            T.init(jax.random.PRNGKey(0), cfg), opt),
+        step_fn=step_fn, stream_fn=stream_fn, total_steps=args.steps,
+        ckpt_dir=ckpt, ckpt_every=50, watchdog=StepWatchdog(),
+        on_metrics=on_metrics)
+
+    first, last = np.mean(losses[:20]), np.mean(losses[-20:])
+    print(f"\ndone: {report.steps_run} steps ({report.restarts} restart)"
+          f", loss {first:.3f} -> {last:.3f}")
+    assert last < first, "loss did not improve"
+    assert report.restarts == (1 if args.fail_at else 0)
+    print("training improved the loss and survived the failure ✓")
+
+
+if __name__ == "__main__":
+    main()

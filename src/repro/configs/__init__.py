@@ -1,0 +1,49 @@
+"""Architecture registry: one module per assigned architecture.
+
+Every module exposes the uniform interface the launcher consumes:
+
+  ARCH_ID        str
+  FAMILY         "lm" | "gnn" | "recsys"
+  SHAPES         tuple of shape names (the assigned input-shape set)
+  make_config()             full-size model config (dry-run only)
+  make_smoke_config()       reduced same-family config (CPU tests)
+  input_specs(shape)        dict of jax.ShapeDtypeStruct for the step fn
+  step_kind(shape)          "train" | "prefill" | "decode" | "serve"
+                            | "retrieval"
+  skip_reason(shape)        None, or why the cell is skipped (e.g.
+                            long_500k on pure full-attention archs)
+"""
+from __future__ import annotations
+
+import importlib
+
+_MODULES = {
+    "qwen2.5-32b": "repro.configs.qwen2_5_32b",
+    "gemma2-2b": "repro.configs.gemma2_2b",
+    "minicpm3-4b": "repro.configs.minicpm3_4b",
+    "grok-1-314b": "repro.configs.grok_1_314b",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi3_5_moe",
+    "nequip": "repro.configs.nequip_cfg",
+    "gatedgcn": "repro.configs.gatedgcn_cfg",
+    "graphsage-reddit": "repro.configs.graphsage_reddit",
+    "gin-tu": "repro.configs.gin_tu",
+    "dcn-v2": "repro.configs.dcn_v2",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_arch(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; have {list(_MODULES)}")
+    return importlib.import_module(_MODULES[name])
+
+
+def all_cells():
+    """Every (arch, shape) pair, with skip reasons resolved."""
+    cells = []
+    for arch_id in ARCH_IDS:
+        mod = get_arch(arch_id)
+        for shape in mod.SHAPES:
+            cells.append((arch_id, shape, mod.skip_reason(shape)))
+    return cells

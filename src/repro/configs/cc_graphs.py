@@ -1,0 +1,32 @@
+"""Table I graph specs (the paper's own evaluation set) for the CC
+dry-run + scaled stand-ins for CPU benchmarking.
+
+The four full-size graphs are lowered as ShapeDtypeStruct edge lists
+through the distributed-CC program (launch/dryrun.py lowers them on the
+production mesh alongside the assigned architectures)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.generators import TABLE1_FULL, table1_scaled  # noqa: F401
+
+ARCH_ID = "cc-adaptive"
+FAMILY = "cc"
+SHAPES = tuple(TABLE1_FULL)      # usa-osm, euro-osm-karls, soc-lj, kron
+
+
+def step_kind(shape: str) -> str:
+    return "cc"
+
+
+def skip_reason(shape: str):
+    return None
+
+
+def input_specs(shape: str) -> dict:
+    nodes, edges, _, _ = TABLE1_FULL[shape]
+    return {
+        "edges": jax.ShapeDtypeStruct((edges, 2), jnp.int32),
+        "num_nodes": nodes,
+    }

@@ -1,0 +1,52 @@
+"""grok-1-314b [moe]: 64L d_model=6144 48H (GQA kv=8) d_ff=32768
+vocab=131072, MoE 8 experts top-2. [hf:xai-org/grok-1; unverified]
+
+8 experts < 16-way model axis ⇒ tensor parallelism INSIDE each expert
+(d_ff sharded over 'model') instead of expert parallelism — see
+transformer.param_spec. Optimizer moments are kept in bf16 so state fits
+the 16 GB/chip budget (DESIGN.md §5)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs import lm_common as LC
+from repro.models.moe import MoEConfig
+from repro.models.transformer import LMConfig
+
+ARCH_ID = "grok-1-314b"
+FAMILY = "lm"
+SHAPES = LC.SHAPES
+
+MOMENT_DTYPE = jnp.bfloat16     # consumed by launch/train.py
+ACCUM_STEPS = 16    # 1 seq/chip/microbatch: the 64-layer scan saves
+                    # [L, B_local, S, 6144] residuals per microbatch —
+                    # 4-way accum leaves 55 GiB/chip (measured)
+
+
+def make_config() -> LMConfig:
+    return LMConfig(
+        name=ARCH_ID, n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8,
+        head_dim=128, d_ff=32768, vocab=131072,
+        moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=32768,
+                      capacity_factor=1.25),
+        dtype=jnp.bfloat16, remat=True)
+
+
+def make_smoke_config() -> LMConfig:
+    return LMConfig(
+        name=ARCH_ID + "-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, head_dim=16, d_ff=160, vocab=128,
+        moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=96),
+        dtype=jnp.float32, remat=False)
+
+
+def step_kind(shape: str) -> str:
+    return LC.step_kind(shape)
+
+
+def skip_reason(shape: str):
+    return LC.lm_skip_reason(shape, make_config())
+
+
+def input_specs(shape: str) -> dict:
+    return LC.input_specs(shape, make_config())

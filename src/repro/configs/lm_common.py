@@ -1,0 +1,57 @@
+"""Shared LM shape set + input-spec builders.
+
+LM transformer shapes are seq_len × global_batch. ``decode_*`` /
+``long_*`` lower ``serve_step`` (one new token against a KV cache of
+seq_len), not ``train_step``; ``prefill_*`` lowers the prompt pass.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+
+SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+SHAPE_DEFS = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def step_kind(shape: str) -> str:
+    return SHAPE_DEFS[shape]["kind"]
+
+
+def lm_skip_reason(shape: str, cfg: T.LMConfig) -> str | None:
+    if shape == "long_500k" and cfg.window == 0:
+        return ("pure full-attention arch: 524k decode needs "
+                "sub-quadratic attention state (see DESIGN.md "
+                "§Arch-applicability)")
+    return None
+
+
+def cache_struct(cfg: T.LMConfig, batch: int, buf: int):
+    """ShapeDtypeStruct pytree of the decode cache (no allocation)."""
+    return jax.eval_shape(lambda: T.init_cache(cfg, batch, buf))
+
+
+def input_specs(shape: str, cfg: T.LMConfig) -> dict:
+    d = SHAPE_DEFS[shape]
+    s, b = d["seq"], d["batch"]
+    i32 = jnp.int32
+    if d["kind"] == "train":
+        return {"batch": {"tokens": jax.ShapeDtypeStruct((b, s + 1), i32)}}
+    if d["kind"] == "prefill":
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "cache": cache_struct(cfg, b, s),
+        }
+    # decode: one token against a cache of `seq` positions
+    return {
+        "tokens": jax.ShapeDtypeStruct((b,), i32),
+        "positions": jax.ShapeDtypeStruct((b,), i32),
+        "cache": cache_struct(cfg, b, s),
+    }

@@ -1,0 +1,46 @@
+"""phi3.5-moe-42b-a6.6b [moe]: 32L d_model=4096 32H (GQA kv=8)
+d_ff_expert=6400 vocab=32064, MoE 16 experts top-2.
+[hf:microsoft/Phi-3.5-MoE-instruct; hf]
+
+16 experts == the 16-way model axis ⇒ expert parallelism (1 expert/rank,
+all-to-all dispatch) — see transformer.param_spec."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs import lm_common as LC
+from repro.models.moe import MoEConfig
+from repro.models.transformer import LMConfig
+
+ARCH_ID = "phi3.5-moe-42b-a6.6b"
+FAMILY = "lm"
+SHAPES = LC.SHAPES
+
+
+def make_config() -> LMConfig:
+    return LMConfig(
+        name=ARCH_ID, n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+        head_dim=128, d_ff=6400, vocab=32064,
+        moe=MoEConfig(num_experts=16, top_k=2, d_ff_expert=6400,
+                      capacity_factor=1.25),
+        dtype=jnp.bfloat16, remat=True)
+
+
+def make_smoke_config() -> LMConfig:
+    return LMConfig(
+        name=ARCH_ID + "-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, head_dim=16, d_ff=160, vocab=128,
+        moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=96),
+        dtype=jnp.float32, remat=False)
+
+
+def step_kind(shape: str) -> str:
+    return LC.step_kind(shape)
+
+
+def skip_reason(shape: str):
+    return LC.lm_skip_reason(shape, make_config())
+
+
+def input_specs(shape: str) -> dict:
+    return LC.input_specs(shape, make_config())

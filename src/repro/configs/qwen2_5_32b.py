@@ -1,0 +1,42 @@
+"""qwen2.5-32b [dense]: 64L d_model=5120 40H (GQA kv=8) d_ff=27648
+vocab=152064 — GQA with QKV bias. [hf:Qwen/Qwen2.5-*; hf]"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs import lm_common as LC
+from repro.models.transformer import LMConfig
+
+ARCH_ID = "qwen2.5-32b"
+FAMILY = "lm"
+SHAPES = LC.SHAPES
+ACCUM_STEPS = 16    # 1 seq/chip/microbatch: 40-head flash tiles are 2×
+                    # gemma's — 4-way accum leaves 32 GiB/chip, 8-way
+                    # 17.3 GiB (measured); 16-way fits the 16 GB budget
+
+
+def make_config() -> LMConfig:
+    return LMConfig(
+        name=ARCH_ID, n_layers=64, d_model=5120, n_heads=40, n_kv_heads=8,
+        head_dim=128, d_ff=27648, vocab=152064, qkv_bias=True,
+        rope_theta=1_000_000.0, dtype=jnp.bfloat16, remat=True,
+        seq_parallel=False)
+
+
+def make_smoke_config() -> LMConfig:
+    return LMConfig(
+        name=ARCH_ID + "-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, head_dim=16, d_ff=160, vocab=128, qkv_bias=True,
+        dtype=jnp.float32, remat=False)
+
+
+def step_kind(shape: str) -> str:
+    return LC.step_kind(shape)
+
+
+def skip_reason(shape: str):
+    return LC.lm_skip_reason(shape, make_config())
+
+
+def input_specs(shape: str) -> dict:
+    return LC.input_specs(shape, make_config())

@@ -1,0 +1,17 @@
+# The paper's primary contribution: adaptive work-efficient Connected
+# Components (Hook-Compress with Multi-Jump, Atomic-Hook analogue, and
+# 2|E|/|V| adaptive segmentation), plus baselines and the distributed form.
+from repro.core.cc import (
+    CCResult,
+    WorkCounters,
+    connected_components,
+    connected_components_hostloop,
+    num_components,
+    METHODS,
+)
+from repro.core.segmentation import (
+    SegmentationPlan,
+    adaptive_num_segments,
+    plan_segmentation,
+)
+from repro.core.unionfind import connected_components_oracle

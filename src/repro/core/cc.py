@@ -1,0 +1,463 @@
+"""Adaptive work-efficient Connected Components — the paper's core, in JAX.
+
+Implements the four variants compared in the paper's Fig. 5, adapted for
+TPU (see DESIGN.md §2 for the GPU→TPU mapping):
+
+  * ``soman``       — Soman et al. baseline (Fig. 1/2): single-level hook
+                      rounds + single-level Jump sweeps, a convergence
+                      check after *every* sweep (each check is a
+                      host-round-trip on the GPU baseline; we count them).
+  * ``multijump``   — + the paper's Multi-Jump: the whole Compress phase is
+                      fused into one on-device ``lax.while_loop``.
+  * ``atomic_hook`` — + the paper's Atomic-Hook: a root-chasing hook pass
+                      (bounded vectorized lift + deterministic scatter-min,
+                      the TPU analogue of the CAS chase) over the whole edge
+                      list, fused with compress into a single device loop.
+  * ``adaptive``    — + the paper's adaptive segmentation: the edge list is
+                      split into s = 2|E|/|V| segments; each segment hook is
+                      followed by a full compress (Fig. 4), all inside one
+                      jitted program (zero host round-trips).
+
+All variants produce canonical labels: ``labels[v] == min vertex id of
+v's component`` (a strictly stronger guarantee than the paper's "some
+representative" — see DESIGN.md).
+
+Work accounting (the paper's currency is work-efficiency):
+  * ``hook_ops``    — edge-hook evaluations performed,
+  * ``jump_ops``    — vertex-jump (gather) evaluations performed,
+  * ``jump_sweeps`` — full |V|-wide pointer-jump sweeps,
+  * ``hook_rounds`` — edge-set hook rounds,
+  * ``sync_rounds`` — host-equivalent synchronization points (device→host
+                      convergence checks a GPU host-side loop would incur;
+                      fused variants count 1 per jit call).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.segmentation import SegmentationPlan, plan_segmentation
+
+_MAX_ROUNDS = 64          # outer hook-round fuel
+
+
+def _compress_fuel(num_nodes: int) -> int:
+    """Pointer doubling squares path lengths per sweep, so
+    ceil(log2(V)) + 2 sweeps provably flatten any forest on V nodes —
+    a 2-3x tighter static loop bound than a fixed 64 (the roofline's
+    memory term for CC scales with this fuel)."""
+    import math
+    return max(4, math.ceil(math.log2(max(num_nodes, 2))) + 2)
+
+METHODS = ("soman", "multijump", "atomic_hook", "adaptive", "labelprop")
+
+
+class WorkCounters(NamedTuple):
+    hook_ops: jnp.ndarray
+    jump_ops: jnp.ndarray
+    jump_sweeps: jnp.ndarray
+    hook_rounds: jnp.ndarray
+    sync_rounds: jnp.ndarray
+
+    @staticmethod
+    def zeros() -> "WorkCounters":
+        z = jnp.zeros((), jnp.int32)
+        return WorkCounters(z, z, z, z, z)
+
+    def add(self, **kw) -> "WorkCounters":
+        d = self._asdict()
+        for k, v in kw.items():
+            d[k] = d[k] + jnp.asarray(v, jnp.int32)
+        return WorkCounters(**d)
+
+
+class CCResult(NamedTuple):
+    labels: jnp.ndarray       # int32 [V]; labels[v] = min id of v's component
+    work: WorkCounters
+
+
+# ---------------------------------------------------------------------------
+# Primitive operations
+# ---------------------------------------------------------------------------
+
+def hook_edges(pi: jnp.ndarray, edges: jnp.ndarray, lift_steps: int = 0
+               ) -> jnp.ndarray:
+    """One deterministic hook round over ``edges`` (TPU analogue of Hook /
+    Atomic-Hook).
+
+    For every edge (u, v): H = max(pi(u), pi(v)), L = min(...), then
+    ``pi[H] <- min(pi[H], L)`` via scatter-min (race-free winner selection —
+    the deterministic stand-in for the CAS consensus; identical fixed point
+    under the paper's high-to-low rule). ``lift_steps`` performs the bounded
+    vectorized root chase of Atomic-Hook (pu <- pi[pu]) before hooking.
+    """
+    u, v = edges[..., 0], edges[..., 1]
+    pu, pv = pi[u], pi[v]
+    for _ in range(lift_steps):
+        pu, pv = pi[pu], pi[pv]
+    hi = jnp.maximum(pu, pv)
+    lo = jnp.minimum(pu, pv)
+    return pi.at[hi].min(lo)
+
+
+def jump_once(pi: jnp.ndarray) -> jnp.ndarray:
+    """Single-level Jump (Fig. 2): pi <- pi[pi] for every vertex."""
+    return pi[pi]
+
+
+def compress(pi: jnp.ndarray, work: WorkCounters,
+             count_syncs: bool = False) -> tuple[jnp.ndarray, WorkCounters]:
+    """Full Compress via fused pointer doubling (the Multi-Jump kernel).
+
+    Runs pi <- pi[pi] sweeps on-device until every tree is a star. Each
+    sweep *squares* path lengths (pointer doubling), the same
+    work-efficiency lever as the paper's in-kernel chase + continuous
+    write-back. With ``count_syncs`` every sweep also bills one host
+    synchronization (used by the Soman baseline whose Jump loop re-checks
+    convergence from the host after every single-level kernel).
+    """
+    v = pi.shape[0]
+    fuel = _compress_fuel(v)
+
+    def cond(state):
+        _, changed, sweeps, _ = state
+        return jnp.logical_and(changed, sweeps < fuel)
+
+    def body(state):
+        p, _, sweeps, w = state
+        nxt = p[p]
+        changed = jnp.any(nxt != p)
+        w = w.add(jump_ops=v, jump_sweeps=1,
+                  sync_rounds=1 if count_syncs else 0)
+        return nxt, changed, sweeps + 1, w
+
+    pi, _, _, work = jax.lax.while_loop(
+        cond, body, (pi, jnp.asarray(True), jnp.zeros((), jnp.int32), work))
+    return pi, work
+
+
+def edges_consistent(pi: jnp.ndarray, edges: jnp.ndarray) -> jnp.ndarray:
+    """True iff every edge has both endpoints under the same label."""
+    return jnp.all(pi[edges[..., 0]] == pi[edges[..., 1]])
+
+
+# ---------------------------------------------------------------------------
+# Variant: Soman et al. baseline (Fig. 1) — single-level hooks and jumps
+# ---------------------------------------------------------------------------
+
+def _cc_soman(edges: jnp.ndarray, num_nodes: int) -> CCResult:
+    e = edges.shape[0]
+
+    def outer_cond(state):
+        _, changed, rounds, _ = state
+        return jnp.logical_and(changed, rounds < _MAX_ROUNDS)
+
+    def outer_body(state):
+        pi, _, rounds, w = state
+        new_pi = hook_edges(pi, edges, lift_steps=0)
+        hook_changed = jnp.any(new_pi != pi)
+        # bill the hook kernel + its host-side convergence check
+        w = w.add(hook_ops=e, hook_rounds=1, sync_rounds=1)
+        # Fig. 1 lines 6-10: single-level Jump until no change, a host
+        # convergence check after every sweep.
+        new_pi, w = compress(new_pi, w, count_syncs=True)
+        return new_pi, hook_changed, rounds + 1, w
+
+    pi0 = jnp.arange(num_nodes, dtype=jnp.int32)
+    pi, _, _, work = jax.lax.while_loop(
+        outer_cond, outer_body,
+        (pi0, jnp.asarray(True), jnp.zeros((), jnp.int32),
+         WorkCounters.zeros()))
+    return CCResult(pi, work)
+
+
+# ---------------------------------------------------------------------------
+# Variant: + Multi-Jump (fused compress, device-resident)
+# ---------------------------------------------------------------------------
+
+def _cc_multijump(edges: jnp.ndarray, num_nodes: int) -> CCResult:
+    e = edges.shape[0]
+
+    def outer_cond(state):
+        _, changed, rounds, _ = state
+        return jnp.logical_and(changed, rounds < _MAX_ROUNDS)
+
+    def outer_body(state):
+        pi, _, rounds, w = state
+        new_pi = hook_edges(pi, edges, lift_steps=0)
+        hook_changed = jnp.any(new_pi != pi)
+        # one hook kernel + ONE fused Multi-Jump kernel => 2 syncs/round
+        w = w.add(hook_ops=e, hook_rounds=1, sync_rounds=2)
+        new_pi, w = compress(new_pi, w, count_syncs=False)
+        return new_pi, hook_changed, rounds + 1, w
+
+    pi0 = jnp.arange(num_nodes, dtype=jnp.int32)
+    pi, _, _, work = jax.lax.while_loop(
+        outer_cond, outer_body,
+        (pi0, jnp.asarray(True), jnp.zeros((), jnp.int32),
+         WorkCounters.zeros()))
+    return CCResult(pi, work)
+
+
+# ---------------------------------------------------------------------------
+# Variant: + Atomic-Hook (root-chasing hook, zero host round-trips)
+# ---------------------------------------------------------------------------
+
+def _cc_atomic_hook(edges: jnp.ndarray, num_nodes: int,
+                    lift_steps: int = 2) -> CCResult:
+    e = edges.shape[0]
+
+    def cond(state):
+        pi, done, rounds, _ = state
+        return jnp.logical_and(~done, rounds < _MAX_ROUNDS)
+
+    def body(state):
+        pi, _, rounds, w = state
+        pi = hook_edges(pi, edges, lift_steps=lift_steps)
+        w = w.add(hook_ops=e * (1 + lift_steps), hook_rounds=1)
+        pi, w = compress(pi, w)
+        done = edges_consistent(pi, edges)
+        return pi, done, rounds + 1, w
+
+    pi0 = jnp.arange(num_nodes, dtype=jnp.int32)
+    pi, _, _, work = jax.lax.while_loop(
+        cond, body,
+        (pi0, jnp.asarray(False), jnp.zeros((), jnp.int32),
+         WorkCounters.zeros()))
+    # the whole program is one fused device loop: a single host sync
+    work = work.add(sync_rounds=1)
+    return CCResult(pi, work)
+
+
+# ---------------------------------------------------------------------------
+# Variant: adaptive segmentation (Fig. 4) — the paper's contribution
+# ---------------------------------------------------------------------------
+
+def _cc_adaptive(edges: jnp.ndarray, num_nodes: int,
+                 plan: SegmentationPlan, lift_steps: int = 2) -> CCResult:
+    """Fig. 4: for each of the s = 2|E|/|V| segments, Atomic-Hook the
+    segment then fully compress. A trailing consistency loop covers hook
+    candidates dropped by deterministic min-selection (the CAS retry loop
+    of the GPU version resolves those in-kernel; see DESIGN.md §2) —
+    typically 0–1 extra rounds, visible in the work counters.
+    """
+    pad = plan.padded_edges - edges.shape[0]
+    if pad > 0:
+        edges = jnp.concatenate(
+            [edges, jnp.zeros((pad, 2), edges.dtype)], axis=0)
+    segments = edges.reshape(plan.num_segments, plan.segment_size, 2)
+
+    pi0 = jnp.arange(num_nodes, dtype=jnp.int32)
+
+    def seg_body(carry, seg):
+        pi, w = carry
+        pi = hook_edges(pi, seg, lift_steps=lift_steps)
+        w = w.add(hook_ops=plan.segment_size * (1 + lift_steps),
+                  hook_rounds=1)
+        pi, w = compress(pi, w)
+        return (pi, w), None
+
+    (pi, work), _ = jax.lax.scan(
+        seg_body, (pi0, WorkCounters.zeros()), segments)
+
+    # cleanup: re-hook full edge list until consistent (usually converged)
+    def cond(state):
+        pi, done, rounds, _ = state
+        return jnp.logical_and(~done, rounds < _MAX_ROUNDS)
+
+    def body(state):
+        pi, _, rounds, w = state
+        pi = hook_edges(pi, edges, lift_steps=lift_steps)
+        w = w.add(hook_ops=edges.shape[0] * (1 + lift_steps), hook_rounds=1)
+        pi, w = compress(pi, w)
+        done = edges_consistent(pi, edges)
+        return pi, done, rounds + 1, w
+
+    done0 = edges_consistent(pi, edges)
+    pi, _, _, work = jax.lax.while_loop(
+        cond, body, (pi, done0, jnp.zeros((), jnp.int32), work))
+    work = work.add(sync_rounds=1)   # one jit call end-to-end
+    return CCResult(pi, work)
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit, static_argnames=("num_nodes", "method", "num_segments",
+                              "lift_steps"))
+def _cc_jit(edges, *, num_nodes, method, num_segments, lift_steps):
+    if method == "soman":
+        return _cc_soman(edges, num_nodes)
+    if method == "multijump":
+        return _cc_multijump(edges, num_nodes)
+    if method == "atomic_hook":
+        return _cc_atomic_hook(edges, num_nodes, lift_steps)
+    if method == "adaptive":
+        plan = plan_segmentation(edges.shape[0], num_nodes, num_segments)
+        return _cc_adaptive(edges, num_nodes, plan, lift_steps)
+    if method == "labelprop":
+        from repro.core.labelprop import _cc_labelprop
+        return _cc_labelprop(edges, num_nodes)
+    raise ValueError(f"unknown method {method!r}; choose from {METHODS}")
+
+
+def connected_components(
+    edges,
+    num_nodes: int,
+    method: str = "adaptive",
+    *,
+    num_segments: int | None = None,
+    lift_steps: int = 2,
+) -> CCResult:
+    """Compute connected components.
+
+    Args:
+      edges: [E, 2] int array of undirected edges (one direction suffices;
+        self loops and duplicates are harmless).
+      num_nodes: |V| (static).
+      method: one of ``soman | multijump | atomic_hook | adaptive |
+        labelprop``.
+      num_segments: override the adaptive 2|E|/|V| heuristic (adaptive only).
+      lift_steps: bounded root-chase depth in the Atomic-Hook analogue.
+
+    Returns:
+      ``CCResult(labels, work)`` with canonical min-id labels.
+    """
+    edges = jnp.asarray(edges, jnp.int32).reshape(-1, 2)
+    if num_nodes <= 0:
+        return CCResult(jnp.zeros((0,), jnp.int32), WorkCounters.zeros())
+    if edges.shape[0] == 0:
+        return CCResult(jnp.arange(num_nodes, dtype=jnp.int32),
+                        WorkCounters.zeros())
+    return _cc_jit(edges, num_nodes=num_nodes, method=method,
+                   num_segments=num_segments, lift_steps=lift_steps)
+
+
+# ---------------------------------------------------------------------------
+# Pallas-kernel backend (TPU target; interpret-mode on CPU)
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit, static_argnames=("num_nodes", "num_segments", "lift_steps",
+                              "interpret"))
+def _cc_adaptive_pallas(edges, *, num_nodes, num_segments, lift_steps,
+                        interpret):
+    from repro.kernels.hook.ops import hook_edges_pallas
+    from repro.kernels.multi_jump.ops import full_compress
+
+    plan = plan_segmentation(edges.shape[0], num_nodes, num_segments)
+    pad = plan.padded_edges - edges.shape[0]
+    if pad > 0:
+        edges = jnp.concatenate(
+            [edges, jnp.zeros((pad, 2), edges.dtype)], axis=0)
+    segments = edges.reshape(plan.num_segments, plan.segment_size, 2)
+    tile = min(512, max(8, num_nodes))
+    etile = min(1024, plan.segment_size)
+
+    def seg_body(pi, seg):
+        pi = hook_edges_pallas(pi, seg, edge_tile=etile,
+                               lift_steps=lift_steps, interpret=interpret)
+        pi = full_compress(pi, tile=tile, interpret=interpret)
+        return pi, None
+
+    pi0 = jnp.arange(num_nodes, dtype=jnp.int32)
+    pi, _ = jax.lax.scan(seg_body, pi0, segments)
+
+    def cond(state):
+        pi, done, rounds = state
+        return jnp.logical_and(~done, rounds < _MAX_ROUNDS)
+
+    def body(state):
+        pi, _, rounds = state
+        pi = hook_edges_pallas(pi, edges, edge_tile=etile,
+                               lift_steps=lift_steps, interpret=interpret)
+        pi = full_compress(pi, tile=tile, interpret=interpret)
+        return pi, edges_consistent(pi, edges), rounds + 1
+
+    pi, _, _ = jax.lax.while_loop(
+        cond, body,
+        (pi, edges_consistent(pi, edges), jnp.zeros((), jnp.int32)))
+    return pi
+
+
+def connected_components_pallas(edges, num_nodes: int, *,
+                                num_segments: int | None = None,
+                                lift_steps: int = 2,
+                                interpret: bool | None = None) -> jnp.ndarray:
+    """Adaptive CC on the Pallas kernel backend (hook + multi_jump
+    kernels; DESIGN.md §2). Returns canonical min-id labels."""
+    from repro.kernels import default_interpret
+    interpret = default_interpret() if interpret is None else interpret
+    edges = jnp.asarray(edges, jnp.int32).reshape(-1, 2)
+    if num_nodes <= 0:
+        return jnp.zeros((0,), jnp.int32)
+    if edges.shape[0] == 0:
+        return jnp.arange(num_nodes, dtype=jnp.int32)
+    return _cc_adaptive_pallas(edges, num_nodes=num_nodes,
+                               num_segments=num_segments,
+                               lift_steps=lift_steps, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Host-driven execution (GPU-baseline control flow, for benchmarking)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _host_hook(pi, edges):
+    new = hook_edges(pi, edges, lift_steps=0)
+    return new, jnp.any(new != pi)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _host_jump(pi):
+    new = pi[pi]
+    return new, jnp.any(new != pi)
+
+
+@jax.jit
+def _host_compress(pi):
+    pi, w = compress(pi, WorkCounters.zeros())
+    return pi, w.jump_sweeps
+
+
+def connected_components_hostloop(
+    edges, num_nodes: int, method: str = "soman",
+) -> tuple[np.ndarray, dict]:
+    """Run the Soman baseline (or +multijump) with *host-side* control
+    flow — one ``device_get`` per convergence check, faithful to the GPU
+    baseline's CPU-GPU round trips. Used by the benchmarks to expose the
+    cost the paper's device-centric design removes.
+    """
+    edges = jnp.asarray(edges, jnp.int32).reshape(-1, 2)
+    pi = jnp.arange(num_nodes, dtype=jnp.int32)
+    syncs = 0
+    stats = {"hook_rounds": 0, "jump_sweeps": 0}
+    while True:
+        pi, hook_changed = _host_hook(pi, edges)
+        stats["hook_rounds"] += 1
+        syncs += 1
+        if method == "soman":
+            while True:
+                pi, jchanged = _host_jump(pi)
+                stats["jump_sweeps"] += 1
+                syncs += 1
+                if not bool(jchanged):          # device->host round trip
+                    break
+        else:  # multijump: one fused compress kernel, one sync
+            pi, sweeps = _host_compress(pi)
+            stats["jump_sweeps"] += int(sweeps)
+            syncs += 1
+        if not bool(hook_changed):              # device->host round trip
+            break
+    stats["sync_rounds"] = syncs
+    return np.asarray(pi), stats
+
+
+def num_components(labels) -> int:
+    return int(np.unique(np.asarray(labels)).size)

@@ -1,0 +1,2 @@
+from repro.graphs.format import Graph, build_csr
+from repro.graphs import generators

@@ -1,0 +1,27 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each subpackage ships three modules:
+  * ``<name>.py`` — the ``pl.pallas_call`` kernel with explicit BlockSpec
+    VMEM tiling (TPU is the target; validated under ``interpret=True``
+    on CPU);
+  * ``ops.py``    — the jit'd public wrapper;
+  * ``ref.py``    — the pure-jnp oracle the kernel is tested against.
+
+Kernel inventory (see DESIGN.md §2 for why these are the hot spots):
+  * multi_jump      — fused Compress: blocked pointer jumping with
+                      continuous write-back (the paper's Multi-Jump).
+  * hook            — deterministic Atomic-Hook analogue: edge-tile
+                      gather + high-low rule + scatter-min into the
+                      VMEM-resident parent workspace.
+  * segment_reduce  — segment sum/min/max over sorted ids (GNN message
+                      passing + the hook reduction share this primitive).
+  * embedding_bag   — gather + segment-sum (recsys hot path).
+  * flash_attention — blocked online-softmax attention with causal /
+                      sliding-window / logit-softcap variants (LM hot path).
+"""
+
+
+def default_interpret() -> bool:
+    """Pallas kernels run compiled on TPU, interpreted elsewhere."""
+    import jax
+    return jax.default_backend() != "tpu"

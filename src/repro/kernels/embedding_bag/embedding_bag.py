@@ -1,0 +1,54 @@
+"""EmbeddingBag Pallas kernel — the recsys lookup hot path.
+
+JAX has no native ``nn.EmbeddingBag``; this framework implements it as
+gather + segment reduction (DESIGN.md §3). The kernel tiles over *bags*:
+each grid step gathers the rows for a tile of bags and reduces them
+(sum / mean) into the output tile.
+
+Tiling: grid is 1-D over bag tiles. The table is passed whole (VMEM) —
+appropriate for the *per-shard* table slice after the 'model'-axis row
+sharding in ``repro.models.recsys`` (a 2^20-row table row-sharded 16
+ways is 4 MiB/shard at dim 16). An HBM+DMA variant is the documented
+path for unsharded 10^8-row tables.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _embedding_bag_kernel(table_ref, idx_ref, out_ref, combine: str):
+    table = table_ref[...]                       # [Vocab, D]
+    idx = idx_ref[...]                           # [Tb, bag]
+    rows = jnp.take(table, idx.reshape(-1), axis=0)
+    rows = rows.reshape(idx.shape[0], idx.shape[1], -1)
+    agg = rows.sum(axis=1)
+    if combine == "mean":
+        agg = agg / idx.shape[1]
+    out_ref[...] = agg.astype(out_ref.dtype)
+
+
+def embedding_bag_pallas(table: jnp.ndarray, indices: jnp.ndarray, *,
+                         combine: str = "sum", bag_tile: int = 256,
+                         interpret: bool = True) -> jnp.ndarray:
+    """table: [Vocab, D]; indices: [B, bag] int32 -> [B, D]."""
+    b, bag = indices.shape
+    vocab, d = table.shape
+    assert b % bag_tile == 0, f"B={b} must be a multiple of {bag_tile}"
+    assert combine in ("sum", "mean"), combine
+    grid = (b // bag_tile,)
+    kernel = functools.partial(_embedding_bag_kernel, combine=combine)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((vocab, d), lambda i: (0, 0)),
+            pl.BlockSpec((bag_tile, bag), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bag_tile, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),
+        interpret=interpret,
+    )(table, indices)

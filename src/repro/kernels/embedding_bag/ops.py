@@ -1,0 +1,30 @@
+"""Jit'd wrapper for embedding_bag."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.embedding_bag.embedding_bag import embedding_bag_pallas
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("combine", "bag_tile", "interpret"))
+def embedding_bag(table: jnp.ndarray, indices: jnp.ndarray, *,
+                  combine: str = "sum", bag_tile: int = 256,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """EmbeddingBag lookup: [Vocab,D] table, [B,bag] indices -> [B,D]."""
+    interpret = default_interpret() if interpret is None else interpret
+    b = indices.shape[0]
+    tile = min(bag_tile, b)
+    target = ((b + tile - 1) // tile) * tile
+    padded = indices
+    if target != b:
+        padded = jnp.concatenate(
+            [indices, jnp.zeros((target - b, indices.shape[1]),
+                                indices.dtype)], axis=0)
+    out = embedding_bag_pallas(table, padded, combine=combine,
+                               bag_tile=tile, interpret=interpret)
+    return out[:b]

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for embedding_bag."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_embedding_bag(table, indices, combine: str = "sum"):
+    rows = jnp.take(table, indices, axis=0)      # [B, bag, D]
+    agg = rows.sum(axis=1)
+    if combine == "mean":
+        agg = agg / indices.shape[1]
+    return agg

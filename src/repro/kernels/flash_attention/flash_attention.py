@@ -1,0 +1,118 @@
+"""Blocked online-softmax attention (FlashAttention-style) for TPU.
+
+Grid: (batch*heads, q_blocks, kv_blocks) — the kv dimension is the
+innermost (sequential) axis, so per-(bh, q-block) running statistics
+(m, l, acc) persist in VMEM scratch across kv steps and the output tile
+is emitted on the last step. MXU alignment: block sizes are multiples of
+128 on the matmul dims.
+
+Variants needed by the assigned architectures:
+  * ``causal``   — LM training/prefill masking,
+  * ``window``   — gemma2's local (sliding-window) layers,
+  * ``softcap``  — gemma2's logit soft-capping ``cap*tanh(s/cap)``.
+
+GQA is handled in ops.py by folding the q-head group into the batch dim.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  block_q: int, block_k: int, sm_scale: float,
+                  causal: bool, window: int, softcap: float):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr[...], _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr[...])
+        acc_scr[...] = jnp.zeros_like(acc_scr[...])
+
+    q_pos = iq * block_q + jax.lax.iota(jnp.int32, block_q)
+    k_pos = ik * block_k + jax.lax.iota(jnp.int32, block_k)
+
+    # block-level skip: fully-masked kv blocks do no work
+    relevant = jnp.asarray(True)
+    if causal:
+        relevant = (ik * block_k) <= (iq * block_q + block_q - 1)
+    if window > 0:
+        # q attends to k in (q - window, q]
+        first_q = iq * block_q
+        last_k = ik * block_k + block_k - 1
+        relevant = jnp.logical_and(relevant, last_k > first_q - window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)            # [Bq, d]
+        k = k_ref[0].astype(jnp.float32)            # [Bk, d]
+        v = v_ref[0].astype(jnp.float32)            # [Bk, d]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window > 0:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        # renormalize previous accumulator
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _emit():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)             # fully-masked rows -> 0
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           *, sm_scale: float, causal: bool = False,
+                           window: int = 0, softcap: float = 0.0,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = True) -> jnp.ndarray:
+    """q, k, v: [BH, S, d] -> [BH, S, d]."""
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    grid = (bh, sq // block_q, sk // block_k)
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, sm_scale=sm_scale,
+        causal=causal, window=window, softcap=softcap)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

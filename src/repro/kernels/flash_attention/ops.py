@@ -1,0 +1,63 @@
+"""Jit'd wrapper: GQA folding + padding + dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.flash_attention.flash_attention import (
+    flash_attention_pallas,
+)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "softcap", "block_q",
+                              "block_k", "interpret", "sm_scale"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    sm_scale: float | None = None, causal: bool = True,
+                    window: int = 0, softcap: float = 0.0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """Multi-head attention with GQA.
+
+    q: [B, Sq, Hq, d]; k, v: [B, Sk, Hkv, d]; Hq % Hkv == 0.
+    Returns [B, Sq, Hq, d].
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    b, sq, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = sm_scale if sm_scale is not None else d ** -0.5
+
+    # fold (B, Hkv, group) into the BH grid dim; kv repeats per group
+    qg = q.reshape(b, sq, hkv, group, d)
+    qg = jnp.moveaxis(qg, (2, 3), (1, 2)).reshape(b * hkv * group, sq, d)
+    kg = jnp.repeat(jnp.moveaxis(k, 2, 1), group, axis=1)
+    kg = kg.reshape(b * hkv * group, sk, d)
+    vg = jnp.repeat(jnp.moveaxis(v, 2, 1), group, axis=1)
+    vg = vg.reshape(b * hkv * group, sk, d)
+
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    pad_q = (-sq) % bq
+    pad_k = (-sk) % bk
+    if pad_q:
+        qg = jnp.pad(qg, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        # padded kv positions are masked out by the causal/window mask only
+        # if they exceed every q position; mask explicitly via window? --
+        # simplest safe route: pad k with -inf-producing zeros and rely on
+        # q_pos >= k_pos failing only for causal. For non-causal we forbid
+        # padding instead.
+        assert causal, "non-causal flash path requires Sk % block_k == 0"
+        kg = jnp.pad(kg, ((0, 0), (0, pad_k), (0, 0)))
+        vg = jnp.pad(vg, ((0, 0), (0, pad_k), (0, 0)))
+    out = flash_attention_pallas(
+        qg, kg, vg, sm_scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=bq, block_k=bk, interpret=interpret)
+    out = out[:, :sq]
+    out = out.reshape(b, hkv, group, sq, d)
+    out = jnp.moveaxis(out, (1, 2), (2, 3)).reshape(b, sq, hq, d)
+    return out

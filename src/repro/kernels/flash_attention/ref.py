@@ -1,0 +1,28 @@
+"""Pure-jnp oracle: dense softmax attention with the same variants."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_attention(q, k, v, *, sm_scale: float, causal: bool = False,
+                  window: int = 0, softcap: float = 0.0):
+    """q, k, v: [BH, Sq, d] / [BH, Sk, d] -> [BH, Sq, d]."""
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqd,bkd->bqk", qf, kf) * sm_scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    sq, sk = s.shape[-2], s.shape[-1]
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    denom = p.sum(axis=-1, keepdims=True)
+    p = p / jnp.where(denom == 0, 1.0, denom)
+    return jnp.einsum("bqk,bkd->bqd", p, vf).astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.hook.ops import hook_edges_pallas

@@ -1,0 +1,64 @@
+"""Atomic-Hook Pallas kernel — deterministic TPU analogue of the paper's
+CAS root-chase hook.
+
+GPU version: per edge, walk up from H = max(pi(u), pi(v)) until a root is
+acquired with ``CAS(pi(H), H, L)``; failed CAS retries with (pi(H), L).
+
+TPU mapping (DESIGN.md §2): per *edge tile*, gather both endpoint parents,
+perform a bounded vectorized lift (the root chase), apply the high-to-low
+rule, and merge candidates into the VMEM-resident parent workspace with a
+functional scatter-min — the race-free winner selection CAS provides
+nondeterministically. The 1-D grid over edge tiles runs sequentially, so
+later tiles observe earlier tiles' hooks (the same memory-visibility
+benefit the GPU kernel gets from global-memory atomics).
+
+On real TPU hardware Mosaic lowers the 1-D ``.at[].min`` scatter via a
+sort+segment-reduce; the sorted-edge fast path (pre-sorting edge tiles by
+H at partition time) is exposed through ``repro.kernels.segment_reduce``
+and evaluated in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hook_kernel(edges_ref, pi_in_ref, pi_ref, *, lift_steps: int):
+    del pi_in_ref                          # aliased with pi_ref
+    pi = pi_ref[...]
+    u = edges_ref[:, 0]
+    v = edges_ref[:, 1]
+    pu = jnp.take(pi, u, axis=0)
+    pv = jnp.take(pi, v, axis=0)
+    for _ in range(lift_steps):            # bounded vectorized root chase
+        pu = jnp.take(pi, pu, axis=0)
+        pv = jnp.take(pi, pv, axis=0)
+    hi = jnp.maximum(pu, pv)
+    lo = jnp.minimum(pu, pv)
+    pi_ref[...] = pi.at[hi].min(lo)        # deterministic CAS analogue
+
+
+def hook_pallas(pi: jnp.ndarray, edges: jnp.ndarray, *,
+                edge_tile: int = 1024, lift_steps: int = 2,
+                interpret: bool = True) -> jnp.ndarray:
+    """Hook every edge into π (edge-tiled; π VMEM-resident throughout)."""
+    e = edges.shape[0]
+    v = pi.shape[0]
+    assert e % edge_tile == 0, f"|E|={e} must be a multiple of {edge_tile}"
+    grid = (e // edge_tile,)
+    kernel = functools.partial(_hook_kernel, lift_steps=lift_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((edge_tile, 2), lambda i: (i, 0)),
+            pl.BlockSpec((v,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((v,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((v,), pi.dtype),
+        input_output_aliases={1: 0},       # π is read-modify-write
+        interpret=interpret,
+    )(edges, pi)

@@ -1,0 +1,26 @@
+"""Jit'd wrapper for the hook kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.hook.hook import hook_pallas
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("edge_tile", "lift_steps", "interpret"))
+def hook_edges_pallas(pi: jnp.ndarray, edges: jnp.ndarray, *,
+                      edge_tile: int = 1024, lift_steps: int = 2,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """Hook all ``edges`` into π (pads the edge list with (0,0) no-ops)."""
+    interpret = default_interpret() if interpret is None else interpret
+    e = edges.shape[0]
+    target = ((e + edge_tile - 1) // edge_tile) * edge_tile
+    if target != e:
+        edges = jnp.concatenate(
+            [edges, jnp.zeros((target - e, 2), edges.dtype)], axis=0)
+    return hook_pallas(pi, edges, edge_tile=edge_tile,
+                       lift_steps=lift_steps, interpret=interpret)

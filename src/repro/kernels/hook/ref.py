@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the hook kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def ref_hook_round(pi: jnp.ndarray, edges: jnp.ndarray,
+                   lift_steps: int = 0) -> jnp.ndarray:
+    """One functional hook round (all edges see the same π snapshot)."""
+    u, v = edges[:, 0], edges[:, 1]
+    pu, pv = pi[u], pi[v]
+    for _ in range(lift_steps):
+        pu, pv = pi[pu], pi[pv]
+    hi = jnp.maximum(pu, pv)
+    lo = jnp.minimum(pu, pv)
+    return pi.at[hi].min(lo)
+
+
+def ref_hook_tiled(pi, edges, edge_tile: int, lift_steps: int = 0
+                   ) -> jnp.ndarray:
+    """Bit-exact oracle of the kernel's *sequential-tile* semantics:
+    tile t observes the hooks of tiles < t."""
+    pi = np.asarray(pi).copy()
+    edges = np.asarray(edges)
+    for start in range(0, edges.shape[0], edge_tile):
+        tile = edges[start:start + edge_tile]
+        pu = pi[tile[:, 0]]
+        pv = pi[tile[:, 1]]
+        for _ in range(lift_steps):
+            pu, pv = pi[pu], pi[pv]
+        hi = np.maximum(pu, pv)
+        lo = np.minimum(pu, pv)
+        np.minimum.at(pi, hi, lo)
+    return jnp.asarray(pi)

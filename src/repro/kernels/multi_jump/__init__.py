@@ -1,0 +1,1 @@
+from repro.kernels.multi_jump.ops import multi_jump, full_compress

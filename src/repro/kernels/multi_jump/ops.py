@@ -1,0 +1,56 @@
+"""Jit'd wrappers around the Multi-Jump kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.multi_jump.multi_jump import multi_jump_pallas
+
+_MAX_SWEEPS = 64
+
+
+def _pad_to(pi: jnp.ndarray, tile: int) -> tuple[jnp.ndarray, int]:
+    v = pi.shape[0]
+    target = ((v + tile - 1) // tile) * tile
+    if target != v:
+        # padded entries are self-roots: chase no-ops
+        pad = jnp.arange(v, target, dtype=pi.dtype)
+        pi = jnp.concatenate([pi, pad])
+    return pi, v
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "rounds", "interpret"))
+def multi_jump(pi: jnp.ndarray, *, tile: int = 512, rounds: int = 2,
+               interpret: bool | None = None) -> jnp.ndarray:
+    """One blocked Multi-Jump sweep (kernel-accelerated)."""
+    interpret = default_interpret() if interpret is None else interpret
+    padded, v = _pad_to(pi, tile)
+    out = multi_jump_pallas(padded, tile=tile, rounds=rounds,
+                            interpret=interpret)
+    return out[:v]
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "rounds", "interpret"))
+def full_compress(pi: jnp.ndarray, *, tile: int = 512, rounds: int = 2,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """Compress to stars: repeat kernel sweeps until fixed point, entirely
+    on device (lax.while_loop around the pallas sweep)."""
+    interpret = default_interpret() if interpret is None else interpret
+    padded, v = _pad_to(pi, tile)
+
+    def cond(state):
+        _, changed, sweeps = state
+        return jnp.logical_and(changed, sweeps < _MAX_SWEEPS)
+
+    def body(state):
+        p, _, sweeps = state
+        nxt = multi_jump_pallas(p, tile=tile, rounds=rounds,
+                                interpret=interpret)
+        return nxt, jnp.any(nxt != p), sweeps + 1
+
+    padded, _, _ = jax.lax.while_loop(
+        cond, body, (padded, jnp.asarray(True), jnp.zeros((), jnp.int32)))
+    return padded[:v]

@@ -1,0 +1,40 @@
+"""Jit'd wrapper for segment_reduce (pads, masks, dispatches)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.segment_reduce.segment_reduce import (
+    reduce_identity,
+    segment_reduce_pallas,
+)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_segments", "op", "tile", "interpret"))
+def segment_reduce(data: jnp.ndarray, segment_ids: jnp.ndarray,
+                   num_segments: int, *, op: str = "sum", tile: int = 1024,
+                   interpret: bool | None = None) -> jnp.ndarray:
+    """Kernel-backed segment reduce. ``data`` [N, D] or [N]; ids [N]."""
+    interpret = default_interpret() if interpret is None else interpret
+    squeeze = data.ndim == 1
+    if squeeze:
+        data = data[:, None]
+    n = data.shape[0]
+    target = ((n + tile - 1) // tile) * tile
+    if target != n:
+        # pad with identity elements routed to segment 0
+        pad_val = jnp.full((target - n, data.shape[1]),
+                           reduce_identity(op, data.dtype))
+        data = jnp.concatenate([data, pad_val], axis=0)
+        segment_ids = jnp.concatenate(
+            [segment_ids,
+             jnp.zeros((target - n,), segment_ids.dtype)], axis=0)
+    out = segment_reduce_pallas(data, segment_ids, num_segments, op=op,
+                                tile=tile, interpret=interpret)
+    if squeeze:
+        out = out[:, 0]
+    return out

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for segment_reduce."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_segment_reduce(data, segment_ids, num_segments: int,
+                       op: str = "sum"):
+    if op == "sum":
+        return jax.ops.segment_sum(data, segment_ids,
+                                   num_segments=num_segments)
+    if op == "min":
+        return jax.ops.segment_min(data, segment_ids,
+                                   num_segments=num_segments)
+    if op == "max":
+        return jax.ops.segment_max(data, segment_ids,
+                                   num_segments=num_segments)
+    raise ValueError(op)

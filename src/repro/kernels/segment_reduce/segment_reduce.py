@@ -1,0 +1,72 @@
+"""Segment-reduce Pallas kernel (sum / min / max) over int32 segment ids.
+
+This is the shared primitive behind GNN message passing (scatter of edge
+messages into destination nodes), the recsys embedding bag, and the
+sorted-edge fast path of the hook reduction. JAX has no CSR SpMM on TPU;
+``gather -> segment_reduce`` IS the message-passing implementation in
+this framework (see DESIGN.md §3).
+
+Tiling: 1-D sequential grid over message tiles; the (S, D) output
+accumulator stays VMEM-resident across grid steps (initialized at step 0,
+functional scatter-reduce per tile). S·D·4 bytes must fit VMEM alongside
+one (T, D) tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+def reduce_identity(op: str, dtype) -> jnp.ndarray:
+    """Identity element for the reduction, dtype-aware (int or float)."""
+    if op == "sum":
+        return jnp.zeros((), dtype)
+    big = (jnp.asarray(jnp.inf, dtype)
+           if jnp.issubdtype(dtype, jnp.floating)
+           else jnp.asarray(jnp.iinfo(dtype).max, dtype))
+    return big if op == "min" else -big
+
+
+def _segment_reduce_kernel(data_ref, ids_ref, out_ref, op: str):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(
+            out_ref[...], reduce_identity(op, out_ref.dtype))
+
+    vals = data_ref[...]
+    ids = ids_ref[...]
+    acc = out_ref[...]
+    if op == "sum":
+        acc = acc.at[ids].add(vals)
+    elif op == "min":
+        acc = acc.at[ids].min(vals)
+    else:
+        acc = acc.at[ids].max(vals)
+    out_ref[...] = acc
+
+
+def segment_reduce_pallas(data: jnp.ndarray, segment_ids: jnp.ndarray,
+                          num_segments: int, *, op: str = "sum",
+                          tile: int = 1024, interpret: bool = True
+                          ) -> jnp.ndarray:
+    """data: [N, D]; segment_ids: [N] int32 (< num_segments); -> [S, D]."""
+    n, d = data.shape
+    assert n % tile == 0, f"N={n} must be a multiple of tile={tile}"
+    assert op in ("sum", "min", "max"), op
+    grid = (n // tile,)
+    kernel = functools.partial(_segment_reduce_kernel, op=op)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((num_segments, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_segments, d), data.dtype),
+        interpret=interpret,
+    )(data, segment_ids)

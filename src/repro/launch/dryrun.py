@@ -1,0 +1,158 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first
+# init. Only the dry-run sees 512 placeholder devices; tests and
+# benchmarks see the real single CPU device.
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+cell on the production mesh, print memory/cost analysis, and append the
+roofline record to a JSONL results file.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2.5-32b --shape train_4k
+  python -m repro.launch.dryrun --arch all                 # every cell
+  python -m repro.launch.dryrun --arch all --multi-pod     # 2×16×16
+  python -m repro.launch.dryrun --arch cc-adaptive --shape usa-osm
+
+Each cell runs ``jit(step).lower(...).compile()`` — a sharding mismatch,
+compile-time OOM, or unsupported collective is a BUG in the framework
+and fails the run. Results: benchmarks/results/dryrun_<mesh>.jsonl.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             out_path: str | None = None, verbose: bool = True) -> dict:
+    import jax  # deferred: after XLA_FLAGS
+    from repro.configs import get_arch
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell, lower_cell
+    from repro.roofline import analysis as RA
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.perf_counter()
+    cell = build_cell(arch, shape, mesh, multi_pod=multi_pod)
+    lowered = lower_cell(cell, mesh)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    model_flops = _model_flops(arch, shape)
+    text = compiled.as_text()
+    roof = RA.analyze(compiled, arch=arch, shape=shape, chips=chips,
+                      model_flops=model_flops, hlo_text=text)
+    mem = RA.memory_summary(compiled)
+    rec = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips, "kind": cell.kind,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "roofline": roof.as_dict(),
+    }
+    if verbose:
+        print(f"[dryrun] {arch} × {shape} on {rec['mesh']}: OK "
+              f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s)")
+        print(f"  memory/chip: {mem.get('total_gib', '?')} GiB "
+              f"(args {mem.get('argument_size_in_bytes', 0)/2**30:.2f} + "
+              f"temp {mem.get('temp_size_in_bytes', 0)/2**30:.2f})")
+        print(f"  roofline: compute {roof.t_compute*1e3:.2f} ms | "
+              f"memory {roof.t_memory*1e3:.2f} ms | "
+              f"collective {roof.t_collective*1e3:.2f} ms "
+              f"-> {roof.bottleneck}-bound")
+    if out_path:
+        with open(out_path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+    return rec
+
+
+def _model_flops(arch: str, shape: str) -> float:
+    """Analytic MODEL_FLOPS for the cell (global, per step)."""
+    from repro.configs import get_arch
+    if arch == "cc-adaptive":
+        return 0.0
+    mod = get_arch(arch)
+    if mod.FAMILY == "lm":
+        from repro.models.transformer import model_flops_per_token
+        from repro.configs.lm_common import SHAPE_DEFS
+        cfg = mod.make_config()
+        d = SHAPE_DEFS[shape]
+        f_tok = model_flops_per_token(cfg)
+        if d["kind"] == "train":
+            return f_tok * d["batch"] * d["seq"]
+        if d["kind"] == "prefill":
+            return f_tok / 3.0 * d["batch"] * d["seq"]   # fwd only: 2N
+        return f_tok / 3.0 * d["batch"]                  # one token
+    if mod.FAMILY == "recsys":
+        import math
+        from repro.models import recsys as R
+        cfg = mod.make_config()
+        d = mod.SHAPE_DEFS[shape]
+        dense_params = R.param_count(cfg) - cfg.total_rows * cfg.embed_dim
+        mult = 6.0 if mod.step_kind(shape) == "train" else 2.0
+        return mult * dense_params * d["batch"]
+    return 0.0       # GNN: recorded via HLO flops only
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True,
+                    help="arch id | 'all' | 'cc-adaptive'")
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import ARCH_IDS, all_cells, get_arch
+    from repro.configs import cc_graphs
+
+    if args.arch == "all":
+        cells = [(a, s, r) for a, s, r in all_cells()]
+        cells += [("cc-adaptive", s, None) for s in cc_graphs.SHAPES]
+    elif args.arch == "cc-adaptive":
+        shapes = [args.shape] if args.shape else list(cc_graphs.SHAPES)
+        cells = [("cc-adaptive", s, None) for s in shapes]
+    else:
+        mod = get_arch(args.arch)
+        shapes = [args.shape] if args.shape else list(mod.SHAPES)
+        cells = [(args.arch, s, mod.skip_reason(s)) for s in shapes]
+
+    done = set()
+    if args.skip_existing and args.out:
+        try:
+            with open(args.out) as f:
+                for line in f:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+        except FileNotFoundError:
+            pass
+
+    mesh_name = "2x16x16" if args.multi_pod else "16x16"
+    failures = []
+    for arch, shape, skip in cells:
+        if skip:
+            print(f"[dryrun] SKIP {arch} × {shape}: {skip}")
+            continue
+        if (arch, shape, mesh_name) in done:
+            print(f"[dryrun] cached {arch} × {shape}")
+            continue
+        try:
+            run_cell(arch, shape, args.multi_pod, out_path=args.out)
+        except Exception as e:   # noqa: BLE001
+            traceback.print_exc()
+            failures.append((arch, shape, repr(e)))
+    if failures:
+        print("FAILURES:", failures)
+        sys.exit(1)
+    print("[dryrun] all cells passed")
+
+
+if __name__ == "__main__":
+    main()

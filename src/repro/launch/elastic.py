@@ -1,0 +1,74 @@
+"""Elastic scaling: restore any checkpoint onto any mesh.
+
+Checkpoints are mesh-agnostic (full arrays + manifest; train/checkpoint
+.py), so rescaling = ``restore(..., sharding_tree=shardings_for(new
+mesh))``. This module provides the launcher-side pieces:
+
+  * ``reshard_plan`` — given a TrainState structure and a target mesh,
+    build the NamedSharding tree (params/moments share the model's
+    param_spec; step replicated);
+  * ``rescale`` — restore a checkpoint under a new mesh/pod count;
+  * ``ElasticController`` — decides when to rescale: consumes the step
+    watchdog's slow-step events and a healthy-host count (in a real
+    deployment, fed by the cluster manager; here injected by tests) and
+    emits the new data-parallel width.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.train import checkpoint as ckpt_lib
+
+
+def reshard_plan(state_struct, mesh: Mesh, param_spec_tree):
+    def named(spec):
+        return NamedSharding(mesh, spec)
+
+    opt_spec = {k: jax.tree.map(named, param_spec_tree)
+                for k in state_struct["opt"]}
+    return {
+        "params": jax.tree.map(named, param_spec_tree),
+        "opt": opt_spec,
+        "step": named(P()),
+    }
+
+
+def rescale(ckpt_dir: str, state_struct, mesh: Mesh, param_spec_tree,
+            step: Optional[int] = None):
+    """Restore the newest (or given) checkpoint onto ``mesh`` — the
+    elastic-rescale path: a checkpoint taken on 512 chips restores onto
+    256 (or 1 CPU device) unchanged."""
+    plan = reshard_plan(state_struct, mesh, param_spec_tree)
+    return ckpt_lib.restore(ckpt_dir, like=state_struct, step=step,
+                            sharding_tree=plan)
+
+
+@dataclasses.dataclass
+class ElasticController:
+    """Policy: drop to the largest power-of-two healthy data-parallel
+    width; rescale up again when hosts return. Hysteresis via
+    ``min_steps_between`` so transient stragglers don't thrash."""
+
+    dp_width: int
+    min_steps_between: int = 100
+    _last_change: int = -10**9
+
+    def decide(self, step: int, healthy_hosts: int,
+               slow_streak: int = 0) -> Optional[int]:
+        """Returns a new dp width, or None to keep the current one."""
+        if step - self._last_change < self.min_steps_between:
+            return None
+        target = 1
+        while target * 2 <= healthy_hosts:
+            target *= 2
+        if slow_streak >= 3 and target >= 2:
+            target //= 2          # a persistent straggler: shed a host
+        if target != self.dp_width and target >= 1:
+            self._last_change = step
+            self.dp_width = target
+            return target
+        return None

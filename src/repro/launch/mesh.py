@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (tests see 1 CPU device; only dryrun.py forces
+512 host devices via XLA_FLAGS before any jax import).
+
+Axes:
+  * ``pod``   — inter-pod data parallelism (2 pods in the multi-pod
+                dry-run; scaling to N pods is this one tuple).
+  * ``data``  — intra-pod data parallelism / FSDP shard axis.
+  * ``model`` — tensor/expert parallelism.
+
+All shardings in the framework are written against axis *names*; the
+``fsdp_axes`` helper returns the data-parallel axis group for either
+mesh so model code never branches on pod count.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def fsdp_axes(multi_pod: bool = False):
+    """The axis group batch/FSDP dims shard over."""
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def all_axes(multi_pod: bool = False):
+    return ("pod", "data", "model") if multi_pod else ("data", "model")
+
+
+def make_cpu_mesh(n: int = 1, axis: str = "data"):
+    """Single-host test mesh over whatever devices exist."""
+    devs = jax.devices()[:n]
+    return jax.sharding.Mesh(devs, (axis,))

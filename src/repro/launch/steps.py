@@ -1,0 +1,386 @@
+"""Per-(arch × shape) step builders: the functions the dry-run lowers
+and the launcher runs.
+
+``build_cell(arch_id, shape, mesh, multi_pod)`` returns a ``Cell`` with
+the step callable, example ShapeDtypeStruct arguments, and the
+NamedSharding trees for inputs — everything ``jax.jit(...).lower()``
+needs. The same builders back the real training launcher (train.py) so
+the dry-run lowers EXACTLY what would run on hardware.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.launch.mesh import all_axes, fsdp_axes
+from repro.models.sharding import logical_axes
+from repro.train import train_state
+from repro.train.optimizer import AdamWConfig, adamw
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str
+    step: Callable                 # the function to lower
+    args: tuple                    # ShapeDtypeStruct pytrees
+    in_shardings: tuple            # NamedSharding pytrees (same structure)
+    donate: tuple = ()
+    logical: dict = dataclasses.field(default_factory=dict)
+
+
+def _named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _model_api(arch_id: str, shape: str):
+    """(model module, config) for an (arch, shape) cell."""
+    mod = get_arch(arch_id)
+    if mod.FAMILY == "lm":
+        from repro.models import transformer as M
+        return M, mod.make_config()
+    if mod.FAMILY == "recsys":
+        from repro.models import recsys as M
+        return M, mod.make_config()
+    # gnn: config depends on the shape (feature dims / classes)
+    if arch_id == "nequip":
+        from repro.models.gnn import nequip as M
+    elif arch_id == "gatedgcn":
+        from repro.models.gnn import gatedgcn as M
+    elif arch_id == "graphsage-reddit":
+        from repro.models.gnn import graphsage as M
+    elif arch_id == "gin-tu":
+        from repro.models.gnn import gin as M
+    else:
+        raise KeyError(arch_id)
+    return M, mod.make_config(shape)
+
+
+def _state_structs(M, cfg, opt):
+    """ShapeDtypeStruct TrainState (no allocation)."""
+    def build():
+        params = M.init(jax.random.PRNGKey(0), cfg)
+        return train_state.create(params, opt)
+    return jax.eval_shape(build)
+
+
+def _state_pspecs(M, cfg, state_struct, fsdp, tp="model"):
+    pspec = M.param_spec(cfg, fsdp, tp)
+    opt_spec = {k: pspec for k in state_struct["opt"]}
+    return {"params": pspec, "opt": opt_spec, "step": P()}
+
+
+def _moment_dtype(arch_id):
+    mod = get_arch(arch_id)
+    return getattr(mod, "MOMENT_DTYPE", None)
+
+
+# --------------------------------------------------------------------------
+# LM cache sharding
+# --------------------------------------------------------------------------
+
+def _cache_pspec(cfg, cache_struct, fsdp, mesh, tp="model"):
+    """PartitionSpec tree for an LM KV cache: batch (slot) dim over the
+    data axes, sequence dim over 'model' (kv-head counts sit below the
+    16-way tensor axis, so the seq dim is the shardable bulk — a 32k×128
+    qwen cache is 17 GB/chip batch-only but 1.1 GB batch×seq). Dims that
+    don't divide their axes replicate (batch=1 long-context)."""
+    import math
+    fs = fsdp if isinstance(fsdp, tuple) else (fsdp,)
+    n_fs = math.prod(mesh.shape[a] for a in fs)
+    n_tp = mesh.shape[tp]
+
+    def leaf_spec(leaf):
+        nd = len(leaf.shape)
+        if nd == 2:                      # pos arrays [B, S]
+            b_ax = fs if leaf.shape[0] % n_fs == 0 else None
+            s_ax = tp if leaf.shape[1] % n_tp == 0 else None
+            return P(b_ax, s_ax)
+        # layer-stacked leaves [L, B, S, ...]
+        b_ax = fs if leaf.shape[1] % n_fs == 0 else None
+        s_ax = tp if leaf.shape[2] % n_tp == 0 else None
+        return P(None, b_ax, s_ax, *(None,) * (nd - 3))
+
+    return jax.tree.map(leaf_spec, cache_struct)
+
+
+# --------------------------------------------------------------------------
+# Family builders
+# --------------------------------------------------------------------------
+
+def _build_lm(arch_id, shape, mesh, fsdp) -> Cell:
+    mod = get_arch(arch_id)
+    M, cfg = _model_api(arch_id, shape)
+    kind = mod.step_kind(shape)
+    specs = mod.input_specs(shape)
+    fs = fsdp
+
+    if kind == "train":
+        opt = adamw(AdamWConfig(lr=3e-4, moment_dtype=_moment_dtype(
+            arch_id)))
+        state_struct = _state_structs(M, cfg, opt)
+        state_spec = _state_pspecs(M, cfg, state_struct, fs)
+        loss = functools.partial(_lm_loss, M=M, cfg=cfg)
+        # gradient accumulation keeps live activations ≈ 4 seq/chip
+        # per microbatch (16 GB/chip HBM budget; DESIGN §6)
+        accum = getattr(get_arch(arch_id), "ACCUM_STEPS", 4)
+        # archs with bf16 moments (grok: 314B params vs 4 TB pod HBM)
+        # also accumulate grads in bf16
+        step = train_state.make_train_step(
+            loss, opt, accum_steps=accum,
+            accum_dtype=_moment_dtype(arch_id))
+        batch_spec = M.batch_spec(fs)
+        return Cell(arch_id, shape, kind, step,
+                    args=(state_struct, specs["batch"]),
+                    in_shardings=(_named(mesh, state_spec),
+                                  _named(mesh, batch_spec)),
+                    donate=(0,))
+
+    params_struct = jax.eval_shape(
+        lambda: M.init(jax.random.PRNGKey(0), cfg))
+    pspec = M.param_spec(cfg, fs)
+    if kind == "prefill":
+        def step(params, tokens, cache):
+            positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+            return M.forward_with_cache(params, tokens, cfg, cache,
+                                        positions)
+        cache_struct = specs["cache"]
+        cspec = _cache_pspec(cfg, cache_struct, fs, mesh)
+        return Cell(arch_id, shape, kind, step,
+                    args=(params_struct, specs["tokens"], cache_struct),
+                    in_shardings=(_named(mesh, pspec),
+                                  NamedSharding(mesh, P(fs, None)),
+                                  _named(mesh, cspec)),
+                    donate=(2,))
+
+    def step(params, tokens, positions, cache):
+        return M.forward_with_cache(params, tokens[:, None], cfg, cache,
+                                    positions[:, None])
+
+    import math
+    n_fs = math.prod(mesh.shape[a] for a in fs)
+    cache_struct = specs["cache"]
+    cspec = _cache_pspec(cfg, cache_struct, fs, mesh)
+    tok_spec = P(fs) if specs["tokens"].shape[0] % n_fs == 0 else P()
+    return Cell(arch_id, shape, kind, step,
+                args=(params_struct, specs["tokens"],
+                      specs["positions"], cache_struct),
+                in_shardings=(_named(mesh, pspec),
+                              NamedSharding(mesh, tok_spec),
+                              NamedSharding(mesh, tok_spec),
+                              _named(mesh, cspec)),
+                donate=(3,))
+
+
+def _lm_loss(params, batch, *, M, cfg):
+    return M.loss_fn(params, batch, cfg)
+
+
+def _build_gnn_shardmap(arch_id, shape, mesh, fsdp) -> Cell:
+    """NequIP under ``shard_map``: nodes AND edges sharded; each layer
+    all-gathers feats and reduce-scatters messages (one collective pair
+    per layer — GSPMD's per-chunk reshards cost 224 s collective time on
+    the ogb cell). Gradients psum uniformly: node-side compute runs on
+    node shards, edge-side on edge shards, so every shard's grad is a
+    partial sum. The same spatial-sharding design as the paper's
+    distributed CC (DESIGN.md §5)."""
+    import dataclasses as dc
+    from jax.experimental.shard_map import shard_map
+
+    mod = get_arch(arch_id)
+    M, cfg0 = _model_api(arch_id, shape)
+    cfg = dc.replace(cfg0, dist_axes=fsdp)
+    specs = mod.input_specs(shape)
+    opt = adamw(AdamWConfig(lr=1e-3))
+    state_struct = _state_structs(M, cfg0, opt)
+
+    batch_struct = specs["batch"]
+    n_nodes = batch_struct["positions"].shape[0]
+
+    def batch_pspec(key, leaf):
+        if key in ("src", "dst"):
+            return P(fsdp)                      # edge shards
+        if leaf.shape[0] == n_nodes:
+            return P(fsdp, *(None,) * (len(leaf.shape) - 1))
+        return P(*(None,) * len(leaf.shape))    # graph-level: replicate
+
+    bspec = {k: batch_pspec(k, v) for k, v in batch_struct.items()}
+
+    def local_grads(params, batch_local):
+        def loss(p):
+            return M.loss_fn(p, batch_local, cfg)
+        l, g = jax.value_and_grad(loss)(params)
+        g = jax.tree.map(lambda x: jax.lax.psum(x, fsdp), g)
+        return jax.lax.pmean(l, fsdp), g
+
+    grad_fn = shard_map(
+        local_grads, mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: P(), state_struct["params"]),
+                  bspec),
+        out_specs=(P(), jax.tree.map(lambda _: P(),
+                                     state_struct["params"])),
+        check_rep=False)
+
+    from repro.train.optimizer import apply_updates
+
+    def step(state, batch):
+        loss, grads = grad_fn(state["params"], batch)
+        updates, new_opt, gnorm = opt.update(
+            grads, state["opt"], state["params"], state["step"])
+        new_params = apply_updates(state["params"], updates)
+        return ({"params": new_params, "opt": new_opt,
+                 "step": state["step"] + 1},
+                {"loss": loss, "grad_norm": gnorm})
+
+    state_spec = jax.tree.map(lambda _: P(), state_struct)
+    return Cell(arch_id, shape, "train", step,
+                args=(state_struct, batch_struct),
+                in_shardings=(_named(mesh, state_spec),
+                              _named(mesh, bspec)),
+                donate=(0,))
+
+
+def _build_gnn(arch_id, shape, mesh, fsdp) -> Cell:
+    if arch_id == "nequip":
+        return _build_gnn_shardmap(arch_id, shape, mesh, fsdp)
+    mod = get_arch(arch_id)
+    M, cfg = _model_api(arch_id, shape)
+    specs = mod.input_specs(shape)
+    opt = adamw(AdamWConfig(lr=1e-3))
+    state_struct = _state_structs(M, cfg, opt)
+    state_spec = _state_pspecs(M, cfg, state_struct, fsdp)
+
+    def loss(params, batch):
+        return M.loss_fn(params, batch, cfg)
+
+    step = train_state.make_train_step(loss, opt)
+
+    import math
+    # GNNs don't use tensor parallelism (hidden dims are tiny) — fold
+    # the 'model' axis into the edge/node sharding for 256/512-way
+    # graph parallelism; fall back to fsdp-only, then replicated, when
+    # a dim doesn't divide (molecule-scale graphs).
+    wide = tuple(fsdp) + ("model",)
+    n_wide = math.prod(mesh.shape[a] for a in wide)
+    n_fsdp = math.prod(mesh.shape[a] for a in fsdp)
+
+    def batch_leaf_spec(leaf):
+        if leaf.shape[0] % n_wide == 0:
+            ax = wide
+        elif leaf.shape[0] % n_fsdp == 0:
+            ax = fsdp
+        else:
+            return P(*(None,) * len(leaf.shape))
+        if len(leaf.shape) == 2:
+            return P(ax, None)
+        return P(ax)
+
+    bspec = jax.tree.map(batch_leaf_spec, specs["batch"])
+    return Cell(arch_id, shape, "train", step,
+                args=(state_struct, specs["batch"]),
+                in_shardings=(_named(mesh, state_spec),
+                              _named(mesh, bspec)),
+                donate=(0,))
+
+
+def _build_recsys(arch_id, shape, mesh, fsdp) -> Cell:
+    mod = get_arch(arch_id)
+    M, cfg = _model_api(arch_id, shape)
+    kind = mod.step_kind(shape)
+    specs = mod.input_specs(shape)
+    bspec = M.batch_spec(fsdp)
+
+    if kind == "train":
+        opt = adamw(AdamWConfig(lr=1e-3))
+        state_struct = _state_structs(M, cfg, opt)
+        state_spec = _state_pspecs(M, cfg, state_struct, fsdp)
+
+        def loss(params, batch):
+            return M.loss_fn(params, batch, cfg)
+
+        step = train_state.make_train_step(loss, opt)
+        return Cell(arch_id, shape, kind, step,
+                    args=(state_struct, specs["batch"]),
+                    in_shardings=(_named(mesh, state_spec),
+                                  _named(mesh, bspec)),
+                    donate=(0,))
+
+    params_struct = jax.eval_shape(
+        lambda: M.init(jax.random.PRNGKey(0), cfg))
+    pspec = M.param_spec(cfg, fsdp)
+    if kind == "serve":
+        def step(params, batch):
+            return M.forward(params, batch, cfg)
+        return Cell(arch_id, shape, kind, step,
+                    args=(params_struct, specs["batch"]),
+                    in_shardings=(_named(mesh, pspec),
+                                  _named(mesh, bspec)))
+
+    # retrieval: 1 query × 1M candidates
+    def step(params, batch, candidate_ids):
+        return M.retrieval_scores(params, batch, cfg, candidate_ids)
+
+    bspec1 = jax.tree.map(lambda _: P(), bspec)   # batch=1: replicate
+    return Cell(arch_id, shape, kind, step,
+                args=(params_struct, specs["batch"],
+                      specs["candidate_ids"]),
+                in_shardings=(_named(mesh, pspec),
+                              _named(mesh, bspec1),
+                              NamedSharding(mesh, P(fsdp))))
+
+
+def _build_cc(shape, mesh, multi_pod) -> Cell:
+    """The paper's distributed CC on a Table I graph (full size)."""
+    from repro.configs import cc_graphs
+    from repro.core.distributed import make_distributed_cc
+    import numpy as np
+
+    specs = cc_graphs.input_specs(shape)
+    axes = all_axes(multi_pod)
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    e = specs["edges"].shape[0]
+    per = (e + n_shards - 1) // n_shards
+    padded = jax.ShapeDtypeStruct((per * n_shards, 2), jnp.int32)
+    fn = make_distributed_cc(mesh, specs["num_nodes"], per,
+                             axis_names=axes)
+    # make_distributed_cc returns a jitted callable; unwrap for lowering
+    return Cell("cc-adaptive", shape, "cc", fn, args=(padded,),
+                in_shardings=(NamedSharding(mesh, P(axes, None)),))
+
+
+def build_cell(arch_id: str, shape: str, mesh: Mesh,
+               multi_pod: bool = False) -> Cell:
+    fs = fsdp_axes(multi_pod)
+    logical = {"batch": fs, "tp": "model"}
+    if arch_id == "cc-adaptive":
+        cell = _build_cc(shape, mesh, multi_pod)
+    else:
+        mod = get_arch(arch_id)
+        if mod.FAMILY == "lm":
+            cell = _build_lm(arch_id, shape, mesh, fs)
+        elif mod.FAMILY == "gnn":
+            cell = _build_gnn(arch_id, shape, mesh, fs)
+        else:
+            cell = _build_recsys(arch_id, shape, mesh, fs)
+    cell.logical = logical
+    return cell
+
+
+def lower_cell(cell: Cell, mesh: Mesh):
+    """jit + lower (no compile) under the mesh, with the cell's logical
+    activation-sharding axes bound (models pin batch dims of large
+    intermediates through repro.models.sharding.constrain)."""
+    fn = cell.step
+    jitted = jax.jit(fn, in_shardings=cell.in_shardings,
+                     donate_argnums=cell.donate)
+    with mesh, logical_axes(cell.logical or None):
+        return jitted.lower(*cell.args)

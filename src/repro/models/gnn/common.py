@@ -1,0 +1,68 @@
+"""Shared GNN machinery: edge-index message passing via segment ops.
+
+JAX sparse is BCOO-only; message passing here is gather(src) ->
+transform -> ``jax.ops.segment_sum`` scatter(dst), exactly the pattern
+the ``segment_reduce`` Pallas kernel accelerates on TPU (DESIGN.md §3).
+All functions take a ``batch`` dict with static-shape arrays:
+
+  src, dst   int32 [E]      (message edges; padded edges may point at a
+                             dummy node masked via ``edge_mask``)
+  x          float  [V, d]  node features
+  edge_attr  float  [E, de] (optional)
+  y          labels (node-level [V] or graph-level [G])
+  graph_ids  int32 [V]      (block-diagonal batches; optional)
+  node_mask  bool [V]       (optional: valid nodes)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import normal_init
+
+
+def scatter_sum(values: jnp.ndarray, dst: jnp.ndarray,
+                num_nodes: int) -> jnp.ndarray:
+    return jax.ops.segment_sum(values, dst, num_segments=num_nodes)
+
+
+def scatter_mean(values: jnp.ndarray, dst: jnp.ndarray,
+                 num_nodes: int) -> jnp.ndarray:
+    s = scatter_sum(values, dst, num_nodes)
+    deg = jax.ops.segment_sum(jnp.ones((values.shape[0],), values.dtype),
+                              dst, num_segments=num_nodes)
+    return s / jnp.maximum(deg, 1.0)[:, None]
+
+
+def scatter_softmax(scores: jnp.ndarray, dst: jnp.ndarray,
+                    num_nodes: int) -> jnp.ndarray:
+    """Edge-softmax over incoming edges per destination node."""
+    mx = jax.ops.segment_max(scores, dst, num_segments=num_nodes)
+    ex = jnp.exp(scores - mx[dst])
+    den = jax.ops.segment_sum(ex, dst, num_segments=num_nodes)
+    return ex / jnp.maximum(den[dst], 1e-9)
+
+
+def linear_params(rng, din: int, dout: int, dtype=jnp.float32,
+                  bias: bool = True) -> dict:
+    r1, _ = jax.random.split(rng)
+    p = {"w": normal_init(r1, (din, dout), din ** -0.5, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((dout,), dtype)
+    return p
+
+
+def linear(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def nll_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+             mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

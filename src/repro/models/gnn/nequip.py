@@ -1,0 +1,400 @@
+"""NequIP — O(3)-equivariant interatomic potential (arXiv:2101.03164).
+
+Assigned config: n_layers=5, d_hidden=32 (channels per irrep),
+l_max=2, n_rbf=8, cutoff=5 Å, E(3)-tensor-product interactions.
+
+Irrep features are stored per degree l as ``[V, C, 2l+1]`` arrays (real
+spherical-harmonic basis). The interaction block is the NequIP
+convolution:
+
+    m_j->i = Σ_paths  R_path(r_ij) ⊗ ( h_j^{l1} ⊗ Y^{l2}(r̂_ij) )_{l3}
+
+where the ``l1 × l2 → l3`` couplings are contracted with **numerically
+computed Gaunt coefficients** ``G[l1,l2,l3][m1,m2,m3] = ∫ Y_{l1m1}
+Y_{l2m2} Y_{l3m3} dΩ`` evaluated *exactly* with Gauss–Legendre (θ) ×
+trapezoid (φ) quadrature — band-limited integrands, so the rule is exact,
+giving machine-precision equivariance. Gaunt coefficients differ from
+Clebsch–Gordan only by per-(l1,l2,l3) scalars, which the learnable radial
+weights absorb (the eSCN observation; see kernel_taxonomy §GNN).
+
+Selection rules keep 11 parity-even paths at l_max=2. The radial network
+is an MLP over a Bessel basis with the DimeNet polynomial cutoff
+envelope. Nonlinearity is the NequIP gate: SiLU on scalars,
+sigmoid(scalar gates) multiplying l>0 irreps. Energy is an invariant
+(l=0) readout summed per graph; forces are exact ``-∂E/∂positions``
+(autograd), which rotate equivariantly — both are property-tested.
+
+Message passing is edge-gather → ``segment_sum`` (JAX has no sparse CSR;
+this IS the system's message-passing substrate, shared with the
+``segment_reduce`` Pallas kernel on TPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.gnn import common as C
+
+
+# ==========================================================================
+# Real spherical harmonics (orthonormal, Condon–Shortley-free real basis)
+# ==========================================================================
+
+def _sh_np(xyz: np.ndarray, l_max: int) -> list[np.ndarray]:
+    """Real SH on unit vectors, numpy (used for quadrature tables)."""
+    x, y, z = xyz[..., 0], xyz[..., 1], xyz[..., 2]
+    out = [np.full(x.shape + (1,), 0.28209479177387814)]
+    if l_max >= 1:
+        c1 = 0.4886025119029199
+        out.append(np.stack([c1 * y, c1 * z, c1 * x], axis=-1))
+    if l_max >= 2:
+        c2a, c2b, c2c = 1.0925484305920792, 0.31539156525252005, \
+            0.5462742152960396
+        out.append(np.stack([
+            c2a * x * y, c2a * y * z, c2b * (3 * z * z - 1),
+            c2a * x * z, c2c * (x * x - y * y)], axis=-1))
+    return out[: l_max + 1]
+
+
+def spherical_harmonics(unit: jnp.ndarray, l_max: int) -> list[jnp.ndarray]:
+    """Real SH of unit vectors ``[E, 3]`` -> list of ``[E, 2l+1]``."""
+    x, y, z = unit[..., 0], unit[..., 1], unit[..., 2]
+    out = [jnp.full(x.shape + (1,), 0.28209479177387814, unit.dtype)]
+    if l_max >= 1:
+        c1 = 0.4886025119029199
+        out.append(jnp.stack([c1 * y, c1 * z, c1 * x], axis=-1))
+    if l_max >= 2:
+        c2a, c2b, c2c = 1.0925484305920792, 0.31539156525252005, \
+            0.5462742152960396
+        out.append(jnp.stack([
+            c2a * x * y, c2a * y * z, c2b * (3 * z * z - 1),
+            c2a * x * z, c2c * (x * x - y * y)], axis=-1))
+    return out[: l_max + 1]
+
+
+@functools.lru_cache(maxsize=None)
+def gaunt_tables(l_max: int) -> dict:
+    """Exact Gaunt tensors {(l1,l2,l3): [2l1+1, 2l2+1, 2l3+1]} for all
+    parity-even paths with l* <= l_max.
+
+    Quadrature: Gauss–Legendre in u=cosθ (degree ≤ 3·l_max polynomial →
+    n_u = 2·l_max+2 nodes exact) × uniform trapezoid in φ (trig degree ≤
+    3·l_max → n_φ = 4·l_max+4 exact).
+    """
+    n_u = 2 * l_max + 2
+    n_phi = 6 * l_max + 4
+    u, wu = np.polynomial.legendre.leggauss(n_u)
+    phi = 2 * np.pi * np.arange(n_phi) / n_phi
+    w_phi = 2 * np.pi / n_phi
+    uu, pp = np.meshgrid(u, phi, indexing="ij")          # [n_u, n_phi]
+    st = np.sqrt(1 - uu * uu)
+    xyz = np.stack([st * np.cos(pp), st * np.sin(pp), uu], axis=-1)
+    sh = _sh_np(xyz.reshape(-1, 3), l_max)               # list [N, 2l+1]
+    w = (wu[:, None] * w_phi * np.ones_like(pp)).reshape(-1)
+
+    tables = {}
+    for l1 in range(l_max + 1):
+        for l2 in range(l_max + 1):
+            for l3 in range(l_max + 1):
+                if not (abs(l1 - l2) <= l3 <= l1 + l2):
+                    continue
+                if (l1 + l2 + l3) % 2 != 0:
+                    continue  # parity-odd Gaunt integrals vanish
+                g = np.einsum("n,na,nb,nc->abc",
+                              w, sh[l1], sh[l2], sh[l3])
+                g[np.abs(g) < 1e-12] = 0.0
+                if np.abs(g).max() > 1e-10:
+                    tables[(l1, l2, l3)] = jnp.asarray(g, jnp.float32)
+    return tables
+
+
+def coupling_paths(l_max: int) -> list[tuple[int, int, int]]:
+    return sorted(gaunt_tables(l_max).keys())
+
+
+# ==========================================================================
+# Radial basis
+# ==========================================================================
+
+def bessel_basis(r: jnp.ndarray, n_rbf: int, cutoff: float) -> jnp.ndarray:
+    """sqrt(2/c)·sin(nπr/c)/r (n = 1..n_rbf), DimeNet polynomial envelope
+    (p=6). r: [E] -> [E, n_rbf]; r=0 (padding self-loops) is safe."""
+    r_safe = jnp.maximum(r, 1e-9)
+    n = jnp.arange(1, n_rbf + 1, dtype=r.dtype)
+    basis = jnp.sqrt(2.0 / cutoff) * jnp.sin(
+        n[None, :] * jnp.pi * r_safe[:, None] / cutoff) / r_safe[:, None]
+    # polynomial cutoff envelope: 1 at r=0, C^2-smooth 0 at r=cutoff
+    p = 6.0
+    d = jnp.clip(r / cutoff, 0.0, 1.0)
+    env = (1.0 - (p + 1) * (p + 2) / 2 * d ** p
+           + p * (p + 2) * d ** (p + 1)
+           - p * (p + 1) / 2 * d ** (p + 2))
+    return basis * env[:, None] * (r > 0)[:, None]
+
+
+# ==========================================================================
+# Config / parameters
+# ==========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class NequIPConfig:
+    name: str
+    n_layers: int = 5
+    d_hidden: int = 32          # channels per irrep degree
+    l_max: int = 2
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    n_species: int = 16
+    radial_hidden: int = 64
+    remat: bool = True          # edge-chunk remat: [E, C, m] path
+                                # messages are recomputed in backward,
+                                # never stored (254 GiB/chip -> chunk-
+                                # local on the 123M-edge ogb cell)
+    edge_chunk: int = 1 << 18   # edges per scanned message chunk (the
+                                # chunk backward keeps ~2 tensors per
+                                # coupling path live: 22 × [chunk,32,5]
+                                # f32 ≈ 3.7 GB at 2^18)
+    dist_axes: tuple = ()       # shard_map mode: node/edge arrays are
+                                # per-shard; each layer all-gathers
+                                # feats and reduce-scatters messages
+                                # over these mesh axes (one collective
+                                # pair per LAYER, not per chunk — see
+                                # DESIGN.md §5)
+    dtype: object = jnp.float32
+
+
+def init(rng, cfg: NequIPConfig) -> dict:
+    paths = coupling_paths(cfg.l_max)
+    n_l = cfg.l_max + 1
+    c = cfg.d_hidden
+    layers = []
+    rngs = jax.random.split(rng, cfg.n_layers + 2)
+    for li in range(cfg.n_layers):
+        r = jax.random.split(rngs[li], 4 + n_l)
+        lp = {
+            # radial MLP: rbf -> hidden -> per-path per-channel weights
+            "radial": {
+                "w1": C.normal_init(r[0], (cfg.n_rbf, cfg.radial_hidden),
+                                    cfg.n_rbf ** -0.5, cfg.dtype),
+                "b1": jnp.zeros((cfg.radial_hidden,), cfg.dtype),
+                "w2": C.normal_init(r[1],
+                                    (cfg.radial_hidden, len(paths) * c),
+                                    cfg.radial_hidden ** -0.5, cfg.dtype),
+            },
+            # per-degree self-interaction (channel mixing, m untouched)
+            "self": [C.normal_init(r[2 + l], (c, c), c ** -0.5, cfg.dtype)
+                     for l in range(n_l)],
+            # gate scalars for l>0 irreps, produced from l=0 channels
+            "gate_w": C.normal_init(r[2 + n_l], (c, (n_l - 1) * c),
+                                    c ** -0.5, cfg.dtype),
+            "gate_b": jnp.zeros(((n_l - 1) * c,), cfg.dtype),
+        }
+        layers.append(lp)
+    # stack layers [L, ...] so the forward can lax.scan over them (the
+    # canonical depth pattern: per-step full-size buffers are freed)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    return {
+        "embed": C.normal_init(rngs[-2], (cfg.n_species, c), 1.0, cfg.dtype),
+        "layers": stacked,
+        "head": {
+            "w1": C.normal_init(rngs[-1], (c, c), c ** -0.5, cfg.dtype),
+            "b1": jnp.zeros((c,), cfg.dtype),
+            "w2": jnp.zeros((c, 1), cfg.dtype) + 1e-2,
+        },
+    }
+
+
+# ==========================================================================
+# Forward
+# ==========================================================================
+
+def _interaction(lp: dict, cfg: NequIPConfig, feats: list, sh: list,
+                 rbf: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray,
+                 edge_mask: jnp.ndarray, num_nodes: int) -> list:
+    """One NequIP convolution + self-interaction + gate.
+
+    Messages are computed per EDGE CHUNK under ``lax.scan`` + remat: the
+    [E, C, m] per-path message tensors (≈5 GB/chip/path on the
+    123M-edge ogb cell) exist only chunk-locally, forward and backward;
+    the scan carries the [V, C, m] accumulators."""
+    paths = coupling_paths(cfg.l_max)
+    tables = gaunt_tables(cfg.l_max)
+    c = cfg.d_hidden
+    n_l = cfg.l_max + 1
+    e = src.shape[0]
+
+    chunk = min(cfg.edge_chunk, e)
+    nchunk = -(-e // chunk)
+    pad = nchunk * chunk - e
+
+    def pad_e(x, fill=0):
+        if pad == 0:
+            return x
+        widths = ((0, pad),) + ((0, 0),) * (x.ndim - 1)
+        return jnp.pad(x, widths, constant_values=fill)
+
+    src_c = pad_e(src).reshape(nchunk, chunk)
+    dst_c = pad_e(dst).reshape(nchunk, chunk)
+    mask_c = pad_e(edge_mask).reshape(nchunk, chunk)
+    rbf_c = pad_e(rbf).reshape(nchunk, chunk, -1)
+    sh_c = [pad_e(y).reshape(nchunk, chunk, -1) for y in sh]
+
+    # distributed mode: gather the full node features ONCE per layer;
+    # chunk gathers/scatters are then shard-local, and the accumulated
+    # partial messages reduce-scatter back to node shards afterwards
+    if cfg.dist_axes:
+        feats_full = [jax.lax.all_gather(f, cfg.dist_axes, axis=0,
+                                         tiled=True) for f in feats]
+        v_total = feats_full[0].shape[0]
+    else:
+        feats_full = feats
+        v_total = num_nodes
+
+    def chunk_body(msgs, xs):
+        s_, d_, em_, rb_, *ys = xs
+        h = jax.nn.silu(rb_ @ lp["radial"]["w1"] + lp["radial"]["b1"])
+        rw = (h @ lp["radial"]["w2"]).reshape(chunk, len(paths), c)
+        rw = rw * em_[:, None, None]
+        for pi, (l1, l2, l3) in enumerate(paths):
+            g = tables[(l1, l2, l3)].astype(feats[0].dtype)
+            x_src = feats_full[l1][s_]                       # [ch, C, m1]
+            # m[e,c,m3] = Σ_{m1,m2} x·y·g, modulated by radial weight
+            m = jnp.einsum("eca,eb,abm->ecm", x_src, ys[l2], g)
+            m = m * rw[:, pi, :, None]
+            msgs = [ms + C.scatter_sum(m, d_, v_total) if li == l3
+                    else ms for li, ms in enumerate(msgs)]
+        return msgs, None
+
+    if cfg.remat:
+        chunk_body = jax.checkpoint(
+            chunk_body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    msgs0 = [jnp.zeros((v_total, c, 2 * l + 1), feats[0].dtype)
+             for l in range(n_l)]
+    msgs, _ = jax.lax.scan(chunk_body, msgs0,
+                           (src_c, dst_c, mask_c, rbf_c, *sh_c))
+    if cfg.dist_axes:
+        # sum partials across edge shards, keep only the local node rows
+        msgs = [jax.lax.psum_scatter(m, cfg.dist_axes,
+                                     scatter_dimension=0, tiled=True)
+                for m in msgs]
+
+    # self-interaction (channel mix per degree) + residual
+    out = []
+    for l in range(n_l):
+        upd = jnp.einsum("vcm,cd->vdm", msgs[l], lp["self"][l])
+        out.append(feats[l] + upd)
+
+    # gate nonlinearity: SiLU on scalars; l>0 scaled by sigmoid(gates)
+    scalars = out[0][..., 0]                                  # [V, C]
+    gates = jax.nn.sigmoid(scalars @ lp["gate_w"] + lp["gate_b"])
+    gates = gates.reshape(num_nodes, n_l - 1, c)
+    gated = [out[0].at[..., 0].set(jax.nn.silu(scalars))]
+    for l in range(1, n_l):
+        gated.append(out[l] * gates[:, l - 1, :, None])
+    return gated
+
+
+def forward(params: dict, batch: dict, cfg: NequIPConfig) -> jnp.ndarray:
+    """batch: positions [V,3], species [V], src/dst [E], graph_ids [V],
+    num_graphs (static via shape of batch["energy"]). Returns per-graph
+    energies [G]."""
+    pos = batch["positions"].astype(cfg.dtype)
+    src, dst = batch["src"], batch["dst"]
+    v = pos.shape[0]
+    num_graphs = batch["energy"].shape[0] if "energy" in batch else \
+        int(batch["graph_ids"].max()) + 1
+
+    if cfg.dist_axes:
+        # node arrays are per-shard; edges carry GLOBAL node ids
+        pos_full = jax.lax.all_gather(pos, cfg.dist_axes, axis=0,
+                                      tiled=True)
+    else:
+        pos_full = pos
+    vec = pos_full[src] - pos_full[dst]                       # [E, 3]
+    r = jnp.sqrt(jnp.sum(vec * vec, axis=-1) + 1e-18)
+    unit = vec / jnp.maximum(r, 1e-9)[:, None]
+    in_cut = (r > 0) & (r < cfg.cutoff)
+    edge_mask = in_cut.astype(cfg.dtype)
+    if "edge_mask" in batch:
+        edge_mask = edge_mask * batch["edge_mask"].astype(cfg.dtype)
+    sh = spherical_harmonics(unit, cfg.l_max)
+    rbf = bessel_basis(r, cfg.n_rbf, cfg.cutoff)
+
+    c = cfg.d_hidden
+    feats = [jnp.take(params["embed"], batch["species"], axis=0)[..., None]]
+    for l in range(1, cfg.l_max + 1):
+        feats.append(jnp.zeros((v, c, 2 * l + 1), cfg.dtype))
+
+    def layer_body(feats_t, lp):
+        out = _interaction(lp, cfg, list(feats_t), sh, rbf, src, dst,
+                           edge_mask, v)
+        return tuple(out), None
+
+    if cfg.remat:
+        # per-layer remat: the all-gathered feats_full and the full-size
+        # message accumulators are rebuilt in backward; the scan saves
+        # only the (shard-local) per-layer input feats
+        layer_body = jax.checkpoint(
+            layer_body, policy=jax.checkpoint_policies.nothing_saveable)
+    feats_t, _ = jax.lax.scan(layer_body, tuple(feats),
+                              params["layers"])
+    feats = list(feats_t)
+
+    # invariant readout: per-atom energy -> per-graph sum
+    s = feats[0][..., 0]
+    e_atom = (jax.nn.silu(s @ params["head"]["w1"] + params["head"]["b1"])
+              @ params["head"]["w2"])[:, 0]
+    if "node_mask" in batch:
+        e_atom = e_atom * batch["node_mask"].astype(e_atom.dtype)
+    energy = jax.ops.segment_sum(e_atom, batch["graph_ids"],
+                                 num_segments=num_graphs)
+    if cfg.dist_axes:
+        energy = jax.lax.psum(energy, cfg.dist_axes)   # shard partials
+    return energy
+
+
+def forces(params: dict, batch: dict, cfg: NequIPConfig) -> jnp.ndarray:
+    """Exact conservative forces F = -∂E_total/∂positions."""
+    def e_total(pos):
+        return forward(params, {**batch, "positions": pos}, cfg).sum()
+    return -jax.grad(e_total)(batch["positions"].astype(cfg.dtype))
+
+
+def loss_fn(params: dict, batch: dict, cfg: NequIPConfig) -> jnp.ndarray:
+    """Energy MSE (per graph)."""
+    pred = forward(params, batch, cfg)
+    err = (pred - batch["energy"].astype(pred.dtype))
+    return jnp.mean(err * err)
+
+
+def param_spec(cfg: NequIPConfig, fsdp, tp: str = "model") -> dict:
+    """Tiny parameter count — replicate; the graph (nodes/edges) shards."""
+    return _replicated_spec(cfg)
+
+
+def _replicated_spec(cfg: NequIPConfig) -> dict:
+    n_l = cfg.l_max + 1
+    layer = {       # leaves are layer-stacked [L, ...]
+        "radial": {"w1": P(None, None, None), "b1": P(None, None),
+                   "w2": P(None, None, None)},
+        "self": [P(None, None, None) for _ in range(n_l)],
+        "gate_w": P(None, None, None),
+        "gate_b": P(None, None),
+    }
+    return {
+        "embed": P(None, None),
+        "layers": layer,
+        "head": {"w1": P(None, None), "b1": P(None), "w2": P(None, None)},
+    }
+
+
+def batch_spec(fsdp) -> dict:
+    return {"positions": P(fsdp, None), "species": P(fsdp),
+            "src": P(fsdp), "dst": P(fsdp), "graph_ids": P(fsdp),
+            "energy": P(None)}

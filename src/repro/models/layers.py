@@ -1,0 +1,354 @@
+"""Shared neural-net layers (pure-function style: params are pytrees).
+
+No flax/haiku — parameters are plain dicts of jnp arrays, created by
+``*_params`` functions and consumed by ``*_apply`` functions, so that
+layer stacks can be ``jax.lax.scan``-ed over stacked parameter pytrees
+(compile time O(1) in depth — required for the 64-layer dry-runs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.sharding import constrain
+
+
+def uniform_init(rng, shape, scale, dtype):
+    return jax.random.uniform(rng, shape, dtype, -scale, scale)
+
+
+def normal_init(rng, shape, std, dtype):
+    return (jax.random.normal(rng, shape, jnp.float32) * std).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6,
+             plus_one: bool = False) -> jnp.ndarray:
+    """RMSNorm; ``plus_one`` uses the (1+w) parameterization (gemma)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    if plus_one:
+        w = 1.0 + w
+    return (xf * w).astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, weight: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (xf * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: [B, S, H, d]; positions: [S] (shared across batch) or [B, S]
+    (per-request, used by the decode path where right-padded requests sit
+    at different positions). Rotates (even, odd) halves — the
+    'half-rotation' LLaMA/HF convention."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                         # [d/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..,S,d/2]
+    if positions.ndim == 1:
+        cos = jnp.cos(angles)[None, :, None, :]
+        sin = jnp.sin(angles)[None, :, None, :]
+    else:
+        cos = jnp.cos(angles)[:, :, None, :]
+        sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention (XLA path; the Pallas flash kernel is the TPU fast path)
+# --------------------------------------------------------------------------
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    return cap * jnp.tanh(x / cap) if cap > 0.0 else x
+
+
+def attention_scores_mask(q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+                          window) -> jnp.ndarray:
+    """Causal (+ optional sliding ``window``) mask. ``window`` may be a
+    traced scalar (0 = full attention) so alternating local/global layers
+    can share one scanned body.
+
+    Positions may be [S] (shared) -> mask [Sq, Sk], or [B, S]
+    (per-request decode) -> mask [B, Sq, Sk]. Negative k positions mark
+    empty cache slots and are always masked.
+    """
+    q = q_pos[..., :, None]
+    k = k_pos[..., None, :]
+    causal = q >= k
+    w = jnp.asarray(window, jnp.int32)
+    local = jnp.where(w > 0, (q - k) < w, True)
+    return causal & local & (k >= 0)
+
+
+_FLASH_THRESHOLD = 1024      # Sq*Sk above which the blocked path is used
+
+
+def _attention_dense(q, k, v, *, q_positions, k_positions, window,
+                     attn_softcap, scale, kv_mask):
+    """Direct S×S-scores path (decode steps, small tests)."""
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    # bf16 operands, f32 accumulation: an explicit astype(f32) on k/v
+    # gets hoisted above the layer scan at decode, materializing the
+    # WHOLE [L, B, S, H, dh] cache in f32 (observed 4 GiB/chip buffers)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    # pin batch sharding: GSPMD otherwise replicates the S×S scores over
+    # batch when it picks head sharding (observed 16 GiB/chip; DESIGN §6)
+    s = constrain(s, "batch", None, None, None, None)
+    s = softcap(s, attn_softcap)
+    mask = attention_scores_mask(q_positions, k_positions, window)
+    if mask.ndim == 2:                                   # [Sq, Sk]
+        mask = mask[None]                                # -> [1|B, Sq, Sk]
+    if kv_mask is not None:
+        mask = mask & kv_mask[:, None, :]
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    out = constrain(out, "batch", None, None, None, None)
+    return out.reshape(b, sq, hq, v.shape[-1]).astype(q.dtype)
+
+
+def _attention_blocked(q, k, v, *, q_positions, k_positions, window,
+                       attn_softcap, scale, kv_mask,
+                       block_k: int = 512):
+    """Blocked online-softmax attention (XLA path of the flash kernel).
+
+    ``lax.scan`` over kv blocks with running (m, l, acc) statistics: the
+    S×S score matrix never materializes — peak per-step memory is one
+    [B, Hkv, G, Sq, block_k] tile. ``jax.checkpoint`` on the block body
+    makes the backward recompute tiles instead of saving them (the
+    flash-backward memory profile). Numerically identical to the dense
+    path (same fp32 accumulation; tested to 1e-5)."""
+    b, sq, hq, d = q.shape
+    dv = v.shape[-1]            # MLA: v head dim != qk head dim
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    nblk = -(-sk // block_k)
+    pad = nblk * block_k - sk
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if k_positions.ndim == 1:
+        kpos = jnp.pad(k_positions, (0, pad), constant_values=-1)
+        kpos_blocks = kpos.reshape(nblk, block_k)
+    else:
+        kpos = jnp.pad(k_positions, ((0, 0), (0, pad)),
+                       constant_values=-1)
+        kpos_blocks = kpos.reshape(b, nblk, block_k).swapaxes(0, 1)
+    kvm_blocks = None
+    if kv_mask is not None:
+        kvm = jnp.pad(kv_mask, ((0, 0), (0, pad)))
+        kvm_blocks = kvm.reshape(b, nblk, block_k).swapaxes(0, 1)
+    k_blocks = kp.reshape(b, nblk, block_k, hkv, d).swapaxes(0, 1)
+    v_blocks = vp.reshape(b, nblk, block_k, hkv, dv).swapaxes(0, 1)
+    # pin EVERY loop-carried/loop-read tensor's layout: otherwise GSPMD
+    # re-shards between kv-block steps ("involuntary full remat"
+    # warnings), inserting per-block all-gathers ×blocks×layers×accum
+    k_blocks = constrain(k_blocks, None, "batch", None, None, None)
+    v_blocks = constrain(v_blocks, None, "batch", None, None, None)
+
+    qg = q.reshape(b, sq, hkv, g, d)       # model dtype; dots accum f32
+    qg = constrain(qg, "batch", None, None, None, None)
+
+    def body(carry, xs):
+        m_run, l_run, acc = carry
+        if kvm_blocks is not None:
+            kb, vb, kpos_b, kvm_b = xs
+        else:
+            kb, vb, kpos_b = xs
+            kvm_b = None
+        # bf16 operands, f32 accumulation (MXU-native); p is cast to
+        # bf16 for the pv matmul (standard flash practice) — halves the
+        # per-block HBM traffic vs f32 operands
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        s = constrain(s, "batch", None, None, None, None)
+        s = softcap(s, attn_softcap)
+        mask = attention_scores_mask(q_positions, kpos_b, window)
+        if mask.ndim == 2:
+            mask = mask[None]
+        if kvm_b is not None:
+            mask = mask & kvm_b[:, None, :]
+        s = jnp.where(mask[:, None, None], s, -1e30)
+        m_new = jnp.maximum(m_run, s.max(axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_run * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        m_new = constrain(m_new, "batch", None, None, None)
+        l_new = constrain(l_new, "batch", None, None, None)
+        acc = constrain(acc, "batch", None, None, None, None)
+        return (m_new, l_new, acc), None
+
+    m0 = constrain(jnp.full((b, hkv, g, sq), -1e30, jnp.float32),
+                   "batch", None, None, None)
+    l0 = constrain(jnp.zeros((b, hkv, g, sq), jnp.float32),
+                   "batch", None, None, None)
+    a0 = constrain(jnp.zeros((b, hkv, g, sq, dv), jnp.float32),
+                   "batch", None, None, None, None)
+    xs = (k_blocks, v_blocks, kpos_blocks)
+    if kvm_blocks is not None:
+        xs = xs + (kvm_blocks,)
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        jax.checkpoint(body, policy=jax.checkpoint_policies.
+                       nothing_saveable),
+        (m0, l0, a0), xs)
+    l_f = jnp.where(l_f == 0.0, 1.0, l_f)       # fully-masked rows
+    out = acc / l_f[..., None]                   # [B,Hkv,G,Sq,dv]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, dv)
+    return out.astype(q.dtype)
+
+
+def multi_head_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                         q_positions: jnp.ndarray,
+                         k_positions: jnp.ndarray,
+                         window=0, attn_softcap: float = 0.0,
+                         sm_scale: float | None = None,
+                         kv_mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """GQA attention. q: [B,Sq,Hq,d]; k, v: [B,Sk,Hkv,d]; Hq % Hkv == 0.
+
+    ``kv_mask`` ([B, Sk] bool) masks unfilled KV-cache slots at decode.
+    Long sequences take the blocked online-softmax path (no S×S buffer);
+    decode (Sq=1) and small shapes take the dense path.
+    """
+    sq, sk = q.shape[1], k.shape[1]
+    d = q.shape[-1]
+    scale = sm_scale if sm_scale is not None else d ** -0.5
+    kw = dict(q_positions=q_positions, k_positions=k_positions,
+              window=window, attn_softcap=attn_softcap, scale=scale,
+              kv_mask=kv_mask)
+    if sq > 1 and sq * sk > _FLASH_THRESHOLD ** 2:
+        return _attention_blocked(q, k, v, **kw)
+    return _attention_dense(q, k, v, **kw)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+def gated_mlp_apply(params: dict, x: jnp.ndarray,
+                    act: str = "silu") -> jnp.ndarray:
+    """SwiGLU / GeGLU feed-forward."""
+    gate = x @ params["w_gate"]
+    up = x @ params["w_up"]
+    a = jax.nn.silu(gate) if act == "silu" else jax.nn.gelu(gate)
+    return (a * up) @ params["w_down"]
+
+
+def gated_mlp_params(rng, d_model: int, d_ff: int, dtype) -> dict:
+    r1, r2, r3 = jax.random.split(rng, 3)
+    s_in = d_model ** -0.5
+    s_out = d_ff ** -0.5
+    return {
+        "w_gate": normal_init(r1, (d_model, d_ff), s_in, dtype),
+        "w_up": normal_init(r2, (d_model, d_ff), s_in, dtype),
+        "w_down": normal_init(r3, (d_ff, d_model), s_out, dtype),
+    }
+
+
+def mlp_apply(params: dict, x: jnp.ndarray, act: str = "relu"
+              ) -> jnp.ndarray:
+    """Plain MLP tower: list of (w, b) with activation between layers."""
+    n = len(params["ws"])
+    for i, (w, b) in enumerate(zip(params["ws"], params["bs"])):
+        x = x @ w + b
+        if i < n - 1:
+            x = jax.nn.relu(x) if act == "relu" else jax.nn.silu(x)
+    return x
+
+
+def mlp_params(rng, dims: list[int], dtype) -> dict:
+    ws, bs = [], []
+    rngs = jax.random.split(rng, len(dims) - 1)
+    for r, din, dout in zip(rngs, dims[:-1], dims[1:]):
+        ws.append(normal_init(r, (din, dout), din ** -0.5, dtype))
+        bs.append(jnp.zeros((dout,), dtype))
+    return {"ws": ws, "bs": bs}
+
+
+# --------------------------------------------------------------------------
+# Losses
+# --------------------------------------------------------------------------
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                       mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Token-level CE; logits [*, V] any dtype (upcast inside)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()
+
+
+def chunked_lm_loss(x: jnp.ndarray, head: jnp.ndarray,
+                    labels: jnp.ndarray, *, final_softcap: float = 0.0,
+                    seq_chunk: int = 512) -> jnp.ndarray:
+    """Memory-lean LM cross-entropy: the [B, S, V] fp32 logits tensor
+    never materializes. ``lax.scan`` over sequence chunks computes each
+    chunk's logits -> per-token NLL and discards them; ``jax.checkpoint``
+    on the chunk body makes the backward recompute chunk logits instead
+    of saving them. Peak extra memory = one [B, chunk, V] tile.
+
+    x: final hidden states [B, S, D]; head: [D, V]; labels: [B, S].
+    """
+    b, s, dm = x.shape
+    nchunk = -(-s // seq_chunk)
+    pad = nchunk * seq_chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)),
+                         constant_values=-1)
+    xc = x.reshape(b, nchunk, seq_chunk, dm).swapaxes(0, 1)
+    lc = labels.reshape(b, nchunk, seq_chunk).swapaxes(0, 1)
+
+    def chunk_nll(carry, xs):
+        xchunk, lchunk = xs                     # [B, C, D], [B, C]
+        logits = (xchunk @ head).astype(jnp.float32)
+        logits = constrain(logits, "batch", None, "tp")
+        logits = softcap(logits, final_softcap)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        safe = jnp.maximum(lchunk, 0)
+        gold = jnp.take_along_axis(logits, safe[..., None],
+                                   axis=-1)[..., 0]
+        valid = (lchunk >= 0).astype(jnp.float32)
+        return (carry[0] + ((logz - gold) * valid).sum(),
+                carry[1] + valid.sum()), None
+
+    body = jax.checkpoint(
+        chunk_nll, policy=jax.checkpoint_policies.nothing_saveable)
+    (total, count), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xc, lc))
+    return total / jnp.maximum(count, 1.0)

@@ -1,0 +1,130 @@
+"""Mixture-of-Experts FFN (GShard-style top-k dispatch with capacity).
+
+Used by grok-1 (8 experts, top-2) and phi3.5-moe (16 experts, top-2).
+Dispatch is sort-free: positions within each expert's capacity buffer are
+computed with a one-hot cumsum, tokens are scattered into an [E, C, D]
+buffer, experts run as one batched einsum, and outputs are combined with
+the gate weights. Overflow tokens are dropped (standard capacity-factor
+semantics); the auxiliary load-balancing loss is returned for training.
+
+Expert parallelism comes from the *sharding* of the [E, ...] dims — see
+``repro.launch.shardings``: phi (16e) shards experts over the 16-way
+'model' axis (all-to-all dispatch); grok (8e) tensor-shards d_ff inside
+each expert instead (8 < 16 would idle half the EP ranks).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import normal_init
+from repro.models.sharding import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    dispatch_chunk: int = 16384     # tokens per scanned dispatch chunk:
+                                    # bounds the [E, C, d_ff] expert
+                                    # hiddens (grok prefill_32k: 172 TB
+                                    # logical unchunked)
+
+
+def moe_params(rng, d_model: int, cfg: MoEConfig, dtype) -> dict:
+    r0, r1, r2, r3 = jax.random.split(rng, 4)
+    e, f = cfg.num_experts, cfg.d_ff_expert
+    return {
+        "router": normal_init(r0, (d_model, e), d_model ** -0.5,
+                              jnp.float32),
+        "w_gate": normal_init(r1, (e, d_model, f), d_model ** -0.5, dtype),
+        "w_up": normal_init(r2, (e, d_model, f), d_model ** -0.5, dtype),
+        "w_down": normal_init(r3, (e, f, d_model), f ** -0.5, dtype),
+    }
+
+
+def moe_apply(params: dict, x: jnp.ndarray, cfg: MoEConfig
+              ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, D] -> (out [B, S, D], aux_loss).
+
+    Tokens are processed in ``dispatch_chunk``-sized chunks under
+    ``lax.scan`` + remat: the [E, C, d_ff] expert hiddens exist only
+    chunk-locally (forward and backward). Capacity is per chunk —
+    Switch-style microbatch capacity semantics."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.num_experts, cfg.top_k
+    chunk = min(cfg.dispatch_chunk, t)
+    nchunk = -(-t // chunk)
+    pad = nchunk * chunk - t
+    cap = max(int(cfg.capacity_factor * chunk * k / e), 1)
+
+    xt = x.reshape(t, d)
+    xt = constrain(xt, "batch", None)
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    xc = xt.reshape(nchunk, chunk, d)
+
+    def chunk_body(aux_acc, xchunk):
+        out, aux = _dispatch_chunk(params, xchunk, cfg, cap)
+        return aux_acc + aux, out
+
+    body = jax.checkpoint(
+        chunk_body, policy=jax.checkpoint_policies.nothing_saveable)
+    aux_total, out_c = jax.lax.scan(
+        body, jnp.zeros((), jnp.float32), xc)
+    out = out_c.reshape(nchunk * chunk, d)[:t]
+    return out.reshape(b, s, d), aux_total / nchunk
+
+
+def _dispatch_chunk(params: dict, xt: jnp.ndarray, cfg: MoEConfig,
+                    cap: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One token chunk through router -> dispatch -> experts -> combine
+    (GShard-style sort-free dispatch via one-hot cumsum positions)."""
+    t, d = xt.shape
+    e, k = cfg.num_experts, cfg.top_k
+
+    logits = (xt.astype(jnp.float32) @ params["router"])     # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)            # [T, k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)              # renormalize
+
+    # load-balancing auxiliary loss (Switch/GShard form)
+    me = probs.mean(axis=0)                                  # [E]
+    ce = jax.nn.one_hot(gate_idx[:, 0], e).mean(axis=0)      # top-1 frac
+    aux = cfg.router_aux_weight * e * jnp.sum(me * ce)
+
+    # positions within each expert buffer, priority = (choice, token id)
+    flat_e = gate_idx.T.reshape(-1)                          # [kT]
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)      # [kT, E]
+    pos_all = jnp.cumsum(onehot, axis=0) - 1                 # rank in expert
+    pos = jnp.take_along_axis(pos_all, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < cap                                         # overflow drop
+
+    tok_idx = jnp.tile(jnp.arange(t), k)                     # [kT]
+    buf_slot = flat_e * cap + jnp.where(keep, pos, 0)
+    contrib = jnp.where(keep[:, None], xt[tok_idx], 0).astype(xt.dtype)
+    buffer = jnp.zeros((e * cap, d), xt.dtype).at[buf_slot].add(
+        jnp.where(keep[:, None], contrib, 0))
+    buffer = buffer.reshape(e, cap, d)
+
+    # expert computation: batched SwiGLU
+    g = jnp.einsum("ecd,edf->ecf", buffer, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buffer, params["w_up"])
+    h = jax.nn.silu(g) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    out_buf = out_buf.reshape(e * cap, d)
+
+    # combine: gather each (token, choice) result, weight by gate value
+    gathered = out_buf[buf_slot]                             # [kT, D]
+    w = (gate_vals.T.reshape(-1) * keep).astype(xt.dtype)    # [kT]
+    combined = jnp.zeros((t, d), xt.dtype).at[tok_idx].add(
+        gathered * w[:, None])
+    combined = constrain(combined, "batch", None)
+    return combined, aux

@@ -1,0 +1,222 @@
+"""DCN-v2 (arXiv:2008.13535) — deep & cross network for CTR / ranking.
+
+Assigned config: 13 dense features, 26 sparse features, embed_dim=16,
+3 cross layers, MLP tower 1024-1024-512, cross interaction.
+
+The sparse hot path is the **embedding lookup**. JAX has no native
+EmbeddingBag or CSR sparse: lookups here are ``jnp.take`` over a single
+*fused* table (all 26 feature tables concatenated row-wise, per-feature
+row offsets added to the indices), and multi-hot bags reduce with
+``jax.ops.segment_sum`` — this IS part of the system (kernel_taxonomy
+§RecSys); the TPU fast path is the ``embedding_bag`` Pallas kernel.
+
+A fused table makes row-sharding uniform: ``P('model', None)`` shards the
+one [total_rows, 16] array across the tensor axis, and every lookup is a
+single sharded gather (XLA inserts the index all-gather / result
+all-to-all), instead of 26 differently-shaped gathers.
+
+Cross network (DCN-v2, full-rank W):
+    x_{l+1} = x_0 ⊙ (W_l x_l + b_l) + x_l
+runs in parallel with the deep MLP tower; their concatenation feeds the
+final logit (the paper's "parallel" structure). Loss is BCE.
+
+``retrieval_scores`` scores one query against N candidates with a single
+batched matmul (the ``retrieval_cand`` shape: 1 × 1M candidates).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+
+
+# Criteo-like per-feature table sizes (hashed); the full config's 26
+# tables sum to ~54M rows x 16 dims = ~3.5 GB fp32 (row-sharded 16-way).
+CRITEO_TABLE_SIZES = (
+    4_000_000, 25_000, 15_000, 7_000, 19_000, 4, 7_000, 1_500, 60,
+    3_500_000, 500_000, 200_000, 11, 2_000, 10_000, 60, 4, 1_000, 15,
+    4_000_000, 2_500_000, 4_000_000, 500_000, 10_000, 80, 30,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 16
+    n_cross: int = 3
+    mlp: tuple = (1024, 1024, 512)
+    table_sizes: tuple = CRITEO_TABLE_SIZES
+    hotness: int = 1            # indices per bag (multi-hot when > 1)
+    dtype: object = jnp.float32
+
+    @property
+    def padded_table_sizes(self) -> tuple:
+        """Per-feature rows padded to a multiple of 16 so the fused
+        table's row dim shards evenly over the 16-way tensor axis."""
+        return tuple(((s + 15) // 16) * 16 for s in self.table_sizes)
+
+    @property
+    def total_rows(self) -> int:
+        return int(sum(self.padded_table_sizes))
+
+    @property
+    def row_offsets(self) -> np.ndarray:
+        """Start row of each feature's slice in the fused table."""
+        sizes = self.padded_table_sizes
+        return np.concatenate(
+            [[0], np.cumsum(sizes[:-1])]).astype(np.int64)
+
+    @property
+    def d_interact(self) -> int:
+        return self.n_dense + self.n_sparse * self.embed_dim
+
+
+# ==========================================================================
+# EmbeddingBag (jnp.take + segment_sum — the JAX-native sparse substrate)
+# ==========================================================================
+
+def embedding_bag(table: jnp.ndarray, indices: jnp.ndarray,
+                  bag_ids: jnp.ndarray, num_bags: int,
+                  combine: str = "sum") -> jnp.ndarray:
+    """General EmbeddingBag: rows = take(table, indices); bags reduce via
+    segment_sum over ``bag_ids`` (sorted). [nnz] -> [num_bags, dim]."""
+    rows = jnp.take(table, indices, axis=0)
+    out = jax.ops.segment_sum(rows, bag_ids, num_segments=num_bags)
+    if combine == "mean":
+        cnt = jax.ops.segment_sum(
+            jnp.ones((indices.shape[0],), rows.dtype), bag_ids,
+            num_segments=num_bags)
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out
+
+
+def fused_lookup(table: jnp.ndarray, sparse_idx: jnp.ndarray,
+                 row_offsets: jnp.ndarray, combine: str = "sum"
+                 ) -> jnp.ndarray:
+    """Fused-table lookup. sparse_idx: [B, F] (one-hot) or [B, F, H]
+    (multi-hot); returns [B, F, dim]. Per-feature row offsets are added so
+    all features read the single fused table."""
+    if sparse_idx.ndim == 2:
+        flat = sparse_idx + row_offsets[None, :]
+        return jnp.take(table, flat, axis=0)            # [B, F, dim]
+    b, f, h = sparse_idx.shape
+    flat = (sparse_idx + row_offsets[None, :, None]).reshape(-1)
+    bag_ids = jnp.arange(b * f, dtype=jnp.int32).repeat(h)
+    out = embedding_bag(table, flat, bag_ids, b * f, combine)
+    return out.reshape(b, f, -1)
+
+
+# ==========================================================================
+# Parameters
+# ==========================================================================
+
+def init(rng, cfg: RecsysConfig) -> dict:
+    r_tab, r_cross, r_mlp, r_head, r_bn = jax.random.split(rng, 5)
+    d = cfg.d_interact
+    cross_rngs = jax.random.split(r_cross, cfg.n_cross)
+    return {
+        "table": L.normal_init(
+            r_tab, (cfg.total_rows, cfg.embed_dim),
+            cfg.embed_dim ** -0.5, cfg.dtype),
+        "dense_norm": {"w": jnp.ones((cfg.n_dense,), cfg.dtype),
+                       "b": jnp.zeros((cfg.n_dense,), cfg.dtype)},
+        "cross": [{"w": L.normal_init(r, (d, d), d ** -0.5, cfg.dtype),
+                   "b": jnp.zeros((d,), cfg.dtype)}
+                  for r in cross_rngs],
+        "mlp": L.mlp_params(r_mlp, [d, *cfg.mlp], cfg.dtype),
+        "head": L.normal_init(r_head, (d + cfg.mlp[-1], 1),
+                              (d + cfg.mlp[-1]) ** -0.5, cfg.dtype),
+    }
+
+
+def param_count(cfg: RecsysConfig) -> int:
+    params = jax.eval_shape(lambda r: init(r, cfg),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+# ==========================================================================
+# Forward
+# ==========================================================================
+
+def interact(params: dict, batch: dict, cfg: RecsysConfig) -> jnp.ndarray:
+    """dense [B, 13] + sparse_idx [B, 26(, H)] -> x0 [B, d_interact]."""
+    dense = batch["dense"].astype(cfg.dtype)
+    dense = dense * params["dense_norm"]["w"] + params["dense_norm"]["b"]
+    emb = fused_lookup(params["table"], batch["sparse_idx"],
+                       jnp.asarray(cfg.row_offsets))
+    return jnp.concatenate(
+        [dense, emb.reshape(emb.shape[0], -1)], axis=-1)
+
+
+def forward(params: dict, batch: dict, cfg: RecsysConfig) -> jnp.ndarray:
+    """Returns logits [B]."""
+    x0 = interact(params, batch, cfg)
+    # cross network: x_{l+1} = x0 * (W x_l + b) + x_l
+    x = x0
+    for cl in params["cross"]:
+        x = x0 * (x @ cl["w"] + cl["b"]) + x
+    deep = L.mlp_apply(params["mlp"], x0)
+    deep = jax.nn.relu(deep)
+    both = jnp.concatenate([x, deep], axis=-1)
+    return (both @ params["head"])[:, 0]
+
+
+def loss_fn(params: dict, batch: dict, cfg: RecsysConfig) -> jnp.ndarray:
+    """Binary cross-entropy on click labels."""
+    logits = forward(params, batch, cfg).astype(jnp.float32)
+    y = batch["label"].astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * y
+        + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def retrieval_scores(params: dict, batch: dict, cfg: RecsysConfig,
+                     candidate_ids: jnp.ndarray) -> jnp.ndarray:
+    """Score ONE query against N candidates with a single matmul.
+
+    The query runs the full DCN tower; each candidate contributes its
+    embedding row (feature 0's table slice); score = <query_repr, cand>
+    after a learned projection — a batched dot, not a loop.
+    """
+    x0 = interact(params, batch, cfg)                 # [1, d]
+    x = x0
+    for cl in params["cross"]:
+        x = x0 * (x @ cl["w"] + cl["b"]) + x
+    deep = jax.nn.relu(L.mlp_apply(params["mlp"], x0))
+    q = jnp.concatenate([x, deep], axis=-1)           # [1, d + mlp[-1]]
+    # project query into embed space with the head slice, then dot
+    cand = jnp.take(params["table"], candidate_ids, axis=0)  # [N, dim]
+    q_proj = q @ params["head"] @ jnp.ones((1, cfg.embed_dim),
+                                           q.dtype)   # [1, dim]
+    return (cand @ q_proj[0]).astype(jnp.float32)     # [N]
+
+
+# ==========================================================================
+# Sharding
+# ==========================================================================
+
+def param_spec(cfg: RecsysConfig, fsdp, tp: str = "model") -> dict:
+    """Embedding table row-sharded over the tensor axis; dense tower
+    replicated (tiny) with the MLP's wide dims sharded over tp."""
+    return {
+        "table": P(tp, None),
+        "dense_norm": {"w": P(None), "b": P(None)},
+        "cross": [{"w": P(None, None), "b": P(None)}
+                  for _ in range(cfg.n_cross)],
+        "mlp": {"ws": [P(None, tp), P(tp, None), P(None, None)],
+                "bs": [P(tp), P(None), P(None)]},
+        "head": P(None, None),
+    }
+
+
+def batch_spec(fsdp) -> dict:
+    return {"dense": P(fsdp, None), "sparse_idx": P(fsdp, None),
+            "label": P(fsdp)}

@@ -1,0 +1,60 @@
+"""Logical activation-sharding constraints.
+
+GSPMD propagation alone mis-shards large intermediates (observed: gemma2
+train_4k attention scores replicated over batch — 16 GiB/chip). Models
+therefore pin the batch dim of key activations with
+``with_sharding_constraint``, using *logical* names resolved against a
+launcher-configured axis mapping. When no mapping is configured (CPU
+tests, single-device runs) constraints are identity — model code never
+branches on mesh topology.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_local = threading.local()
+
+
+def set_logical_axes(mapping: dict | None) -> None:
+    """mapping: logical name -> mesh axis (or tuple), e.g.
+    {"batch": ("pod", "data"), "tp": "model"}."""
+    _local.mapping = mapping
+
+
+def get_logical_axes() -> dict | None:
+    return getattr(_local, "mapping", None)
+
+
+@contextlib.contextmanager
+def logical_axes(mapping: dict | None):
+    prev = get_logical_axes()
+    set_logical_axes(mapping)
+    try:
+        yield
+    finally:
+        set_logical_axes(prev)
+
+
+def constrain(x, *logical_dims):
+    """Pin ``x``'s sharding: one logical name (or None) per dim.
+
+    ``None`` dims stay UNCONSTRAINED — propagation may still shard them
+    (e.g. heads over 'model'); pinning them to replicated would forbid
+    that. Use the name ``"rep"`` to force replication of a dim."""
+    mapping = get_logical_axes()
+    if mapping is None:
+        return x
+
+    def resolve(d):
+        if d is None:
+            return P.UNCONSTRAINED
+        if d == "rep":
+            return None
+        return mapping.get(d, P.UNCONSTRAINED)
+
+    spec = P(*(resolve(d) for d in logical_dims))
+    return jax.lax.with_sharding_constraint(x, spec)

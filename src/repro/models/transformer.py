@@ -1,0 +1,700 @@
+"""Unified LM transformer covering the five assigned LM architectures.
+
+One config-driven implementation provides:
+  * GQA attention with optional QKV bias (qwen2.5),
+  * alternating local(sliding-window)+global layers, logit soft-capping,
+    post-norms and embedding scaling (gemma2),
+  * MLA — multi-head latent attention with low-rank Q/KV compression and
+    decoupled RoPE (minicpm3),
+  * MoE FFN via ``repro.models.moe`` (grok-1, phi3.5-moe).
+
+Layers are stacked and ``lax.scan``-ed (for the ``local_global`` pattern
+the scan unit is a (local, global) *pair*), so compile time and HLO size
+are O(1) in depth — a requirement for the 64-layer dry-run cells.
+
+Everything is pure functions over parameter pytrees; shardings live in
+``param_spec`` / ``batch_spec`` below and are consumed by the launcher.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models.moe import MoEConfig, moe_apply, moe_params
+from repro.models.sharding import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_dim: int = 64
+    qk_rope_dim: int = 32
+    v_head_dim: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    attn_softcap: float = 0.0
+    final_softcap: float = 0.0
+    window: int = 0                   # sliding window width (local layers)
+    layer_pattern: str = "global"     # "global" | "local_global"
+    attention: str = "gqa"            # "gqa" | "mla"
+    mla: Optional[MLAConfig] = None
+    moe: Optional[MoEConfig] = None
+    post_norm: bool = False           # gemma2-style post-norms
+    embed_scale: bool = False         # multiply embedding by sqrt(D)
+    tie_embed: bool = False           # lm_head = embed.T (gemma2)
+    act: str = "silu"
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    seq_parallel: bool = True   # shard scan-saved residuals over 'model'
+                                # (Megatron-SP). Refuted for qwen2.5:
+                                # GSPMD re-gathers cost more than the
+                                # carries save (see EXPERIMENTS §Perf)
+
+    @property
+    def n_stack(self) -> int:
+        if self.layer_pattern == "local_global":
+            assert self.n_layers % 2 == 0
+            return self.n_layers // 2
+        return self.n_layers
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding/head rows padded to a multiple of 256 so the vocab
+        dim shards evenly over the 16-way tensor axis (extra logits are
+        never targeted; standard practice). The *logical* vocab is
+        unchanged."""
+        return ((self.vocab + 255) // 256) * 256
+
+    @property
+    def q_dim(self) -> int:
+        if self.attention == "mla":
+            return self.n_heads * (self.mla.qk_nope_dim
+                                   + self.mla.qk_rope_dim)
+        return self.n_heads * self.head_dim
+
+    @property
+    def o_in_dim(self) -> int:
+        if self.attention == "mla":
+            return self.n_heads * self.mla.v_head_dim
+        return self.n_heads * self.head_dim
+
+
+# ==========================================================================
+# Parameter construction
+# ==========================================================================
+
+def _attn_params(rng, cfg: LMConfig) -> dict:
+    d = cfg.d_model
+    s = d ** -0.5
+    if cfg.attention == "mla":
+        m = cfg.mla
+        r = jax.random.split(rng, 5)
+        return {
+            "q_a": L.normal_init(r[0], (d, m.q_lora_rank), s, cfg.dtype),
+            "q_norm": jnp.zeros((m.q_lora_rank,), cfg.dtype),
+            "q_b": L.normal_init(
+                r[1], (m.q_lora_rank, cfg.q_dim),
+                m.q_lora_rank ** -0.5, cfg.dtype),
+            "kv_a": L.normal_init(
+                r[2], (d, m.kv_lora_rank + m.qk_rope_dim), s, cfg.dtype),
+            "kv_norm": jnp.zeros((m.kv_lora_rank,), cfg.dtype),
+            "kv_b": L.normal_init(
+                r[3], (m.kv_lora_rank,
+                       cfg.n_heads * (m.qk_nope_dim + m.v_head_dim)),
+                m.kv_lora_rank ** -0.5, cfg.dtype),
+            "wo": L.normal_init(r[4], (cfg.o_in_dim, d),
+                                cfg.o_in_dim ** -0.5, cfg.dtype),
+        }
+    r = jax.random.split(rng, 4)
+    kv_dim = cfg.n_kv_heads * cfg.head_dim
+    p = {
+        "wq": L.normal_init(r[0], (d, cfg.q_dim), s, cfg.dtype),
+        "wk": L.normal_init(r[1], (d, kv_dim), s, cfg.dtype),
+        "wv": L.normal_init(r[2], (d, kv_dim), s, cfg.dtype),
+        "wo": L.normal_init(r[3], (cfg.q_dim, d),
+                            cfg.q_dim ** -0.5, cfg.dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), cfg.dtype)
+        p["bk"] = jnp.zeros((kv_dim,), cfg.dtype)
+        p["bv"] = jnp.zeros((kv_dim,), cfg.dtype)
+    return p
+
+
+def _layer_params(rng, cfg: LMConfig) -> dict:
+    r_attn, r_ffn = jax.random.split(rng)
+    p = {
+        "ln1": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "ln2": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "attn": _attn_params(r_attn, cfg),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe_params(r_ffn, cfg.d_model, cfg.moe, cfg.dtype)
+    else:
+        p["mlp"] = L.gated_mlp_params(r_ffn, cfg.d_model, cfg.d_ff,
+                                      cfg.dtype)
+    if cfg.post_norm:
+        p["ln1_post"] = jnp.zeros((cfg.d_model,), cfg.dtype)
+        p["ln2_post"] = jnp.zeros((cfg.d_model,), cfg.dtype)
+    return p
+
+
+def init(rng, cfg: LMConfig) -> dict:
+    r_embed, r_blocks, r_head = jax.random.split(rng, 3)
+
+    def one_block(r):
+        if cfg.layer_pattern == "local_global":
+            rl, rg = jax.random.split(r)
+            return {"local": _layer_params(rl, cfg),
+                    "global": _layer_params(rg, cfg)}
+        return _layer_params(r, cfg)
+
+    block_rngs = jax.random.split(r_blocks, cfg.n_stack)
+    blocks = jax.vmap(one_block)(block_rngs)
+    out = {
+        "embed": L.normal_init(r_embed, (cfg.padded_vocab, cfg.d_model),
+                               0.02, cfg.dtype),
+        "blocks": blocks,
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+    }
+    if not cfg.tie_embed:
+        out["lm_head"] = L.normal_init(r_head,
+                                       (cfg.d_model, cfg.padded_vocab),
+                                       cfg.d_model ** -0.5, cfg.dtype)
+    return out
+
+
+def param_count(cfg: LMConfig) -> int:
+    import math
+    params = jax.eval_shape(lambda r: init(r, cfg),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return sum(math.prod(x.shape) for x in jax.tree.leaves(params))
+
+
+# ==========================================================================
+# Forward pass
+# ==========================================================================
+
+def _gqa_project_kv(p: dict, cfg: LMConfig, x: jnp.ndarray,
+                    positions: jnp.ndarray
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, D] -> roped k, v: [B, S, Hkv, dh]."""
+    b, s, _ = x.shape
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def _gqa_attention(p: dict, cfg: LMConfig, x: jnp.ndarray,
+                   positions: jnp.ndarray, window: int,
+                   kv_override=None, kv_mask=None, k_positions=None
+                   ) -> jnp.ndarray:
+    """x: [B, S, D]. kv_override: (k, v) from a decode cache (already
+    roped); ``positions`` may be [S] or per-request [B, S]."""
+    b, s, d = x.shape
+    q = x @ p["wq"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    if kv_override is None:
+        k, v = _gqa_project_kv(p, cfg, x, positions)
+        k_positions = positions
+    else:
+        k, v = kv_override
+    out = L.multi_head_attention(
+        q, k, v, q_positions=positions, k_positions=k_positions,
+        window=window, attn_softcap=cfg.attn_softcap, kv_mask=kv_mask)
+    return out.reshape(b, s, cfg.q_dim) @ p["wo"]
+
+
+def _mla_project(p: dict, cfg: LMConfig, x: jnp.ndarray,
+                 positions: jnp.ndarray
+                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, D] -> (normed latent ckv [B,S,r], roped k_rope
+    [B,S,rope]) — exactly what the MLA decode cache stores."""
+    m = cfg.mla
+    ckv_full = x @ p["kv_a"]                        # [B,S,kv_lora+rope]
+    ckv, k_rope = jnp.split(ckv_full, [m.kv_lora_rank], axis=-1)
+    ckv = L.rms_norm(ckv, p["kv_norm"], cfg.norm_eps)
+    k_rope = L.apply_rope(k_rope[:, :, None, :], positions,
+                          cfg.rope_theta)[:, :, 0, :]  # [B,S,rope]
+    return ckv, k_rope
+
+
+def _mla_attention(p: dict, cfg: LMConfig, x: jnp.ndarray,
+                   positions: jnp.ndarray,
+                   cache_override=None, kv_mask=None, k_positions=None
+                   ) -> jnp.ndarray:
+    """MLA: low-rank compressed Q/KV with decoupled RoPE (DeepSeek-V2
+    style). ``cache_override``: (ckv, k_rope) decode cache — k/v are
+    re-expanded from the cached latent each step (the cache-lean
+    variant; the absorbed-matmul variant is a §Perf item)."""
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    cq = L.rms_norm(x @ p["q_a"], p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["q_b"]).reshape(b, s, h, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    if cache_override is None:
+        ckv, k_rope = _mla_project(p, cfg, x, positions)
+        k_positions = positions
+    else:
+        ckv, k_rope = cache_override                # pre-normed / pre-roped
+    k_rope = k_rope[:, :, None, :]                  # [B,Sk,1,rope]
+    kv = (ckv @ p["kv_b"]).reshape(
+        ckv.shape[0], ckv.shape[1], h, m.qk_nope_dim + m.v_head_dim)
+    k_nope, v = jnp.split(kv, [m.qk_nope_dim], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(
+            k_rope, k_nope.shape[:3] + (m.qk_rope_dim,))], axis=-1)
+    out = L.multi_head_attention(
+        q, k, v, q_positions=positions, k_positions=k_positions,
+        window=0, attn_softcap=cfg.attn_softcap,
+        sm_scale=(m.qk_nope_dim + m.qk_rope_dim) ** -0.5, kv_mask=kv_mask)
+    return out.reshape(b, s, cfg.o_in_dim) @ p["wo"]
+
+
+def _ffn(p: dict, cfg: LMConfig, x: jnp.ndarray
+         ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    if cfg.moe is not None:
+        return moe_apply(p["moe"], x, cfg.moe)
+    return L.gated_mlp_apply(p["mlp"], x, cfg.act), jnp.zeros(
+        (), jnp.float32)
+
+
+def _layer_apply(p: dict, cfg: LMConfig, x: jnp.ndarray,
+                 positions: jnp.ndarray, window: int
+                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps, plus_one=cfg.post_norm)
+    if cfg.attention == "mla":
+        a = _mla_attention(p["attn"], cfg, h, positions)
+    else:
+        a = _gqa_attention(p["attn"], cfg, h, positions, window)
+    if cfg.post_norm:
+        a = L.rms_norm(a, p["ln1_post"], cfg.norm_eps, plus_one=True)
+    x = x + a
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps, plus_one=cfg.post_norm)
+    f, aux = _ffn(p, cfg, h)
+    if cfg.post_norm:
+        f = L.rms_norm(f, p["ln2_post"], cfg.norm_eps, plus_one=True)
+    return x + f, aux
+
+
+def forward_hidden(params: dict, tokens: jnp.ndarray, cfg: LMConfig
+                   ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens: [B, S] -> (final hidden states [B, S, D], aux_loss)."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "batch", None, None)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def block_fn(x, bp):
+        if cfg.layer_pattern == "local_global":
+            x, aux1 = _layer_apply(bp["local"], cfg, x, positions,
+                                   cfg.window)
+            x, aux2 = _layer_apply(bp["global"], cfg, x, positions, 0)
+            return x, aux1 + aux2
+        return _layer_apply(bp, cfg, x, positions, 0 if cfg.window == 0
+                            else cfg.window)
+
+    if cfg.remat:
+        block_fn = jax.checkpoint(
+            block_fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def scan_body(x, bp):
+        x, aux = block_fn(x, bp)
+        if cfg.seq_parallel:
+            # sequence-parallel residual storage (Megatron-SP): the
+            # scan-saved [B, S, D] carries shard over the tensor axis
+            # between layers — 16x less carry memory; XLA re-gathers
+            # inside the block where attention needs the full sequence
+            x = constrain(x, "batch", "tp", None)
+        return x, aux
+
+    x, auxes = jax.lax.scan(scan_body, x, params["blocks"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps,
+                   plus_one=cfg.post_norm)
+    return x, auxes.sum()
+
+
+def forward(params: dict, tokens: jnp.ndarray, cfg: LMConfig
+            ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens: [B, S] -> (logits [B, S, V], aux_loss)."""
+    x, aux = forward_hidden(params, tokens, cfg)
+    head = params["embed"].T if cfg.tie_embed else params["lm_head"]
+    logits = x @ head
+    logits = constrain(logits, "batch", None, "tp")
+    logits = L.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits, aux
+
+
+def loss_fn(params: dict, batch: dict, cfg: LMConfig,
+            seq_chunk: int = 512) -> jnp.ndarray:
+    """batch: {"tokens": [B,S+1] int32} — next-token CE via the
+    seq-chunked head+loss: the [B,S,V] fp32 logits never materialize
+    (layers.chunked_lm_loss)."""
+    tokens = batch["tokens"]
+    x, aux = forward_hidden(params, tokens[:, :-1], cfg)
+    head = params["embed"].T if cfg.tie_embed else params["lm_head"]
+    ce = L.chunked_lm_loss(x, head, tokens[:, 1:],
+                           final_softcap=cfg.final_softcap,
+                           seq_chunk=min(seq_chunk, x.shape[1]))
+    return ce + aux
+
+
+def model_flops_per_token(cfg: LMConfig) -> float:
+    """Analytic MODEL_FLOPS/token = 6·N_active (+ attention terms are
+    reported separately in the roofline tables)."""
+    n = param_count(cfg)
+    if cfg.moe is not None:
+        e, k = cfg.moe.num_experts, cfg.moe.top_k
+        expert = 3 * cfg.d_model * cfg.moe.d_ff_expert
+        n_active = n - cfg.n_layers * (e - k) * expert
+    else:
+        n_active = n
+    return 6.0 * n_active
+
+
+# ==========================================================================
+# KV-cache serving path (prefill + decode)
+# ==========================================================================
+#
+# Requests are RIGHT-padded to the prompt buffer; every position's slot
+# equals its sequence index (full caches) or index % window (ring caches
+# for gemma2's local layers). Right-padding means the plain causal mask
+# is already per-request correct during prefill: padding keys sit at
+# positions >= the request length, and no real query position ever
+# attends forward. At decode, per-request positions ([B, 1]) rope the
+# query, and stored per-slot positions mask the cache — a stale slot is
+# overwritten on exactly the step its position would first become
+# causally visible (see serving/engine.py for the proof sketch).
+
+def _layer_cache_struct(cfg: LMConfig, batch: int, buf: int, window: int
+                        ) -> dict:
+    n = min(window, buf) if window > 0 else buf
+    if cfg.attention == "mla":
+        m = cfg.mla
+        return {
+            "ckv": jnp.zeros((batch, n, m.kv_lora_rank), cfg.dtype),
+            "kr": jnp.zeros((batch, n, m.qk_rope_dim), cfg.dtype),
+        }
+    return {
+        "k": jnp.zeros((batch, n, cfg.n_kv_heads, cfg.head_dim),
+                       cfg.dtype),
+        "v": jnp.zeros((batch, n, cfg.n_kv_heads, cfg.head_dim),
+                       cfg.dtype),
+    }
+
+
+def init_cache(cfg: LMConfig, batch: int, buf: int) -> dict:
+    """Decode cache for ``batch`` request slots of ``buf`` positions.
+
+    Layer entries are stacked [n_stack, ...] so the decode step scans
+    them alongside the stacked block params. ``pos`` arrays hold the
+    sequence position stored in each slot (-1 = empty).
+    """
+    def stack(struct_fn):
+        return jax.tree.map(
+            lambda leaf: jnp.broadcast_to(
+                leaf, (cfg.n_stack,) + leaf.shape).copy(),
+            struct_fn)
+
+    if cfg.layer_pattern == "local_global":
+        entry = {
+            "local": stack(_layer_cache_struct(cfg, batch, buf,
+                                               cfg.window)),
+            "global": stack(_layer_cache_struct(cfg, batch, buf, 0)),
+        }
+        pos = {
+            "pos": jnp.full((batch, buf), -1, jnp.int32),
+            "pos_local": jnp.full((batch, min(cfg.window, buf)), -1,
+                                  jnp.int32),
+        }
+    else:
+        entry = stack(_layer_cache_struct(cfg, batch, buf, 0))
+        pos = {"pos": jnp.full((batch, buf), -1, jnp.int32)}
+    return {"layers": entry, **pos}
+
+
+def _write_full(buf_arr, new, start):
+    """Write new [B, S, ...] at slots [start, start+S)."""
+    return jax.lax.dynamic_update_slice_in_dim(buf_arr, new, start, axis=1)
+
+
+def _write_ring(buf_arr, new, positions):
+    """Scatter new [B, S, ...] at per-request slots positions %% W."""
+    w = buf_arr.shape[1]
+    slots = positions % w                       # [B, S]
+    b = buf_arr.shape[0]
+    bi = jnp.arange(b, dtype=jnp.int32)[:, None]
+    return buf_arr.at[bi, slots].set(new.astype(buf_arr.dtype))
+
+
+def _attn_cached(p, cfg: LMConfig, h, positions, window, lc, k_pos,
+                 prefill_len: int):
+    """Attention through the cache. ``prefill_len`` > 0: prefill mode
+    (positions [S] = arange, write slots [0, S)); else decode (positions
+    [B, 1], per-request scatter). Returns (attn_out, new_layer_cache).
+
+    Prefill *attends with the fresh full-length k/v* and only WRITES the
+    cache: a ring cache holds just the last W positions, but an early
+    prefill query needs keys older than that — reading back through the
+    cache would be wrong (and for full caches, fresh k/v skips the
+    read-back of empty padded slots)."""
+    ring = window > 0
+    if cfg.attention == "mla":
+        ckv_new, kr_new = _mla_project(p["attn"], cfg, h, positions)
+        if prefill_len > 0:
+            if ring:
+                w = lc["ckv"].shape[1]
+                n = min(prefill_len, w)
+                idx = jnp.arange(prefill_len - n, prefill_len,
+                                 dtype=jnp.int32)
+                idx_b = jnp.broadcast_to(idx, (h.shape[0], n))
+                lc = {"ckv": _write_ring(lc["ckv"], ckv_new[:, -n:], idx_b),
+                      "kr": _write_ring(lc["kr"], kr_new[:, -n:], idx_b)}
+            else:
+                lc = {"ckv": _write_full(lc["ckv"], ckv_new, 0),
+                      "kr": _write_full(lc["kr"], kr_new, 0)}
+            out = _mla_attention(p["attn"], cfg, h, positions,
+                                 cache_override=(ckv_new, kr_new),
+                                 k_positions=positions)
+            return out, lc
+        writer = _write_ring if ring else \
+            (lambda b_, n_, pos_: b_.at[
+                jnp.arange(b_.shape[0])[:, None], pos_].set(
+                    n_.astype(b_.dtype)))
+        lc = {"ckv": writer(lc["ckv"], ckv_new, positions),
+              "kr": writer(lc["kr"], kr_new, positions)}
+        out = _mla_attention(p["attn"], cfg, h, positions,
+                             cache_override=(lc["ckv"], lc["kr"]),
+                             k_positions=k_pos)
+        return out, lc
+
+    k_new, v_new = _gqa_project_kv(p["attn"], cfg, h, positions)
+    if prefill_len > 0:
+        if ring:
+            w = lc["k"].shape[1]
+            n = min(prefill_len, w)
+            idx = jnp.arange(prefill_len - n, prefill_len, dtype=jnp.int32)
+            idx_b = jnp.broadcast_to(idx, (h.shape[0], n))
+            lc = {"k": _write_ring(lc["k"], k_new[:, -n:], idx_b),
+                  "v": _write_ring(lc["v"], v_new[:, -n:], idx_b)}
+        else:
+            lc = {"k": _write_full(lc["k"], k_new, 0),
+                  "v": _write_full(lc["v"], v_new, 0)}
+        out = _gqa_attention(p["attn"], cfg, h, positions, window,
+                             kv_override=(k_new, v_new),
+                             k_positions=positions)
+        return out, lc
+    if ring:
+        lc = {"k": _write_ring(lc["k"], k_new, positions),
+              "v": _write_ring(lc["v"], v_new, positions)}
+    else:
+        bi = jnp.arange(h.shape[0])[:, None]
+        lc = {"k": lc["k"].at[bi, positions].set(
+                  k_new.astype(lc["k"].dtype)),
+              "v": lc["v"].at[bi, positions].set(
+                  v_new.astype(lc["v"].dtype))}
+    out = _gqa_attention(p["attn"], cfg, h, positions, window,
+                         kv_override=(lc["k"], lc["v"]),
+                         k_positions=k_pos)
+    return out, lc
+
+
+def _layer_apply_cached(p, cfg: LMConfig, x, positions, window, lc,
+                        k_pos, prefill_len: int):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps, plus_one=cfg.post_norm)
+    a, lc = _attn_cached(p, cfg, h, positions, window, lc, k_pos,
+                         prefill_len)
+    if cfg.post_norm:
+        a = L.rms_norm(a, p["ln1_post"], cfg.norm_eps, plus_one=True)
+    x = x + a
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps, plus_one=cfg.post_norm)
+    f, _ = _ffn(p, cfg, h)
+    if cfg.post_norm:
+        f = L.rms_norm(f, p["ln2_post"], cfg.norm_eps, plus_one=True)
+    return x + f, lc
+
+
+def forward_with_cache(params: dict, tokens: jnp.ndarray, cfg: LMConfig,
+                       cache: dict, positions: jnp.ndarray
+                       ) -> tuple[jnp.ndarray, dict]:
+    """Cache-threaded forward.
+
+    Prefill: tokens [B, P], positions = arange(P) (1D).
+    Decode:  tokens [B, 1], positions [B, 1] (per-request).
+    Returns (logits [B, S, V], updated cache).
+    """
+    prefill_len = tokens.shape[1] if positions.ndim == 1 else 0
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "batch", None, None)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    new_pos = dict(cache)
+    if prefill_len > 0:
+        p_idx = jnp.arange(prefill_len, dtype=jnp.int32)
+        pos_buf = _write_full(cache["pos"],
+                              jnp.broadcast_to(p_idx, tokens.shape), 0)
+        k_pos_global = pos_buf
+        if "pos_local" in cache:
+            w = cache["pos_local"].shape[1]
+            n = min(prefill_len, w)
+            idx = jnp.arange(prefill_len - n, prefill_len,
+                             dtype=jnp.int32)
+            idx_b = jnp.broadcast_to(idx, (tokens.shape[0], n))
+            pos_local = _write_ring(cache["pos_local"], idx_b, idx_b)
+            new_pos["pos_local"] = pos_local
+            k_pos_local = pos_local
+        new_pos["pos"] = pos_buf
+    else:
+        bi = jnp.arange(tokens.shape[0])[:, None]
+        pos_buf = cache["pos"].at[bi, positions].set(positions)
+        new_pos["pos"] = pos_buf
+        k_pos_global = pos_buf
+        if "pos_local" in cache:
+            pos_local = _write_ring(cache["pos_local"], positions,
+                                    positions)
+            new_pos["pos_local"] = pos_local
+            k_pos_local = pos_local
+
+    def body(x, xs):
+        bp, lc = xs
+        if cfg.layer_pattern == "local_global":
+            x, lc_l = _layer_apply_cached(
+                bp["local"], cfg, x, positions, cfg.window, lc["local"],
+                k_pos_local, prefill_len)
+            x, lc_g = _layer_apply_cached(
+                bp["global"], cfg, x, positions, 0, lc["global"],
+                k_pos_global, prefill_len)
+            return x, {"local": lc_l, "global": lc_g}
+        x, lc = _layer_apply_cached(bp, cfg, x, positions, cfg.window,
+                                    lc, k_pos_global, prefill_len)
+        return x, lc
+
+    x, new_layers = jax.lax.scan(body, x, (params["blocks"],
+                                           cache["layers"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps,
+                   plus_one=cfg.post_norm)
+    head = params["embed"].T if cfg.tie_embed else params["lm_head"]
+    logits = x @ head
+    logits = L.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    new_pos["layers"] = new_layers
+    return logits, new_pos
+
+
+# ==========================================================================
+# Sharding specs (FSDP over data axes × TP over 'model')
+# ==========================================================================
+
+def param_spec(cfg: LMConfig, fsdp: Any, tp: str = "model") -> dict:
+    """PartitionSpec pytree matching ``init``'s structure.
+
+    ``fsdp``: axis name (or tuple) the parameter d_model/d_ff dims are
+    ZeRO-3 sharded over; ``tp``: the tensor-parallel axis (heads / ffn /
+    vocab dims).
+    """
+    def attn_spec():
+        if cfg.attention == "mla":
+            return {
+                "q_a": P(None, fsdp, None),
+                "q_norm": P(None, None),
+                "q_b": P(None, fsdp, tp),
+                "kv_a": P(None, fsdp, None),
+                "kv_norm": P(None, None),
+                "kv_b": P(None, fsdp, tp),
+                "wo": P(None, tp, fsdp),
+            }
+        s = {
+            "wq": P(None, fsdp, tp),
+            "wk": P(None, fsdp, tp),
+            "wv": P(None, fsdp, tp),
+            "wo": P(None, tp, fsdp),
+        }
+        if cfg.qkv_bias:
+            s.update({"bq": P(None, tp), "bk": P(None, tp),
+                      "bv": P(None, tp)})
+        return s
+
+    def layer_spec():
+        sp = {
+            "ln1": P(None, None),
+            "ln2": P(None, None),
+            "attn": attn_spec(),
+        }
+        if cfg.moe is not None:
+            e = cfg.moe.num_experts
+            if e % 16 == 0:
+                # expert parallelism over the 16-way tp axis
+                sp["moe"] = {
+                    "router": P(None, fsdp, None),
+                    "w_gate": P(None, tp, fsdp, None),
+                    "w_up": P(None, tp, fsdp, None),
+                    "w_down": P(None, tp, None, fsdp),
+                }
+            else:
+                # tensor parallelism inside each expert (grok: 8 experts)
+                sp["moe"] = {
+                    "router": P(None, fsdp, None),
+                    "w_gate": P(None, None, fsdp, tp),
+                    "w_up": P(None, None, fsdp, tp),
+                    "w_down": P(None, None, tp, fsdp),
+                }
+        else:
+            sp["mlp"] = {
+                "w_gate": P(None, fsdp, tp),
+                "w_up": P(None, fsdp, tp),
+                "w_down": P(None, tp, fsdp),
+            }
+        if cfg.post_norm:
+            sp["ln1_post"] = P(None, None)
+            sp["ln2_post"] = P(None, None)
+        return sp
+
+    block = layer_spec()
+    if cfg.layer_pattern == "local_global":
+        block = {"local": layer_spec(), "global": layer_spec()}
+    out = {
+        "embed": P(tp, fsdp),
+        "blocks": block,
+        "final_norm": P(None),
+    }
+    if not cfg.tie_embed:
+        out["lm_head"] = P(fsdp, tp)
+    return out
+
+
+def batch_spec(fsdp: Any) -> dict:
+    return {"tokens": P(fsdp, None)}

@@ -1,0 +1,247 @@
+"""Batched LM serving: prefill/decode with slot-based continuous batching.
+
+Correctness model (right-padding; see models/transformer.py):
+
+* Requests are right-padded into a fixed prompt buffer; the plain causal
+  mask is per-request correct during prefill, because padding keys live
+  at positions the real queries never attend to.
+* At decode, request ``b`` generates at position ``len_b + t`` — written
+  into slot ``position`` (full cache) or ``position % W`` (ring). A
+  stale slot (prefill garbage at index g >= len_b) only becomes causally
+  visible when the query reaches position g — the exact step at which
+  the new token is written into slot g (g % W) *before* attention runs,
+  so garbage is never attended. Stored per-slot positions drive the
+  causal/window mask; -1 marks empty slots.
+
+``Engine`` implements **continuous batching**: a fixed number of slots;
+finished requests release their slot mid-flight and a queued request is
+prefilled into it (a [1, P] prefill jit + cache splice) while the other
+slots keep decoding — no global drain between requests.
+
+The engine is jit-compiled per (batch_slots, prompt_buf, cache_buf)
+triple; production serving lowers the same ``decode_step`` under mesh
+shardings (launch/dryrun.py's ``serve_step`` cells).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+
+
+# --------------------------------------------------------------------------
+# jitted kernels (static: cfg identity, shapes)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _prefill(params, tokens, cache, cfg):
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    logits, cache = T.forward_with_cache(params, tokens, cfg, cache,
+                                         positions)
+    return logits, cache
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(2,))
+def _decode(params, tokens, cache, positions, cfg):
+    logits, cache = T.forward_with_cache(params, tokens[:, None], cfg,
+                                         cache, positions[:, None])
+    return logits[:, 0], cache
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _splice(batch_cache, one_cache, slot):
+    """Copy a single-request cache into slot ``slot`` of the batch cache."""
+    def put(b, o):
+        if b.ndim >= 2 and o.shape[0] == b.shape[0]:   # stacked layer leaf
+            # layer-stacked leaves: [L, 1, ...] -> write [L, slot, ...]
+            return jax.lax.dynamic_update_slice_in_dim(
+                b, o.astype(b.dtype), slot, axis=1)
+        return jax.lax.dynamic_update_slice_in_dim(
+            b, o.astype(b.dtype), slot, axis=0)
+
+    # pos arrays are [B, S]; layer leaves are [L, B, S, ...]
+    out = {}
+    for key, val in batch_cache.items():
+        if key == "layers":
+            out[key] = jax.tree.map(
+                lambda b, o: jax.lax.dynamic_update_slice_in_dim(
+                    b, o.astype(b.dtype), slot, axis=1), val,
+                one_cache[key])
+        else:
+            out[key] = jax.lax.dynamic_update_slice_in_dim(
+                val, one_cache[key].astype(val.dtype), slot, axis=0)
+    return out
+
+
+def greedy(logits: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample_top_p(logits: jnp.ndarray, rng, p: float = 0.9,
+                 temp: float = 1.0) -> jnp.ndarray:
+    """Nucleus sampling (vectorized over the batch)."""
+    logits = logits / max(temp, 1e-6)
+    sorted_idx = jnp.argsort(-logits, axis=-1)
+    sorted_logits = jnp.take_along_axis(logits, sorted_idx, axis=-1)
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    mask = jnp.cumsum(probs, axis=-1) - probs > p
+    sorted_logits = jnp.where(mask, -1e30, sorted_logits)
+    choice = jax.random.categorical(rng, sorted_logits, axis=-1)
+    return jnp.take_along_axis(sorted_idx, choice[:, None],
+                               axis=-1)[:, 0].astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# Engine
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # int32 [len]
+    max_new: int
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    """Continuous-batching serving engine.
+
+    Slots decode in lockstep (one fused decode step per tick); empty or
+    finished slots are refilled from the queue via single-request
+    prefill + cache splice. Per-request positions make mixed-progress
+    slots correct.
+    """
+
+    def __init__(self, params, cfg: T.LMConfig, *, slots: int = 4,
+                 prompt_buf: int = 64, cache_buf: int = 256,
+                 eos_id: int = -1):
+        self.params = params
+        self.cfg = cfg
+        self.slots = slots
+        self.prompt_buf = prompt_buf
+        self.cache_buf = cache_buf
+        self.eos_id = eos_id
+        self.cache = T.init_cache(cfg, slots, cache_buf)
+        self.active: list[Optional[Request]] = [None] * slots
+        self.lengths = np.zeros(slots, np.int32)    # tokens in cache
+        self.last_token = np.zeros(slots, np.int32)
+        self.queue: list[Request] = []
+        self._uid = 0
+
+    def submit(self, prompt, max_new: int = 32) -> int:
+        self._uid += 1
+        self.queue.append(Request(self._uid, np.asarray(prompt, np.int32),
+                                  max_new))
+        return self._uid
+
+    # -- internals ---------------------------------------------------------
+
+    def _admit(self):
+        """Fill free slots from the queue (prefill + splice)."""
+        for s in range(self.slots):
+            if self.active[s] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            plen = len(req.prompt)
+            assert plen <= self.prompt_buf, "prompt exceeds buffer"
+            toks = np.zeros((1, self.prompt_buf), np.int32)
+            toks[0, :plen] = req.prompt
+            one_cache = T.init_cache(self.cfg, 1, self.cache_buf)
+            logits, one_cache = _prefill(self.params, jnp.asarray(toks),
+                                         one_cache, self.cfg)
+            # mark slots beyond the real prompt as empty again
+            pos = np.array(one_cache["pos"])
+            pos[0, plen:self.prompt_buf] = -1
+            one_cache = {**one_cache, "pos": jnp.asarray(pos)}
+            if "pos_local" in one_cache:
+                pl = np.array(one_cache["pos_local"])
+                pl[pl >= plen] = -1
+                one_cache = {**one_cache, "pos_local": jnp.asarray(pl)}
+            self.cache = _splice(self.cache, one_cache, s)
+            self.active[s] = req
+            self.lengths[s] = plen
+            self.last_token[s] = int(greedy(logits[:, plen - 1])[0])
+            req.out_tokens.append(int(self.last_token[s]))
+
+    def _retire(self):
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            hit_eos = req.out_tokens and req.out_tokens[-1] == self.eos_id
+            if len(req.out_tokens) >= req.max_new or hit_eos or \
+                    self.lengths[s] + 1 >= self.cache_buf:
+                req.done = True
+                self.active[s] = None
+
+    def step(self) -> None:
+        """One engine tick: admit, decode every active slot, retire."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return
+        tokens = jnp.asarray(self.last_token)
+        positions = jnp.asarray(self.lengths)
+        logits, self.cache = _decode(self.params, tokens, self.cache,
+                                     positions, self.cfg)
+        nxt = np.asarray(greedy(logits))
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.lengths[s] += 1
+            self.last_token[s] = nxt[s]
+            req.out_tokens.append(int(nxt[s]))
+        self._retire()
+
+    def run(self) -> list[Request]:
+        """Drain queue + slots; returns all completed requests."""
+        finished: list[Request] = []
+        seen: set[int] = set()
+        all_reqs = list(self.queue)
+        while self.queue or any(r is not None for r in self.active):
+            self.step()
+            for r in all_reqs:
+                if r.done and r.uid not in seen:
+                    seen.add(r.uid)
+                    finished.append(r)
+        return finished
+
+
+def generate(params, cfg: T.LMConfig, prompts: np.ndarray,
+             max_new: int = 16, cache_buf: int = 0) -> np.ndarray:
+    """Simple batched greedy generation (no continuous batching):
+    prompts [B, P] right-padded with -1."""
+    b, p = prompts.shape
+    lengths = np.asarray((prompts >= 0).sum(axis=1), np.int32)
+    toks = np.where(prompts >= 0, prompts, 0).astype(np.int32)
+    buf = cache_buf or (p + max_new)
+    cache = T.init_cache(cfg, b, buf)
+    logits, cache = _prefill(params, jnp.asarray(toks), cache, cfg)
+    # void padding slots
+    pos = np.array(cache["pos"])
+    for i in range(b):
+        pos[i, lengths[i]:p] = -1
+    cache = {**cache, "pos": jnp.asarray(pos)}
+    if "pos_local" in cache:
+        pl = np.array(cache["pos_local"])
+        for i in range(b):
+            pl[i][pl[i] >= lengths[i]] = -1
+        cache = {**cache, "pos_local": jnp.asarray(pl)}
+
+    last = np.asarray(greedy(
+        jnp.take_along_axis(logits, jnp.asarray(lengths - 1)[:, None, None],
+                            axis=1)[:, 0]))
+    out = [last]
+    positions = lengths.copy()
+    for _ in range(max_new - 1):
+        logits1, cache = _decode(params, jnp.asarray(last), cache,
+                                 jnp.asarray(positions), cfg)
+        last = np.asarray(greedy(logits1))
+        out.append(last)
+        positions += 1
+    return np.stack(out, axis=1)

@@ -1,0 +1,159 @@
+"""Hand-rolled optimizers (no optax): AdamW, SGD-momentum, global-norm
+clipping, cosine/linear schedules.
+
+Optimizers are (init, update) pairs over parameter pytrees. Moment dtype
+is configurable — grok-1-scale configs keep m/v in bf16 so the optimizer
+state fits the 16 GB/chip v5e HBM budget (see configs/grok_1_314b.py);
+update math always runs in fp32 and casts back on store.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable      # params -> opt_state
+    update: Callable    # (grads, opt_state, params, step) -> (updates, new_state)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), \
+        norm
+
+
+# ==========================================================================
+# Schedules
+# ==========================================================================
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5
+                         * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def constant_schedule(lr_val: float) -> Callable:
+    return lambda step: jnp.asarray(lr_val, jnp.float32)
+
+
+# ==========================================================================
+# AdamW
+# ==========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: Optional[object] = None   # None = same as param
+
+
+def adamw(cfg: AdamWConfig) -> Optimizer:
+    lr_fn = cfg.lr if callable(cfg.lr) else constant_schedule(cfg.lr)
+
+    def init(params):
+        def zeros(p):
+            dt = cfg.moment_dtype or p.dtype
+            return jnp.zeros(p.shape, dt)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        if cfg.clip_norm > 0:
+            grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+        else:
+            gnorm = global_norm(grads)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        lr = lr_fn(step)
+        bc1 = 1.0 - cfg.b1 ** t
+        bc2 = 1.0 - cfg.b2 ** t
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            mf = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+            vf = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * gf * gf
+            mh = mf / bc1
+            vh = vf / bc2
+            delta = mh / (jnp.sqrt(vh) + cfg.eps)
+            if cfg.weight_decay > 0 and p.ndim >= 2:   # decay matrices only
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            return ((-lr * delta).astype(p.dtype),
+                    mf.astype(m.dtype), vf.astype(v.dtype))
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        updates = jax.tree.map(lambda o: o[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"m": new_m, "v": new_v}, gnorm
+
+    return Optimizer(init=init, update=update)
+
+
+# ==========================================================================
+# SGD (momentum)
+# ==========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class SGDConfig:
+    lr: Callable | float = 1e-2
+    momentum: float = 0.9
+    clip_norm: float = 0.0
+
+
+def sgd(cfg: SGDConfig) -> Optimizer:
+    lr_fn = cfg.lr if callable(cfg.lr) else constant_schedule(cfg.lr)
+
+    def init(params):
+        if cfg.momentum == 0.0:
+            return {}
+        return {"mu": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, params, step):
+        if cfg.clip_norm > 0:
+            grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+        else:
+            gnorm = global_norm(grads)
+        lr = lr_fn(step)
+        if cfg.momentum == 0.0:
+            updates = jax.tree.map(
+                lambda g, p: (-lr * g.astype(jnp.float32)).astype(p.dtype),
+                grads, params)
+            return updates, state, gnorm
+        new_mu = jax.tree.map(
+            lambda mu, g: cfg.momentum * mu + g.astype(mu.dtype),
+            state["mu"], grads)
+        updates = jax.tree.map(
+            lambda mu, p: (-lr * mu.astype(jnp.float32)).astype(p.dtype),
+            new_mu, params)
+        return updates, {"mu": new_mu}, gnorm
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u, params, updates)

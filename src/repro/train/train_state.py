@@ -1,0 +1,104 @@
+"""TrainState: the checkpointable unit (params + optimizer state + step).
+
+A plain pytree (dict), so it flows through jit/shard_map/checkpoint
+without special handling. ``sharding_tree`` mirrors the state structure
+with NamedShardings so the launcher can place every leaf.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import Optimizer, apply_updates
+
+
+def create(params: Any, opt: Optimizer) -> dict:
+    return {
+        "params": params,
+        "opt": opt.init(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_train_step(loss_fn: Callable, opt: Optimizer,
+                    accum_steps: int = 1,
+                    accum_dtype=None) -> Callable:
+    """Build ``step(state, batch) -> (state, metrics)``.
+
+    ``loss_fn(params, batch) -> scalar``. The returned function is NOT
+    jitted here — the launcher jits it with in/out shardings; tests and
+    examples jit it bare.
+
+    ``accum_steps`` > 1 enables gradient accumulation: the global batch
+    is split into microbatches on the leading dim and scanned, cutting
+    live activation memory by the accumulation factor (grads accumulate
+    in fp32; numerics equal the single-shot step up to fp summation
+    order — tested). The production lever for fitting large
+    (batch × seq) cells into 16 GB/chip HBM.
+    """
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def step(state: dict, batch: dict):
+        if accum_steps == 1:
+            loss, grads = grads_of(state["params"], batch)
+        else:
+            def split(x):
+                a = accum_steps
+                assert x.shape[0] % a == 0, (x.shape, a)
+                return x.reshape(a, x.shape[0] // a, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype or jnp.float32),
+                state["params"])
+
+            def body(acc, mb):
+                g_acc, l_acc = acc
+                l, g = grads_of(state["params"], mb)
+                g_acc = jax.tree.map(
+                    lambda a_, g_: a_ + g_.astype(a_.dtype), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            (g_sum, l_sum), _ = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32)), micro)
+            loss = l_sum / accum_steps
+            grads = jax.tree.map(
+                lambda g_, p: (g_ / accum_steps).astype(p.dtype),
+                g_sum, state["params"])
+        updates, new_opt, gnorm = opt.update(
+            grads, state["opt"], state["params"], state["step"])
+        new_params = apply_updates(state["params"], updates)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = {"loss": loss.astype(jnp.float32), "grad_norm": gnorm}
+        return new_state, metrics
+
+    return step
+
+
+def state_sharding_tree(state_shapes, mesh, param_spec_tree,
+                        replicated_spec):
+    """NamedSharding tree for a TrainState: params and both Adam moments
+    share ``param_spec_tree`` (ZeRO: optimizer state sharded exactly like
+    its parameter); step is replicated."""
+    from jax.sharding import NamedSharding
+
+    def shard(spec):
+        return NamedSharding(mesh, spec)
+
+    params_sh = jax.tree.map(shard, param_spec_tree)
+    opt_shapes = state_shapes["opt"]
+    opt_sh = {}
+    for key, sub in opt_shapes.items():
+        # moments mirror the param tree structure
+        opt_sh[key] = jax.tree.map(shard, param_spec_tree)
+    return {"params": params_sh, "opt": opt_sh,
+            "step": shard(replicated_spec)}
+
+
+def param_count(state: dict) -> int:
+    return sum(int(jnp.size(x)) for x in jax.tree.leaves(state["params"]))

@@ -1,0 +1,199 @@
+"""The paper's core: Connected Components correctness + work-efficiency
+properties, all variants, against the union-find oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cc import (METHODS, WorkCounters, connected_components,
+                           connected_components_hostloop,
+                           connected_components_pallas, num_components)
+from repro.core.segmentation import (adaptive_num_segments,
+                                     plan_segmentation)
+from repro.core.unionfind import connected_components_oracle
+from repro.graphs import generators as G
+
+
+def oracle_check(edges, n, **kw):
+    want = connected_components_oracle(edges, n)
+    for m in METHODS:
+        got = connected_components(edges, n, method=m, **kw)
+        np.testing.assert_array_equal(
+            np.asarray(got.labels), want, err_msg=f"method={m}")
+    return want
+
+
+# --------------------------------------------------------------------------
+# Deterministic structure tests
+# --------------------------------------------------------------------------
+
+def test_empty_graph():
+    for m in METHODS:
+        r = connected_components(np.zeros((0, 2)), 5, method=m)
+        np.testing.assert_array_equal(np.asarray(r.labels),
+                                      np.arange(5))
+
+
+def test_zero_nodes():
+    r = connected_components(np.zeros((0, 2)), 0)
+    assert r.labels.shape == (0,)
+
+
+def test_chain_star_cliques(rng):
+    for g in (G.chain(17), G.star(9), G.disjoint_cliques(4, 5),
+              G.grid_road(8, seed=1)):
+        oracle_check(g.edges, g.num_nodes)
+
+
+def test_self_loops_and_duplicates():
+    edges = np.array([[0, 0], [1, 2], [1, 2], [2, 1], [3, 3]])
+    want = oracle_check(edges, 5)
+    assert num_components(want) == 4   # {0},{1,2},{3},{4}
+
+
+def test_labels_are_canonical_minima(rng):
+    g = G.rmat(8, 4, seed=3)
+    r = connected_components(g.edges, g.num_nodes)
+    labels = np.asarray(r.labels)
+    for comp in np.unique(labels):
+        members = np.where(labels == comp)[0]
+        assert comp == members.min()
+
+
+# --------------------------------------------------------------------------
+# Property tests (hypothesis)
+# --------------------------------------------------------------------------
+
+edge_lists = st.integers(2, 40).flatmap(
+    lambda n: st.tuples(
+        st.just(n),
+        st.lists(st.tuples(st.integers(0, n - 1),
+                           st.integers(0, n - 1)),
+                 min_size=0, max_size=120)))
+
+
+@settings(max_examples=30, deadline=None)
+@given(edge_lists)
+def test_all_methods_match_oracle(case):
+    n, edges = case
+    edges = np.asarray(edges, np.int32).reshape(-1, 2)
+    oracle_check(edges, n)
+
+
+@settings(max_examples=15, deadline=None)
+@given(edge_lists, st.integers(0, 2**31 - 1))
+def test_permutation_equivariance(case, seed):
+    """Relabeling vertices by a permutation perm maps component labels
+    consistently: labels'(perm[v]) == min(perm[component of v])."""
+    n, edges = case
+    edges = np.asarray(edges, np.int32).reshape(-1, 2)
+    perm = np.random.default_rng(seed).permutation(n).astype(np.int32)
+    base = np.asarray(connected_components(edges, n).labels)
+    permuted = np.asarray(
+        connected_components(perm[edges] if len(edges) else edges,
+                             n).labels)
+    for v in range(n):
+        comp = np.where(base == base[v])[0]
+        assert permuted[perm[v]] == perm[comp].min()
+
+
+@settings(max_examples=15, deadline=None)
+@given(edge_lists)
+def test_idempotent_relabel(case):
+    """Running CC on (v, label(v)) edges reproduces the same labels."""
+    n, edges = case
+    edges = np.asarray(edges, np.int32).reshape(-1, 2)
+    labels = np.asarray(connected_components(edges, n).labels)
+    star_edges = np.stack([np.arange(n, dtype=np.int32), labels], 1)
+    again = np.asarray(connected_components(star_edges, n).labels)
+    np.testing.assert_array_equal(labels, again)
+
+
+@settings(max_examples=10, deadline=None)
+@given(edge_lists, st.integers(1, 9))
+def test_segment_count_does_not_change_answer(case, s):
+    n, edges = case
+    edges = np.asarray(edges, np.int32).reshape(-1, 2)
+    want = connected_components_oracle(edges, n)
+    got = connected_components(edges, n, method="adaptive",
+                               num_segments=s)
+    np.testing.assert_array_equal(np.asarray(got.labels), want)
+
+
+# --------------------------------------------------------------------------
+# Work-efficiency claims (the paper's currency)
+# --------------------------------------------------------------------------
+
+def test_adaptive_heuristic_value():
+    assert adaptive_num_segments(58_000_000, 24_000_000) == 5   # usa-osm
+    assert adaptive_num_segments(182_000_000, 2_000_000) == 182
+    assert adaptive_num_segments(10, 1000) == 1
+
+
+def test_segmentation_plan_covers_edges():
+    plan = plan_segmentation(1000, 300)
+    assert plan.num_segments == adaptive_num_segments(1000, 300)
+    assert plan.num_segments * plan.segment_size >= 1000
+
+
+def test_multijump_reduces_syncs_vs_soman():
+    """Fig. 5 mechanism: Multi-Jump removes the per-sweep host
+    convergence checks of the Soman baseline."""
+    g = G.grid_road(24, seed=2)
+    soman = connected_components(g.edges, g.num_nodes, method="soman")
+    mj = connected_components(g.edges, g.num_nodes, method="multijump")
+    assert int(mj.work.sync_rounds) < int(soman.work.sync_rounds)
+    np.testing.assert_array_equal(np.asarray(soman.labels),
+                                  np.asarray(mj.labels))
+
+
+def test_atomic_hook_single_pass_on_easy_graph():
+    """Atomic-Hook (root chase) connects a star in one hook round."""
+    g = G.star(64)
+    r = connected_components(g.edges, g.num_nodes, method="atomic_hook")
+    assert int(r.work.hook_rounds) <= 2
+    assert num_components(r.labels) == 1
+
+
+def test_adaptive_fewer_jump_sweeps_than_multijump_on_road():
+    """Intermediate compressions shorten chases on high-diameter
+    graphs (the paper's road-map speedup mechanism)."""
+    g = G.grid_road(40, extra_prob=0.0, seed=5)
+    mj = connected_components(g.edges, g.num_nodes, method="multijump")
+    ad = connected_components(g.edges, g.num_nodes, method="adaptive")
+    assert int(ad.work.jump_sweeps) <= int(mj.work.jump_sweeps) * 2
+    np.testing.assert_array_equal(np.asarray(mj.labels),
+                                  np.asarray(ad.labels))
+
+
+def test_hostloop_matches_and_counts_syncs():
+    g = G.disjoint_cliques(3, 6, seed=0)
+    labels, stats = connected_components_hostloop(
+        g.edges, g.num_nodes, method="soman")
+    np.testing.assert_array_equal(
+        labels, connected_components_oracle(g.edges, g.num_nodes))
+    assert stats["sync_rounds"] >= stats["hook_rounds"]
+
+
+# --------------------------------------------------------------------------
+# Pallas kernel backend
+# --------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(edge_lists)
+def test_pallas_backend_matches_oracle(case):
+    n, edges = case
+    edges = np.asarray(edges, np.int32).reshape(-1, 2)
+    want = connected_components_oracle(edges, n)
+    got = connected_components_pallas(edges, n, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_pallas_on_structured_graphs():
+    for g in (G.grid_road(12, seed=7), G.rmat(7, 4, seed=7),
+              G.disjoint_cliques(5, 4)):
+        want = connected_components_oracle(g.edges, g.num_nodes)
+        got = connected_components_pallas(g.edges, g.num_nodes,
+                                          interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), want)

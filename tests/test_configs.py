@@ -1,0 +1,113 @@
+"""Config registry: all 40 cells well-formed; smoke configs small."""
+import math
+
+import jax
+import pytest
+
+from repro.configs import ARCH_IDS, all_cells, get_arch
+
+
+def test_registry_has_ten_archs_forty_cells():
+    assert len(ARCH_IDS) == 10
+    cells = all_cells()
+    assert len(cells) == 40
+    skipped = [(a, s) for a, s, r in cells if r]
+    # exactly the pure-full-attention long_500k cells skip
+    assert set(skipped) == {
+        ("qwen2.5-32b", "long_500k"), ("minicpm3-4b", "long_500k"),
+        ("grok-1-314b", "long_500k"),
+        ("phi3.5-moe-42b-a6.6b", "long_500k")}
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_input_specs_are_structs(arch_id):
+    mod = get_arch(arch_id)
+    for shape in mod.SHAPES:
+        if mod.skip_reason(shape):
+            continue
+        specs = mod.input_specs(shape)
+        leaves = jax.tree.leaves(specs)
+        assert leaves, (arch_id, shape)
+        for leaf in leaves:
+            if hasattr(leaf, "shape"):
+                assert all(d > 0 for d in leaf.shape)
+        assert mod.step_kind(shape) in ("train", "prefill", "decode",
+                                        "serve", "retrieval")
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_configs_are_small(arch_id):
+    mod = get_arch(arch_id)
+    cfg = mod.make_smoke_config()
+    # a smoke config must instantiate in well under a GB
+    if mod.FAMILY == "lm":
+        from repro.models.transformer import param_count
+        assert param_count(cfg) < 5e6, arch_id
+    assert "smoke" in cfg.name
+
+
+def test_assigned_dims_exact():
+    """The exact architecture numbers from the assignment."""
+    q = get_arch("qwen2.5-32b").make_config()
+    assert (q.n_layers, q.d_model, q.n_heads, q.n_kv_heads, q.d_ff,
+            q.vocab) == (64, 5120, 40, 8, 27648, 152064)
+    assert q.qkv_bias
+    g = get_arch("gemma2-2b").make_config()
+    assert (g.n_layers, g.d_model, g.n_heads, g.n_kv_heads, g.d_ff,
+            g.vocab) == (26, 2304, 8, 4, 9216, 256000)
+    assert g.layer_pattern == "local_global" and g.attn_softcap > 0
+    m = get_arch("minicpm3-4b").make_config()
+    assert (m.n_layers, m.d_model, m.n_heads, m.d_ff, m.vocab) == \
+        (62, 2560, 40, 6400, 73448)
+    assert m.attention == "mla"
+    k = get_arch("grok-1-314b").make_config()
+    assert (k.n_layers, k.d_model, k.n_heads, k.n_kv_heads, k.vocab) == \
+        (64, 6144, 48, 8, 131072)
+    assert k.moe.num_experts == 8 and k.moe.top_k == 2
+    p = get_arch("phi3.5-moe-42b-a6.6b").make_config()
+    assert (p.n_layers, p.d_model, p.n_heads, p.vocab) == \
+        (32, 4096, 32, 32064)
+    assert p.moe.num_experts == 16 and p.moe.top_k == 2
+    n = get_arch("nequip").make_config()
+    assert (n.n_layers, n.d_hidden, n.l_max, n.n_rbf, n.cutoff) == \
+        (5, 32, 2, 8, 5.0)
+    gg = get_arch("gatedgcn").make_config()
+    assert (gg.n_layers, gg.d_hidden) == (16, 70)
+    sa = get_arch("graphsage-reddit").make_config()
+    assert (sa.n_layers, sa.d_hidden) == (2, 128)
+    gi = get_arch("gin-tu").make_config("molecule")
+    assert (gi.n_layers, gi.d_hidden) == (5, 64)
+    d = get_arch("dcn-v2").make_config()
+    assert (d.n_dense, d.n_sparse, d.embed_dim, d.n_cross) == \
+        (13, 26, 16, 3)
+    assert d.mlp == (1024, 1024, 512)
+
+
+def test_shape_sets_match_assignment():
+    from repro.configs.lm_common import SHAPE_DEFS as LM
+    assert LM["train_4k"] == dict(kind="train", seq=4096, batch=256)
+    assert LM["prefill_32k"] == dict(kind="prefill", seq=32768, batch=32)
+    assert LM["decode_32k"] == dict(kind="decode", seq=32768, batch=128)
+    assert LM["long_500k"] == dict(kind="decode", seq=524288, batch=1)
+    from repro.configs.dcn_v2 import SHAPE_DEFS as RS
+    assert RS["train_batch"]["batch"] == 65536
+    assert RS["serve_bulk"]["batch"] == 262144
+    assert RS["retrieval_cand"]["candidates"] == 1_000_000
+
+
+def test_mesh_construction_function_not_constant():
+    import repro.launch.mesh as mesh_mod
+    import inspect
+    src = inspect.getsource(mesh_mod)
+    assert "def make_production_mesh" in src
+    # importing the module must not have created a mesh
+    assert not any(isinstance(v, jax.sharding.Mesh)
+                   for v in vars(mesh_mod).values())
+
+
+def test_dryrun_sets_xla_flags_first():
+    path = "src/repro/launch/dryrun.py"
+    with open(path) as f:
+        lines = f.read().splitlines()
+    assert lines[0] == "import os"
+    assert "xla_force_host_platform_device_count=512" in lines[1]

@@ -1,0 +1,140 @@
+"""LM transformer family: all five smoke configs, attention variants,
+decode==forward consistency, loss equivalences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.serving import engine as E
+
+LM_ARCHS = ("qwen2.5-32b", "gemma2-2b", "minicpm3-4b", "grok-1-314b",
+            "phi3.5-moe-42b-a6.6b")
+
+
+@pytest.fixture(params=LM_ARCHS)
+def smoke(request):
+    cfg = get_arch(request.param).make_smoke_config()
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    return request.param, cfg, params
+
+
+def test_forward_shapes_and_finite(smoke, rng):
+    name, cfg, params = smoke
+    toks = jnp.asarray(rng.integers(1, cfg.vocab, (2, 16)), jnp.int32)
+    logits, aux = T.forward(params, toks, cfg)
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert np.isfinite(float(aux))
+
+
+def test_loss_decreases_under_training(smoke, rng):
+    from repro.train import loop
+    from repro.train.optimizer import adamw, AdamWConfig
+    name, cfg, params = smoke
+    toks = jnp.asarray(rng.integers(1, cfg.vocab, (4, 17)), jnp.int32)
+    stream = iter(lambda: {"tokens": toks}, None)
+    state, hist = loop.fit(
+        loss_fn=lambda p, b: T.loss_fn(p, b, cfg), params=params,
+        opt=adamw(AdamWConfig(lr=1e-3, weight_decay=0.0)),
+        stream=stream, steps=30, log_every=30, log_fn=lambda s: None)
+    first = float(T.loss_fn(params, {"tokens": toks}, cfg))
+    last = float(T.loss_fn(state["params"], {"tokens": toks}, cfg))
+    assert last < first, (name, first, last)
+
+
+def test_chunked_loss_equals_dense(smoke, rng):
+    name, cfg, params = smoke
+    toks = jnp.asarray(rng.integers(1, cfg.vocab, (2, 13)), jnp.int32)
+    logits, aux = T.forward(params, toks[:, :-1], cfg)
+    dense = L.cross_entropy_loss(logits, toks[:, 1:]) + aux
+    chunked = T.loss_fn(params, {"tokens": toks}, cfg, seq_chunk=5)
+    assert abs(float(dense) - float(chunked)) < 1e-4, name
+
+
+def test_decode_matches_forward(smoke, rng):
+    name, cfg, params = smoke
+    B, S = 2, 12
+    toks = rng.integers(1, cfg.vocab, (B, S)).astype(np.int32)
+    full_logits, _ = T.forward(params, jnp.asarray(toks), cfg)
+    full_next = np.asarray(jnp.argmax(full_logits, -1))
+    lens = np.array([7, 12], np.int32)
+    prompts = np.where(np.arange(S)[None] < lens[:, None], toks, -1)
+    gen = E.generate(params, cfg, prompts, max_new=3, cache_buf=S + 8)
+    assert gen[0, 0] == full_next[0, lens[0] - 1], name
+    assert gen[1, 0] == full_next[1, lens[1] - 1], name
+    # continuation consistency
+    ext = np.concatenate([toks[:1, :lens[0]], gen[:1, :2]], 1)
+    fl, _ = T.forward(params, jnp.asarray(ext), cfg)
+    assert gen[0, 2] == np.asarray(jnp.argmax(fl, -1))[0, -1], name
+
+
+def test_blocked_attention_equals_dense(rng):
+    B, S, H, D = 2, 2048, 4, 32
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, 2, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, 2, D)), jnp.float32)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    for window, cap in ((0, 0.0), (64, 0.0), (0, 25.0)):
+        blk = L._attention_blocked(q, k, v, q_positions=pos,
+                                   k_positions=pos, window=window,
+                                   attn_softcap=cap, scale=D ** -0.5,
+                                   kv_mask=None, block_k=256)
+        dns = L._attention_dense(q, k, v, q_positions=pos,
+                                 k_positions=pos, window=window,
+                                 attn_softcap=cap, scale=D ** -0.5,
+                                 kv_mask=None)
+        np.testing.assert_allclose(np.asarray(blk), np.asarray(dns),
+                                   atol=3e-6)
+
+
+def test_rope_batched_positions_consistent(rng):
+    x = jnp.asarray(rng.standard_normal((2, 3, 4, 16)), jnp.float32)
+    pos = jnp.asarray([5, 9, 11], jnp.int32)
+    a = L.apply_rope(x, pos)
+    b = L.apply_rope(x, jnp.broadcast_to(pos, (2, 3)))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_param_counts_match_advertised():
+    sizes = {"qwen2.5-32b": 32, "gemma2-2b": 2.6, "minicpm3-4b": 4,
+             "grok-1-314b": 314, "phi3.5-moe-42b-a6.6b": 42}
+    for name, want_b in sizes.items():
+        cfg = get_arch(name).make_config()
+        n = T.param_count(cfg)
+        assert 0.7 * want_b < n / 1e9 < 1.35 * want_b, (name, n / 1e9)
+
+
+def test_moe_aux_loss_nonzero(rng):
+    cfg = get_arch("phi3.5-moe-42b-a6.6b").make_smoke_config()
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray(rng.integers(1, cfg.vocab, (2, 16)), jnp.int32)
+    _, aux = T.forward(params, toks, cfg)
+    assert float(aux) > 0.0
+
+
+def test_gemma_ties_embeddings():
+    cfg = get_arch("gemma2-2b").make_config()
+    assert cfg.tie_embed
+    struct = jax.eval_shape(lambda: T.init(jax.random.PRNGKey(0), cfg))
+    assert "lm_head" not in struct
+
+
+def test_engine_continuous_batching_matches_standalone(rng):
+    cfg = get_arch("qwen2.5-32b").make_smoke_config()
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    eng = E.Engine(params, cfg, slots=2, prompt_buf=16, cache_buf=48)
+    for _ in range(4):
+        eng.submit(rng.integers(1, cfg.vocab,
+                                int(rng.integers(3, 10))),
+                   max_new=int(rng.integers(3, 7)))
+    done = eng.run()
+    assert len(done) == 4
+    for r in done:
+        prompts = np.full((1, 16), -1, np.int32)
+        prompts[0, :len(r.prompt)] = r.prompt
+        ref = E.generate(params, cfg, prompts,
+                         max_new=len(r.out_tokens), cache_buf=48)
+        np.testing.assert_array_equal(ref[0], np.array(r.out_tokens))

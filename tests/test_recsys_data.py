@@ -1,0 +1,180 @@
+"""DCN-v2 + EmbeddingBag substrate + graph utilities."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_arch
+from repro.graphs.format import Graph, build_csr
+from repro.graphs.generators import (disjoint_cliques, grid_road,
+                                     molecule_batch, rmat, table1_scaled)
+from repro.graphs.partition import partition_edges
+from repro.graphs.sampler import MiniBatchLoader, sample_minibatch
+from repro.models import recsys
+
+
+@pytest.fixture
+def dcn(rng):
+    cfg = get_arch("dcn-v2").make_smoke_config()
+    p = recsys.init(jax.random.PRNGKey(0), cfg)
+    B = 16
+    batch = {
+        "dense": jnp.asarray(rng.standard_normal((B, cfg.n_dense)),
+                             jnp.float32),
+        "sparse_idx": jnp.asarray(
+            np.stack([rng.integers(0, s, B) for s in cfg.table_sizes],
+                     1), jnp.int32),
+        "label": jnp.asarray(rng.integers(0, 2, B), jnp.int32),
+    }
+    return cfg, p, batch
+
+
+def test_dcn_forward_loss(dcn):
+    cfg, p, batch = dcn
+    logits = recsys.forward(p, batch, cfg)
+    assert logits.shape == (16,)
+    loss = float(recsys.loss_fn(p, batch, cfg))
+    assert np.isfinite(loss) and loss > 0
+
+
+def test_dcn_learns(dcn, rng):
+    from repro.train import loop
+    from repro.train.optimizer import adamw, AdamWConfig
+    cfg, p, batch = dcn
+    stream = iter(lambda: batch, None)
+    state, _ = loop.fit(loss_fn=lambda pp, b: recsys.loss_fn(pp, b, cfg),
+                        params=p, opt=adamw(AdamWConfig(lr=1e-2,
+                                                        weight_decay=0)),
+                        stream=stream, steps=60, log_every=60,
+                        log_fn=lambda s: None)
+    assert float(recsys.loss_fn(state["params"], batch, cfg)) < \
+        float(recsys.loss_fn(p, batch, cfg))
+
+
+def test_embedding_bag_matches_manual(rng):
+    table = jnp.asarray(rng.standard_normal((50, 8)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 50, 24), jnp.int32)
+    bags = jnp.sort(jnp.asarray(rng.integers(0, 6, 24), jnp.int32))
+    out = recsys.embedding_bag(table, idx, bags, 6)
+    want = np.zeros((6, 8), np.float32)
+    for i, b in zip(np.asarray(idx), np.asarray(bags)):
+        want[b] += np.asarray(table)[i]
+    np.testing.assert_allclose(np.asarray(out), want, atol=1e-5)
+
+
+def test_fused_lookup_offsets(dcn, rng):
+    cfg, p, batch = dcn
+    offs = cfg.row_offsets
+    # feature f row i lives at offs[f] + i in the fused table
+    emb = recsys.fused_lookup(p["table"], batch["sparse_idx"],
+                              jnp.asarray(offs))
+    f, i = 2, 5
+    row = int(batch["sparse_idx"][i, f])
+    np.testing.assert_allclose(
+        np.asarray(emb[i, f]),
+        np.asarray(p["table"][offs[f] + row]), atol=1e-6)
+
+
+def test_multihot_reduces(dcn, rng):
+    cfg, p, batch = dcn
+    hot = jnp.asarray(np.stack(
+        [rng.integers(0, s, (16, 3)) for s in cfg.table_sizes], 1),
+        jnp.int32)
+    out = recsys.forward(p, {**batch, "sparse_idx": hot}, cfg)
+    assert out.shape == (16,)
+
+
+def test_retrieval_scores(dcn):
+    cfg, p, batch = dcn
+    q = {k: v[:1] for k, v in batch.items()}
+    scores = recsys.retrieval_scores(p, q, cfg,
+                                     jnp.arange(64, dtype=jnp.int32))
+    assert scores.shape == (64,)
+    assert np.isfinite(np.asarray(scores)).all()
+
+
+def test_padded_tables_divisible():
+    cfg = get_arch("dcn-v2").make_config()
+    assert cfg.total_rows % 16 == 0
+    assert all(s % 16 == 0 for s in cfg.padded_table_sizes)
+
+
+# --------------------------------------------------------------------------
+# Graph substrate
+# --------------------------------------------------------------------------
+
+def test_csr_roundtrip(rng):
+    edges = rng.integers(0, 20, (60, 2))
+    csr = build_csr(edges, 20)
+    # every edge present in both directions
+    for u, v in edges:
+        assert v in csr.neighbors(u)
+        assert u in csr.neighbors(v)
+
+
+def test_sampler_shapes_and_determinism():
+    g = rmat(8, 8, seed=0)
+    csr = g.to_csr()
+    rng1 = np.random.default_rng(5)
+    rng2 = np.random.default_rng(5)
+    seeds = np.arange(32)
+    mb1 = sample_minibatch(csr, seeds, [15, 10], rng1)
+    mb2 = sample_minibatch(csr, seeds, [15, 10], rng2)
+    assert len(mb1.blocks) == 2
+    np.testing.assert_array_equal(mb1.blocks[0].src, mb2.blocks[0].src)
+    assert mb1.blocks[1].src.shape == (32 * 10,)
+    # sampled neighbors are real neighbors (or self for isolated)
+    blk = mb1.blocks[1]
+    for s, d in zip(blk.src[:50], blk.dst[:50]):
+        assert s == d or s in csr.neighbors(d)
+
+
+def test_minibatch_loader_epochs():
+    g = rmat(7, 4, seed=1)
+    loader = MiniBatchLoader(g.to_csr(), np.arange(64), batch_size=16,
+                             fanouts=[5, 5], seed=3)
+    batches = list(loader.epoch(0))
+    assert len(batches) == 4
+    again = list(loader.epoch(0))
+    np.testing.assert_array_equal(batches[0].seed_nodes,
+                                  again[0].seed_nodes)
+
+
+def test_partition_edges_covers_all():
+    g = disjoint_cliques(4, 5)
+    parts = partition_edges(g, 4)
+    assert parts.shape[0] == 4
+    flat = parts.reshape(-1, 2)
+    # all original edges present (padding is (0,0))
+    orig = {tuple(e) for e in g.edges.tolist()}
+    got = {tuple(e) for e in flat.tolist()}
+    assert orig <= got
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 30), st.integers(0, 100), st.integers(1, 8))
+def test_partition_preserves_cc(n, e, parts):
+    from repro.core.cc import connected_components
+    from repro.core.unionfind import connected_components_oracle
+    rng = np.random.default_rng(42)
+    edges = rng.integers(0, n, (e, 2)).astype(np.int32)
+    g = Graph(edges=edges, num_nodes=n)
+    p = partition_edges(g, parts)
+    got = connected_components(p.reshape(-1, 2), n)
+    want = connected_components_oracle(edges, n)
+    np.testing.assert_array_equal(np.asarray(got.labels), want)
+
+
+def test_table1_scaled_degree_regimes():
+    road = table1_scaled("usa-osm", scale=1 / 1024)
+    kron = table1_scaled("kron-logn21", scale=1 / 256)
+    assert road.avg_degree < 4.0
+    assert kron.avg_degree > 20.0
+    assert kron.max_degree > 50 * kron.avg_degree / 10
+
+
+def test_molecule_batch_block_diagonal():
+    g = molecule_batch(8, 10, 14, seed=0)
+    blocks = g.edges // 10
+    assert (blocks[:, 0] == blocks[:, 1]).all()

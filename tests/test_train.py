@@ -1,0 +1,296 @@
+"""Training substrate: optimizers, accumulation, checkpointing, fault
+tolerance, gradient compression, data pipeline determinism."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import pipeline as dp
+from repro.train import checkpoint as ck
+from repro.train import train_state
+from repro.train.compression import (compress, compressed_psum,
+                                     decompress, zero_residual)
+from repro.train.fault_tolerance import (SimulatedFailure, StepWatchdog,
+                                         run_with_restarts)
+from repro.train.optimizer import (AdamWConfig, SGDConfig, adamw,
+                                   clip_by_global_norm, cosine_schedule,
+                                   sgd)
+
+
+def quad_problem(rng):
+    x = jnp.asarray(rng.standard_normal((4, 8)), jnp.float32)
+    t = jnp.asarray(rng.standard_normal((4, 8)), jnp.float32)
+    params = {"w": jnp.ones((4, 4)), "b": jnp.zeros((4,))}
+
+    def loss(p, batch):
+        return jnp.mean((p["w"] @ batch["x"] + p["b"][:, None]
+                         - batch["t"]) ** 2)
+    return params, loss, {"x": x, "t": t}
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: adamw(AdamWConfig(lr=0.05, weight_decay=0.0)),
+    lambda: sgd(SGDConfig(lr=0.05, momentum=0.9)),
+])
+def test_optimizers_reach_least_squares_optimum(rng, make_opt):
+    params, loss, batch = quad_problem(rng)
+    opt = make_opt()
+    state = train_state.create(params, opt)
+    step = jax.jit(train_state.make_train_step(loss, opt))
+    for _ in range(300):
+        state, m = step(state, batch)
+    # analytic LS optimum
+    x, t = np.asarray(batch["x"]), np.asarray(batch["t"])
+    A = np.vstack([x, np.ones((1, 8), np.float32)])
+    W = t @ A.T @ np.linalg.inv(A @ A.T)
+    opt_loss = float(((W @ A - t) ** 2).mean())
+    assert float(m["loss"]) < opt_loss + 1e-2
+
+
+def test_grad_accumulation_equals_single_shot(rng):
+    params = {"w": jnp.asarray(rng.standard_normal((4, 4)), jnp.float32)}
+
+    def loss(p, b):
+        return jnp.mean((b["x"] @ p["w"] - b["t"]) ** 2)
+
+    batch = {"x": jnp.asarray(rng.standard_normal((8, 4)), jnp.float32),
+             "t": jnp.asarray(rng.standard_normal((8, 4)), jnp.float32)}
+    opt = adamw(AdamWConfig(lr=1e-2, weight_decay=0.0))
+    s1 = train_state.create(params, opt)
+    s2 = train_state.create(params, opt)
+    st1, m1 = jax.jit(train_state.make_train_step(loss, opt))(s1, batch)
+    st4, m4 = jax.jit(train_state.make_train_step(
+        loss, opt, accum_steps=4))(s2, batch)
+    for a, b in zip(jax.tree.leaves(st1["params"]),
+                    jax.tree.leaves(st4["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 3.0), "b": jnp.full((10,), 4.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    from repro.train.optimizer import global_norm
+    np.testing.assert_allclose(float(norm), np.sqrt(90 + 160), rtol=1e-6)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0,
+                               rtol=1e-5)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup=10, total=110, floor=0.1)
+    assert float(lr(0)) == 0.0
+    np.testing.assert_allclose(float(lr(10)), 1.0, rtol=1e-6)
+    np.testing.assert_allclose(float(lr(110)), 0.1, rtol=1e-5)
+    assert float(lr(5)) == pytest.approx(0.5)
+
+
+def test_moment_dtype_bf16():
+    opt = adamw(AdamWConfig(moment_dtype=jnp.bfloat16))
+    state = opt.init({"w": jnp.ones((4, 4), jnp.bfloat16)})
+    assert state["m"]["w"].dtype == jnp.bfloat16
+
+
+# --------------------------------------------------------------------------
+# Checkpointing
+# --------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_retention(rng):
+    state = {"params": {"w": jnp.asarray(rng.standard_normal((3, 3)),
+                                         jnp.float32)},
+             "step": jnp.asarray(7, jnp.int32)}
+    with tempfile.TemporaryDirectory() as d:
+        ck.save(d, state, 7)
+        like = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), state)
+        restored = ck.restore(d, like=like)
+        np.testing.assert_allclose(np.asarray(restored["params"]["w"]),
+                                   np.asarray(state["params"]["w"]))
+        saver = ck.AsyncCheckpointer(d, keep=2)
+        for s in (8, 9, 10):
+            saver.save(state, s)
+        saver.wait()
+        kept = sorted(os.listdir(d))
+        assert kept == ["step_00000009", "step_00000010"]
+        assert ck.latest_step(d) == 10
+
+
+def test_checkpoint_shape_mismatch_raises(rng):
+    state = {"w": jnp.zeros((3, 3))}
+    with tempfile.TemporaryDirectory() as d:
+        ck.save(d, state, 1)
+        bad = {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32)}
+        with pytest.raises(ValueError):
+            ck.restore(d, like=bad)
+
+
+def test_checkpoint_restore_with_sharding(rng):
+    """Elastic path: restore under an explicit sharding tree."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.sharding.Mesh(jax.devices()[:1], ("data",))
+    state = {"w": jnp.asarray(rng.standard_normal((4, 4)), jnp.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        ck.save(d, state, 1)
+        like = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), state)
+        sh = {"w": NamedSharding(mesh, P(None, None))}
+        restored = ck.restore(d, like=like, sharding_tree=sh)
+        assert restored["w"].sharding == sh["w"]
+
+
+# --------------------------------------------------------------------------
+# Fault tolerance
+# --------------------------------------------------------------------------
+
+def test_run_with_restarts_recovers_and_replays(rng):
+    """Inject a failure mid-run; the loop must restore the checkpoint
+    and converge to EXACTLY the same state as an uninterrupted run
+    (deterministic (seed, step) data stream)."""
+    params, loss, _ = quad_problem(rng)
+    opt = adamw(AdamWConfig(lr=0.05, weight_decay=0.0))
+    raw = jax.jit(train_state.make_train_step(loss, opt))
+
+    def make_stream(start):
+        def gen():
+            step = start
+            while True:
+                r = np.random.default_rng((42, step))
+                yield {"x": jnp.asarray(r.standard_normal((4, 8)),
+                                        jnp.float32),
+                       "t": jnp.asarray(r.standard_normal((4, 8)),
+                                        jnp.float32)}
+                step += 1
+        return gen()
+
+    def run(fail_at, d):
+        tripped = {"done": False}
+
+        def step_fn(state, batch):
+            if fail_at and int(state["step"]) == fail_at \
+                    and not tripped["done"]:
+                tripped["done"] = True
+                raise SimulatedFailure("boom")
+            return raw(state, batch)
+
+        return run_with_restarts(
+            init_state_fn=lambda: train_state.create(params, opt),
+            step_fn=step_fn, stream_fn=make_stream, total_steps=40,
+            ckpt_dir=d, ckpt_every=10, max_restarts=2)
+
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        clean = run(0, d1)
+        faulty = run(25, d2)
+    assert faulty.restarts == 1
+    for a, b in zip(jax.tree.leaves(clean.final_state["params"]),
+                    jax.tree.leaves(faulty.final_state["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6)
+
+
+def test_run_with_restarts_gives_up():
+    def step_fn(state, batch):
+        raise SimulatedFailure("always")
+
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(RuntimeError, match="max_restarts"):
+            run_with_restarts(
+                init_state_fn=lambda: {"step": jnp.zeros((), jnp.int32)},
+                step_fn=step_fn, stream_fn=lambda s: iter([{}] * 100),
+                total_steps=10, ckpt_dir=d, max_restarts=2)
+
+
+def test_watchdog_flags_stragglers():
+    wd = StepWatchdog(threshold=3.0)
+    for i in range(10):
+        wd.observe(i, 0.1)
+    assert wd.observe(10, 1.0)          # 10x slower -> flagged
+    assert not wd.observe(11, 0.11)
+    assert len(wd.slow_steps) == 1
+
+
+def test_elastic_controller_policy():
+    from repro.launch.elastic import ElasticController
+    c = ElasticController(dp_width=16, min_steps_between=10)
+    assert c.decide(100, healthy_hosts=16) is None      # no change
+    assert c.decide(200, healthy_hosts=9) == 8          # shrink
+    assert c.decide(205, healthy_hosts=16) is None      # hysteresis
+    assert c.decide(400, healthy_hosts=16) == 16        # recover
+
+
+# --------------------------------------------------------------------------
+# Gradient compression
+# --------------------------------------------------------------------------
+
+def test_compression_error_feedback_property(rng):
+    g = {"a": jnp.asarray(rng.standard_normal(512), jnp.float32)}
+    res = zero_residual(g)
+    q, sc, res2 = compress(g, res)
+    deq = decompress(q, sc, g)
+    # int8 error bounded by scale/2 per element
+    err = np.abs(np.asarray(deq["a"]) - np.asarray(g["a"]))
+    assert err.max() <= float(sc["a"]) * 0.5 + 1e-7
+    # EF invariant: deq + residual == original
+    np.testing.assert_allclose(np.asarray(deq["a"] + res2["a"]),
+                               np.asarray(g["a"]), atol=1e-6)
+
+
+def test_compressed_psum_single_device(rng):
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("d",))
+    g = {"a": jnp.asarray(rng.standard_normal(64), jnp.float32)}
+    res = zero_residual(g)
+
+    def f(g, r):
+        return compressed_psum(g, r, "d")
+
+    out, new_res = shard_map(
+        f, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
+        check_rep=False)(g, res)
+    np.testing.assert_allclose(np.asarray(out["a"]),
+                               np.asarray(g["a"]), atol=2e-2)
+
+
+# --------------------------------------------------------------------------
+# Data pipeline
+# --------------------------------------------------------------------------
+
+def test_pipeline_determinism():
+    a = dp.lm_batch(7, 3, 4, 16, 100)
+    b = dp.lm_batch(7, 3, 4, 16, 100)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = dp.lm_batch(7, 4, 4, 16, 100)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_pipeline_resume_matches():
+    full = [dp.recsys_batch(1, s, 8, 5, (10, 20)) for s in range(5)]
+    it = dp.recsys_batches(1, 8, 5, (10, 20), start_step=3)
+    resumed = next(it)
+    np.testing.assert_array_equal(full[3]["sparse_idx"],
+                                  resumed["sparse_idx"])
+
+
+def test_prefetcher_order_and_exception():
+    it = dp.Prefetcher(iter([{"i": 1}, {"i": 2}, {"i": 3}]), depth=2)
+    assert [b["i"] for b in it] == [1, 2, 3]
+
+    def bad():
+        yield {"i": 1}
+        raise ValueError("stream died")
+
+    it = dp.Prefetcher(bad())
+    assert next(it)["i"] == 1
+    with pytest.raises(ValueError, match="stream died"):
+        next(it)
+
+
+def test_launcher_smoke_train_with_injected_failure(tmp_path):
+    from repro.launch import train as lt
+    rc = lt.main(["--arch", "dcn-v2", "--steps", "30", "--batch", "8",
+                  "--ckpt", str(tmp_path / "ck"), "--ckpt-every", "10",
+                  "--fail-at", "15"])
+    assert rc == 0
