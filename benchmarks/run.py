@@ -1,22 +1,32 @@
 """Benchmark harness — one function per paper table/figure.
 
-  table1   Graph properties of the scaled Table I stand-ins.
-  fig5     Variant comparison (soman -> +multijump -> +atomic ->
-           adaptive): wall-clock, host syncs, work counters — the
-           paper's Fig. 5 in this container's currency (CPU-backend
-           wall-clock is a secondary signal; work counts are primary).
-  fig6     Segmentation sweep: speedup + work vs number of segments;
-           the paper's Fig. 6 (optimum expected near s = 2|E|/|V|).
-  kernels  Pallas kernel microbenches (interpret mode: correctness +
-           overhead accounting, not TPU wall-clock — §Roofline covers
-           TPU perf).
+  table1      Graph properties of the scaled Table I stand-ins.
+  fig5        Variant comparison (soman -> +multijump -> +atomic ->
+              adaptive): wall-clock, host syncs, work counters — the
+              paper's Fig. 5 in this container's currency (CPU-backend
+              wall-clock is a secondary signal; work counts are primary).
+  fig6        Segmentation sweep: speedup + work vs number of segments;
+              the paper's Fig. 6 (optimum expected near s = 2|E|/|V|).
+  kernels     Pallas kernel microbenches (interpret mode: correctness +
+              overhead accounting, not TPU wall-clock — §Roofline covers
+              TPU perf).
+  batched     Batched-throughput table: a fleet of small graphs through
+              the shape-bucketed vmapped engine vs a per-graph loop
+              (DESIGN.md §4).
+  incremental Incremental-vs-full-recompute table: streaming edge
+              insertions absorbed by ``IncrementalCC`` vs a from-scratch
+              adaptive run per batch (DESIGN.md §6).
 
-Output: CSV blocks on stdout + files under benchmarks/results/.
+Output: CSV blocks on stdout + files under benchmarks/results/; the
+batched/incremental tables additionally emit one standard ``BENCH
+{json}`` line per row (machine-scrapable; also written to
+``results/<name>.jsonl``).
 Usage: ``python -m benchmarks.run [--only fig5] [--scale 0.004]``.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import time
 
@@ -54,6 +64,20 @@ def _emit(name: str, header: str, rows: list) -> None:
     print(header)
     for row in rows:
         print(",".join(str(x) for x in row))
+
+
+def _emit_bench(name: str, rows: list[dict]) -> None:
+    """Standard BENCH JSON: one ``BENCH {...}`` line per row on stdout
+    (scraped by CI/report tooling) + a JSONL file under results/."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.jsonl")
+    with open(path, "w") as f:
+        for row in rows:
+            rec = {"bench": name, **row}
+            line = json.dumps(rec)
+            f.write(line + "\n")
+            print("BENCH " + line)
+    print(f"## {name} -> {path}")
 
 
 def graphs_for_scale(scale: float):
@@ -190,17 +214,125 @@ def kernels() -> None:
     _emit("kernels", "kernel,shape,ms_interpret,ms_ref", rows)
 
 
+def batched() -> None:
+    """Batched-throughput table (DESIGN.md §4): a mixed fleet of small
+    graphs through the shape-bucketed vmapped adaptive engine vs the
+    per-graph jit loop. Labels are asserted bit-identical.
+
+    ``jit_calls`` (device dispatches per fleet) is the primary,
+    hardware-independent signal — the per-graph loop pays one dispatch
+    per graph, the batched engine one per shape bucket. CPU-backend
+    wall-clock does not reward dispatch amortization the way a real
+    accelerator does (same caveat as fig5)."""
+    from repro.core.batch import bucketize, connected_components_batched
+    from repro.core.cc import connected_components
+    from repro.graphs.generators import (chain, disjoint_cliques,
+                                         grid_road, rmat)
+
+    fleets = {
+        "molecules-64": [rmat(5, 3, seed=s) for s in range(64)],
+        "mixed-48": ([chain(40 + s) for s in range(16)] +
+                     [disjoint_cliques(3, 4 + s % 3, seed=s)
+                      for s in range(16)] +
+                     [grid_road(8, seed=s) for s in range(16)]),
+        "medium-16": [rmat(8, 8, seed=s) for s in range(16)],
+    }
+    rows = []
+    for name, graphs in fleets.items():
+        batched_out = connected_components_batched(graphs)
+        for g, r in zip(graphs, batched_out):
+            want = connected_components(g.edges, g.num_nodes).labels
+            assert np.array_equal(np.asarray(r.labels),
+                                  np.asarray(want)), name
+        t_loop = _bench(lambda: [connected_components(
+            g.edges, g.num_nodes).labels for g in graphs])
+        t_batched = _bench(
+            lambda: [r.labels for r in
+                     connected_components_batched(graphs)])
+        n_buckets = len(bucketize([(g.edges, g.num_nodes)
+                                   for g in graphs]))
+        rows.append({
+            "fleet": name, "n_graphs": len(graphs),
+            "n_buckets": n_buckets,
+            "jit_calls_pergraph": len(graphs),
+            "jit_calls_batched": n_buckets,
+            "ms_pergraph_loop": round(t_loop * 1e3, 2),
+            "ms_batched": round(t_batched * 1e3, 2),
+            "speedup": round(t_loop / t_batched, 2),
+            "graphs_per_s_batched": round(len(graphs) / t_batched, 1),
+        })
+    _emit_bench("batched", rows)
+
+
+def incremental(scale: float) -> None:
+    """Incremental-vs-full-recompute table (DESIGN.md §6): absorb a
+    stream of edge-insertion batches into ``IncrementalCC`` vs running
+    the adaptive engine from scratch on the accumulated edge set after
+    every batch. hook_ops is the hardware-independent signal."""
+    from repro.core.cc import connected_components
+    from repro.core.incremental import IncrementalCC
+    from repro.core.unionfind import connected_components_oracle
+
+    rows = []
+    for g in graphs_for_scale(scale):
+        edges, n = np.asarray(g.edges), g.num_nodes
+        rng = np.random.default_rng(0)
+        order = rng.permutation(edges.shape[0])
+        n_batches = 8
+        splits = np.array_split(order, n_batches)
+
+        def run_incremental():
+            inc = IncrementalCC(n)
+            for s in splits:
+                inc.insert(edges[s])
+            return inc
+
+        def run_full():
+            ops = 0
+            acc = np.zeros((0, 2), np.int32)
+            labels = None
+            for s in splits:
+                acc = np.concatenate([acc, edges[s]], axis=0)
+                r = connected_components(acc, n, method="adaptive")
+                ops += int(r.work.hook_ops)
+                labels = r.labels
+            return ops, labels
+
+        inc = run_incremental()
+        full_ops, full_labels = run_full()
+        want = connected_components_oracle(edges, n)
+        assert np.array_equal(np.asarray(inc.labels), want), g.name
+        assert np.array_equal(np.asarray(full_labels), want), g.name
+        t_inc = _bench(lambda: run_incremental().labels, reps=2)
+        t_full = _bench(lambda: run_full()[1], reps=2)
+        rows.append({
+            "graph": g.name, "nodes": n, "edges": int(edges.shape[0]),
+            "batches": n_batches,
+            "ms_incremental": round(t_inc * 1e3, 2),
+            "ms_full_recompute": round(t_full * 1e3, 2),
+            "speedup": round(t_full / t_inc, 2),
+            "hook_ops_incremental": inc.work["hook_ops"],
+            "hook_ops_full": full_ops,
+            "hook_ops_saved_x": round(full_ops /
+                                      max(inc.work["hook_ops"], 1), 2),
+        })
+    _emit_bench("incremental", rows)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    choices=["table1", "fig5", "fig6", "kernels"])
+                    choices=["table1", "fig5", "fig6", "kernels",
+                             "batched", "incremental"])
     ap.add_argument("--scale", type=float, default=1 / 256,
                     help="Table I graph scale factor")
     args = ap.parse_args()
     jobs = {"table1": lambda: table1(args.scale),
             "fig5": lambda: fig5(args.scale),
             "fig6": lambda: fig6(args.scale),
-            "kernels": kernels}
+            "kernels": kernels,
+            "batched": batched,
+            "incremental": lambda: incremental(args.scale)}
     for name, job in jobs.items():
         if args.only and name != args.only:
             continue

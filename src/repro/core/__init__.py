@@ -15,3 +15,5 @@ from repro.core.segmentation import (
     plan_segmentation,
 )
 from repro.core.unionfind import connected_components_oracle
+from repro.core.batch import connected_components_batched
+from repro.core.incremental import IncrementalCC

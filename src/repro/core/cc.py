@@ -20,16 +20,16 @@ TPU (see DESIGN.md §2 for the GPU→TPU mapping):
 
 All variants produce canonical labels: ``labels[v] == min vertex id of
 v's component`` (a strictly stronger guarantee than the paper's "some
-representative" — see DESIGN.md).
+representative" — see DESIGN.md §2; it is also what makes batched and
+incremental execution bit-compatible with the single-graph path).
 
-Work accounting (the paper's currency is work-efficiency):
-  * ``hook_ops``    — edge-hook evaluations performed,
-  * ``jump_ops``    — vertex-jump (gather) evaluations performed,
-  * ``jump_sweeps`` — full |V|-wide pointer-jump sweeps,
-  * ``hook_rounds`` — edge-set hook rounds,
-  * ``sync_rounds`` — host-equivalent synchronization points (device→host
-                      convergence checks a GPU host-side loop would incur;
-                      fused variants count 1 per jit call).
+The round primitives (hook, compress, segment scan, cleanup loop) live
+in ``repro.core.rounds`` and are shared with the batched
+(``repro.core.batch``), incremental (``repro.core.incremental``), and
+distributed (``repro.core.distributed``) engines; this module keeps the
+single-graph variants and the public API. Work accounting (the paper's
+currency) bills *true* edge counts — padding is free; see
+``rounds.WorkCounters`` for the counter glossary.
 """
 from __future__ import annotations
 
@@ -40,109 +40,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import rounds
+from repro.core.rounds import (        # re-exported; shared machinery
+    WorkCounters,
+    compress,
+    edges_consistent,
+    hook_edges,
+    jump_once,
+)
 from repro.core.segmentation import SegmentationPlan, plan_segmentation
 
-_MAX_ROUNDS = 64          # outer hook-round fuel
-
-
-def _compress_fuel(num_nodes: int) -> int:
-    """Pointer doubling squares path lengths per sweep, so
-    ceil(log2(V)) + 2 sweeps provably flatten any forest on V nodes —
-    a 2-3x tighter static loop bound than a fixed 64 (the roofline's
-    memory term for CC scales with this fuel)."""
-    import math
-    return max(4, math.ceil(math.log2(max(num_nodes, 2))) + 2)
+_MAX_ROUNDS = rounds.MAX_ROUNDS   # outer hook-round fuel
 
 METHODS = ("soman", "multijump", "atomic_hook", "adaptive", "labelprop")
-
-
-class WorkCounters(NamedTuple):
-    hook_ops: jnp.ndarray
-    jump_ops: jnp.ndarray
-    jump_sweeps: jnp.ndarray
-    hook_rounds: jnp.ndarray
-    sync_rounds: jnp.ndarray
-
-    @staticmethod
-    def zeros() -> "WorkCounters":
-        z = jnp.zeros((), jnp.int32)
-        return WorkCounters(z, z, z, z, z)
-
-    def add(self, **kw) -> "WorkCounters":
-        d = self._asdict()
-        for k, v in kw.items():
-            d[k] = d[k] + jnp.asarray(v, jnp.int32)
-        return WorkCounters(**d)
+HOSTLOOP_METHODS = ("soman", "multijump")
 
 
 class CCResult(NamedTuple):
     labels: jnp.ndarray       # int32 [V]; labels[v] = min id of v's component
     work: WorkCounters
-
-
-# ---------------------------------------------------------------------------
-# Primitive operations
-# ---------------------------------------------------------------------------
-
-def hook_edges(pi: jnp.ndarray, edges: jnp.ndarray, lift_steps: int = 0
-               ) -> jnp.ndarray:
-    """One deterministic hook round over ``edges`` (TPU analogue of Hook /
-    Atomic-Hook).
-
-    For every edge (u, v): H = max(pi(u), pi(v)), L = min(...), then
-    ``pi[H] <- min(pi[H], L)`` via scatter-min (race-free winner selection —
-    the deterministic stand-in for the CAS consensus; identical fixed point
-    under the paper's high-to-low rule). ``lift_steps`` performs the bounded
-    vectorized root chase of Atomic-Hook (pu <- pi[pu]) before hooking.
-    """
-    u, v = edges[..., 0], edges[..., 1]
-    pu, pv = pi[u], pi[v]
-    for _ in range(lift_steps):
-        pu, pv = pi[pu], pi[pv]
-    hi = jnp.maximum(pu, pv)
-    lo = jnp.minimum(pu, pv)
-    return pi.at[hi].min(lo)
-
-
-def jump_once(pi: jnp.ndarray) -> jnp.ndarray:
-    """Single-level Jump (Fig. 2): pi <- pi[pi] for every vertex."""
-    return pi[pi]
-
-
-def compress(pi: jnp.ndarray, work: WorkCounters,
-             count_syncs: bool = False) -> tuple[jnp.ndarray, WorkCounters]:
-    """Full Compress via fused pointer doubling (the Multi-Jump kernel).
-
-    Runs pi <- pi[pi] sweeps on-device until every tree is a star. Each
-    sweep *squares* path lengths (pointer doubling), the same
-    work-efficiency lever as the paper's in-kernel chase + continuous
-    write-back. With ``count_syncs`` every sweep also bills one host
-    synchronization (used by the Soman baseline whose Jump loop re-checks
-    convergence from the host after every single-level kernel).
-    """
-    v = pi.shape[0]
-    fuel = _compress_fuel(v)
-
-    def cond(state):
-        _, changed, sweeps, _ = state
-        return jnp.logical_and(changed, sweeps < fuel)
-
-    def body(state):
-        p, _, sweeps, w = state
-        nxt = p[p]
-        changed = jnp.any(nxt != p)
-        w = w.add(jump_ops=v, jump_sweeps=1,
-                  sync_rounds=1 if count_syncs else 0)
-        return nxt, changed, sweeps + 1, w
-
-    pi, _, _, work = jax.lax.while_loop(
-        cond, body, (pi, jnp.asarray(True), jnp.zeros((), jnp.int32), work))
-    return pi, work
-
-
-def edges_consistent(pi: jnp.ndarray, edges: jnp.ndarray) -> jnp.ndarray:
-    """True iff every edge has both endpoints under the same label."""
-    return jnp.all(pi[edges[..., 0]] == pi[edges[..., 1]])
 
 
 # ---------------------------------------------------------------------------
@@ -153,11 +69,11 @@ def _cc_soman(edges: jnp.ndarray, num_nodes: int) -> CCResult:
     e = edges.shape[0]
 
     def outer_cond(state):
-        _, changed, rounds, _ = state
-        return jnp.logical_and(changed, rounds < _MAX_ROUNDS)
+        _, changed, rounds_, _ = state
+        return jnp.logical_and(changed, rounds_ < _MAX_ROUNDS)
 
     def outer_body(state):
-        pi, _, rounds, w = state
+        pi, _, rounds_, w = state
         new_pi = hook_edges(pi, edges, lift_steps=0)
         hook_changed = jnp.any(new_pi != pi)
         # bill the hook kernel + its host-side convergence check
@@ -165,7 +81,7 @@ def _cc_soman(edges: jnp.ndarray, num_nodes: int) -> CCResult:
         # Fig. 1 lines 6-10: single-level Jump until no change, a host
         # convergence check after every sweep.
         new_pi, w = compress(new_pi, w, count_syncs=True)
-        return new_pi, hook_changed, rounds + 1, w
+        return new_pi, hook_changed, rounds_ + 1, w
 
     pi0 = jnp.arange(num_nodes, dtype=jnp.int32)
     pi, _, _, work = jax.lax.while_loop(
@@ -183,17 +99,17 @@ def _cc_multijump(edges: jnp.ndarray, num_nodes: int) -> CCResult:
     e = edges.shape[0]
 
     def outer_cond(state):
-        _, changed, rounds, _ = state
-        return jnp.logical_and(changed, rounds < _MAX_ROUNDS)
+        _, changed, rounds_, _ = state
+        return jnp.logical_and(changed, rounds_ < _MAX_ROUNDS)
 
     def outer_body(state):
-        pi, _, rounds, w = state
+        pi, _, rounds_, w = state
         new_pi = hook_edges(pi, edges, lift_steps=0)
         hook_changed = jnp.any(new_pi != pi)
         # one hook kernel + ONE fused Multi-Jump kernel => 2 syncs/round
         w = w.add(hook_ops=e, hook_rounds=1, sync_rounds=2)
         new_pi, w = compress(new_pi, w, count_syncs=False)
-        return new_pi, hook_changed, rounds + 1, w
+        return new_pi, hook_changed, rounds_ + 1, w
 
     pi0 = jnp.arange(num_nodes, dtype=jnp.int32)
     pi, _, _, work = jax.lax.while_loop(
@@ -209,25 +125,12 @@ def _cc_multijump(edges: jnp.ndarray, num_nodes: int) -> CCResult:
 
 def _cc_atomic_hook(edges: jnp.ndarray, num_nodes: int,
                     lift_steps: int = 2) -> CCResult:
-    e = edges.shape[0]
-
-    def cond(state):
-        pi, done, rounds, _ = state
-        return jnp.logical_and(~done, rounds < _MAX_ROUNDS)
-
-    def body(state):
-        pi, _, rounds, w = state
-        pi = hook_edges(pi, edges, lift_steps=lift_steps)
-        w = w.add(hook_ops=e * (1 + lift_steps), hook_rounds=1)
-        pi, w = compress(pi, w)
-        done = edges_consistent(pi, edges)
-        return pi, done, rounds + 1, w
-
+    # Atomic-Hook is the adaptive cleanup loop run from scratch over the
+    # whole (single-segment) edge list.
+    ops = rounds.jnp_round_ops(lift_steps)
     pi0 = jnp.arange(num_nodes, dtype=jnp.int32)
-    pi, _, _, work = jax.lax.while_loop(
-        cond, body,
-        (pi0, jnp.asarray(False), jnp.zeros((), jnp.int32),
-         WorkCounters.zeros()))
+    pi, work = rounds.cleanup_rounds(pi0, edges, ops, WorkCounters.zeros(),
+                                     true_edges=edges.shape[0])
     # the whole program is one fused device loop: a single host sync
     work = work.add(sync_rounds=1)
     return CCResult(pi, work)
@@ -240,46 +143,13 @@ def _cc_atomic_hook(edges: jnp.ndarray, num_nodes: int,
 def _cc_adaptive(edges: jnp.ndarray, num_nodes: int,
                  plan: SegmentationPlan, lift_steps: int = 2) -> CCResult:
     """Fig. 4: for each of the s = 2|E|/|V| segments, Atomic-Hook the
-    segment then fully compress. A trailing consistency loop covers hook
-    candidates dropped by deterministic min-selection (the CAS retry loop
-    of the GPU version resolves those in-kernel; see DESIGN.md §2) —
-    typically 0–1 extra rounds, visible in the work counters.
+    segment then fully compress, then a trailing consistency loop —
+    all via the shared ``rounds.adaptive_rounds`` core, which bills
+    hook_ops on true (unpadded) edges only.
     """
-    pad = plan.padded_edges - edges.shape[0]
-    if pad > 0:
-        edges = jnp.concatenate(
-            [edges, jnp.zeros((pad, 2), edges.dtype)], axis=0)
-    segments = edges.reshape(plan.num_segments, plan.segment_size, 2)
-
-    pi0 = jnp.arange(num_nodes, dtype=jnp.int32)
-
-    def seg_body(carry, seg):
-        pi, w = carry
-        pi = hook_edges(pi, seg, lift_steps=lift_steps)
-        w = w.add(hook_ops=plan.segment_size * (1 + lift_steps),
-                  hook_rounds=1)
-        pi, w = compress(pi, w)
-        return (pi, w), None
-
-    (pi, work), _ = jax.lax.scan(
-        seg_body, (pi0, WorkCounters.zeros()), segments)
-
-    # cleanup: re-hook full edge list until consistent (usually converged)
-    def cond(state):
-        pi, done, rounds, _ = state
-        return jnp.logical_and(~done, rounds < _MAX_ROUNDS)
-
-    def body(state):
-        pi, _, rounds, w = state
-        pi = hook_edges(pi, edges, lift_steps=lift_steps)
-        w = w.add(hook_ops=edges.shape[0] * (1 + lift_steps), hook_rounds=1)
-        pi, w = compress(pi, w)
-        done = edges_consistent(pi, edges)
-        return pi, done, rounds + 1, w
-
-    done0 = edges_consistent(pi, edges)
-    pi, _, _, work = jax.lax.while_loop(
-        cond, body, (pi, done0, jnp.zeros((), jnp.int32), work))
+    pi, work = rounds.adaptive_rounds(edges, num_nodes, plan,
+                                      lift_steps=lift_steps,
+                                      true_edges=edges.shape[0])
     work = work.add(sync_rounds=1)   # one jit call end-to-end
     return CCResult(pi, work)
 
@@ -348,41 +218,14 @@ def connected_components(
                               "interpret"))
 def _cc_adaptive_pallas(edges, *, num_nodes, num_segments, lift_steps,
                         interpret):
-    from repro.kernels.hook.ops import hook_edges_pallas
-    from repro.kernels.multi_jump.ops import full_compress
-
     plan = plan_segmentation(edges.shape[0], num_nodes, num_segments)
-    pad = plan.padded_edges - edges.shape[0]
-    if pad > 0:
-        edges = jnp.concatenate(
-            [edges, jnp.zeros((pad, 2), edges.dtype)], axis=0)
-    segments = edges.reshape(plan.num_segments, plan.segment_size, 2)
-    tile = min(512, max(8, num_nodes))
-    etile = min(1024, plan.segment_size)
-
-    def seg_body(pi, seg):
-        pi = hook_edges_pallas(pi, seg, edge_tile=etile,
-                               lift_steps=lift_steps, interpret=interpret)
-        pi = full_compress(pi, tile=tile, interpret=interpret)
-        return pi, None
-
-    pi0 = jnp.arange(num_nodes, dtype=jnp.int32)
-    pi, _ = jax.lax.scan(seg_body, pi0, segments)
-
-    def cond(state):
-        pi, done, rounds = state
-        return jnp.logical_and(~done, rounds < _MAX_ROUNDS)
-
-    def body(state):
-        pi, _, rounds = state
-        pi = hook_edges_pallas(pi, edges, edge_tile=etile,
-                               lift_steps=lift_steps, interpret=interpret)
-        pi = full_compress(pi, tile=tile, interpret=interpret)
-        return pi, edges_consistent(pi, edges), rounds + 1
-
-    pi, _, _ = jax.lax.while_loop(
-        cond, body,
-        (pi, edges_consistent(pi, edges), jnp.zeros((), jnp.int32)))
+    ops = rounds.pallas_round_ops(
+        lift_steps=lift_steps,
+        edge_tile=min(1024, plan.segment_size),
+        node_tile=min(512, max(8, num_nodes)),
+        interpret=interpret)
+    pi, _ = rounds.adaptive_rounds(edges, num_nodes, plan, ops=ops,
+                                   true_edges=edges.shape[0])
     return pi
 
 
@@ -434,6 +277,9 @@ def connected_components_hostloop(
     baseline's CPU-GPU round trips. Used by the benchmarks to expose the
     cost the paper's device-centric design removes.
     """
+    if method not in HOSTLOOP_METHODS:
+        raise ValueError(f"unknown method {method!r}; choose from "
+                         f"{HOSTLOOP_METHODS}")
     edges = jnp.asarray(edges, jnp.int32).reshape(-1, 2)
     pi = jnp.arange(num_nodes, dtype=jnp.int32)
     syncs = 0

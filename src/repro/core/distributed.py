@@ -32,29 +32,15 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core import cc as cc_lib
+from repro.core import rounds as rounds_lib
+from repro.core.rounds import WorkCounters, compress, edges_consistent
 from repro.core.segmentation import plan_segmentation
 
 # Global merge rounds to convergence measured on all four Table I graph
-# classes: 2-4 (EXPERIMENTS §Perf). Fuel 8 is a 2x safety margin; the
+# classes: 2-4 (EXPERIMENTS.md §Perf). Fuel 8 is a 2x safety margin; the
 # roofline's static loop bound (and the worst case) tightens 8x vs the
 # original 64 fuel.
 _MAX_ROUNDS = 8
-
-
-def _local_segment_scan(pi, edges_local, num_segments: int, lift_steps: int):
-    """Adaptive hook+compress over the chip-local edge partition."""
-    seg = edges_local.shape[0] // num_segments
-    segments = edges_local[: seg * num_segments].reshape(
-        num_segments, seg, 2)
-
-    def body(p, s):
-        p = cc_lib.hook_edges(p, s, lift_steps=lift_steps)
-        p, _ = cc_lib.compress(p, cc_lib.WorkCounters.zeros())
-        return p, None
-
-    pi, _ = jax.lax.scan(body, pi, segments)
-    return pi
 
 
 def make_distributed_cc(mesh: Mesh, num_nodes: int, edges_per_shard: int,
@@ -78,10 +64,17 @@ def make_distributed_cc(mesh: Mesh, num_nodes: int, edges_per_shard: int,
     segs = local_segments or plan_segmentation(
         edges_per_shard, num_nodes).num_segments
     segs = max(1, min(segs, edges_per_shard))
+    # per-chip plan; the paper's segment scan over the local partition is
+    # the shared rounds core (padding with (0,0) no-ops — the old local
+    # scan silently truncated the remainder when edges_per_shard wasn't
+    # divisible by the segment count).
+    plan = plan_segmentation(edges_per_shard, num_nodes, segs)
+    ops = rounds_lib.jnp_round_ops(lift_steps)
 
     def shard_fn(edges_local):
         # edges_local: [1 per sharded axis..., edges_per_shard, 2]
         edges_local = edges_local.reshape(edges_per_shard, 2)
+        segments = rounds_lib.pad_and_segment(edges_local, plan)
         pi0 = jnp.arange(num_nodes, dtype=jnp.int32)
 
         def cond(state):
@@ -90,12 +83,13 @@ def make_distributed_cc(mesh: Mesh, num_nodes: int, edges_per_shard: int,
 
         def body(state):
             pi, _, rounds = state
-            pi = _local_segment_scan(pi, edges_local, segs, lift_steps)
+            pi, _ = rounds_lib.segment_scan(pi, segments, ops,
+                                            WorkCounters.zeros())
             # merge the monotone per-chip workspaces
             for ax in axis_names:
                 pi = jax.lax.pmin(pi, ax)
-            pi, _ = cc_lib.compress(pi, cc_lib.WorkCounters.zeros())
-            local_ok = cc_lib.edges_consistent(pi, edges_local)
+            pi, _ = compress(pi, WorkCounters.zeros())
+            local_ok = edges_consistent(pi, edges_local)
             ok = jnp.asarray(local_ok, jnp.int32)
             for ax in axis_names:
                 ok = jax.lax.pmin(ok, ax)

@@ -1,0 +1,311 @@
+"""Shared adaptive hook+compress round machinery (DESIGN.md §3).
+
+This module is the single home of the paper's round primitives —
+deterministic Hook (scatter-min with bounded root chase), fused
+Multi-Jump Compress (pointer doubling in one ``lax.while_loop``), the
+work counters, and the segment-scan / cleanup-loop composition of Fig. 4
+— so that every execution mode consumes ONE implementation:
+
+  * ``repro.core.cc``          — single-graph variants + public API,
+  * ``repro.core.cc`` (Pallas) — same composition, kernel-backed ops,
+  * ``repro.core.batch``       — ``vmap``ped over shape-bucketed batches,
+  * ``repro.core.incremental`` — edge-insertion batches hooked into an
+                                 existing label array (Hong et al.),
+  * ``repro.core.distributed`` — per-chip segment scan under shard_map.
+
+Everything here is pure jnp + lax control flow: safe under ``vmap``
+(batched CC), ``shard_map`` (distributed CC), and jit caching.
+
+Work accounting (the paper's currency is work-efficiency) bills *true*
+edge counts: padded ``(0, 0)`` no-op edges — introduced by segmentation,
+shape bucketing, or edge-tile alignment — are never counted. Callers
+pass the true edge count (static int or traced scalar; the latter is
+what the batched path uses, one count per graph in the bucket).
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.segmentation import SegmentationPlan
+
+MAX_ROUNDS = 64          # outer hook-round fuel
+
+
+def compress_fuel(num_nodes: int) -> int:
+    """Pointer doubling squares path lengths per sweep, so
+    ceil(log2(V)) + 2 sweeps provably flatten any forest on V nodes —
+    a 2-3x tighter static loop bound than a fixed 64 (the roofline's
+    memory term for CC scales with this fuel)."""
+    return max(4, math.ceil(math.log2(max(num_nodes, 2))) + 2)
+
+
+class WorkCounters(NamedTuple):
+    """Hardware-independent work counters (DESIGN.md §2).
+
+    * ``hook_ops``    — edge-hook evaluations performed (true edges only),
+    * ``jump_ops``    — vertex-jump (gather) evaluations performed,
+    * ``jump_sweeps`` — full |V|-wide pointer-jump sweeps,
+    * ``hook_rounds`` — edge-set hook rounds,
+    * ``sync_rounds`` — host-equivalent synchronization points.
+    """
+
+    hook_ops: jnp.ndarray
+    jump_ops: jnp.ndarray
+    jump_sweeps: jnp.ndarray
+    hook_rounds: jnp.ndarray
+    sync_rounds: jnp.ndarray
+
+    @staticmethod
+    def zeros() -> "WorkCounters":
+        z = jnp.zeros((), jnp.int32)
+        return WorkCounters(z, z, z, z, z)
+
+    def add(self, **kw) -> "WorkCounters":
+        d = self._asdict()
+        for k, v in kw.items():
+            d[k] = d[k] + jnp.asarray(v, jnp.int32)
+        return WorkCounters(**d)
+
+
+# ---------------------------------------------------------------------------
+# Primitive operations
+# ---------------------------------------------------------------------------
+
+def hook_edges(pi: jnp.ndarray, edges: jnp.ndarray, lift_steps: int = 0
+               ) -> jnp.ndarray:
+    """One deterministic hook round over ``edges`` (TPU analogue of Hook /
+    Atomic-Hook, DESIGN.md §2).
+
+    For every edge (u, v): H = max(pi(u), pi(v)), L = min(...), then
+    ``pi[H] <- min(pi[H], L)`` via scatter-min (race-free winner selection —
+    the deterministic stand-in for the CAS consensus; identical fixed point
+    under the paper's high-to-low rule). ``lift_steps`` performs the bounded
+    vectorized root chase of Atomic-Hook (pu <- pi[pu]) before hooking.
+    """
+    u, v = edges[..., 0], edges[..., 1]
+    pu, pv = pi[u], pi[v]
+    for _ in range(lift_steps):
+        pu, pv = pi[pu], pi[pv]
+    hi = jnp.maximum(pu, pv)
+    lo = jnp.minimum(pu, pv)
+    return pi.at[hi].min(lo)
+
+
+def jump_once(pi: jnp.ndarray) -> jnp.ndarray:
+    """Single-level Jump (Fig. 2): pi <- pi[pi] for every vertex."""
+    return pi[pi]
+
+
+def compress(pi: jnp.ndarray, work: WorkCounters,
+             count_syncs: bool = False,
+             bill_nodes: int | jnp.ndarray | None = None,
+             ) -> tuple[jnp.ndarray, WorkCounters]:
+    """Full Compress via fused pointer doubling (the Multi-Jump kernel).
+
+    Runs pi <- pi[pi] sweeps on-device until every tree is a star. Each
+    sweep *squares* path lengths (pointer doubling), the same
+    work-efficiency lever as the paper's in-kernel chase + continuous
+    write-back. With ``count_syncs`` every sweep also bills one host
+    synchronization (used by the Soman baseline whose Jump loop re-checks
+    convergence from the host after every single-level kernel).
+    ``bill_nodes`` overrides the per-sweep jump_ops billing (the batched
+    path passes the true |V| so padded self-root vertices are free).
+    """
+    v = pi.shape[0] if bill_nodes is None else bill_nodes
+    fuel = compress_fuel(pi.shape[0])
+
+    def cond(state):
+        _, changed, sweeps, _ = state
+        return jnp.logical_and(changed, sweeps < fuel)
+
+    def body(state):
+        p, _, sweeps, w = state
+        nxt = p[p]
+        changed = jnp.any(nxt != p)
+        w = w.add(jump_ops=v, jump_sweeps=1,
+                  sync_rounds=1 if count_syncs else 0)
+        return nxt, changed, sweeps + 1, w
+
+    pi, _, _, work = jax.lax.while_loop(
+        cond, body, (pi, jnp.asarray(True), jnp.zeros((), jnp.int32), work))
+    return pi, work
+
+
+def edges_consistent(pi: jnp.ndarray, edges: jnp.ndarray) -> jnp.ndarray:
+    """True iff every edge has both endpoints under the same label."""
+    return jnp.all(pi[edges[..., 0]] == pi[edges[..., 1]])
+
+
+# ---------------------------------------------------------------------------
+# Pluggable round operations
+# ---------------------------------------------------------------------------
+
+class RoundOps(NamedTuple):
+    """The two pluggable kernels of a hook+compress round.
+
+    * ``hook(pi, edges) -> pi``        — one hook pass over an edge set,
+    * ``compress(pi, work) -> (pi, work)`` — full compress, threading work,
+    * ``bill_lift``                    — hook evaluations billed per true
+                                         edge (1 + lift_steps for the
+                                         root-chasing Atomic-Hook).
+    """
+
+    hook: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+    compress: Callable[[jnp.ndarray, WorkCounters],
+                       tuple[jnp.ndarray, WorkCounters]]
+    bill_lift: int
+
+
+def jnp_round_ops(lift_steps: int = 2,
+                  bill_nodes: int | jnp.ndarray | None = None) -> RoundOps:
+    """Pure-jnp ops (the default backend)."""
+    return RoundOps(
+        hook=lambda pi, e: hook_edges(pi, e, lift_steps=lift_steps),
+        compress=lambda pi, w: compress(pi, w, bill_nodes=bill_nodes),
+        bill_lift=1 + lift_steps,
+    )
+
+
+def pallas_round_ops(lift_steps: int, edge_tile: int, node_tile: int,
+                     interpret: bool) -> RoundOps:
+    """Pallas-kernel-backed ops (hook + multi_jump kernels, DESIGN.md §2).
+    The kernels do not thread work counters; compress passes them through.
+    """
+    from repro.kernels.hook.ops import hook_edges_pallas
+    from repro.kernels.multi_jump.ops import full_compress
+    return RoundOps(
+        hook=lambda pi, e: hook_edges_pallas(
+            pi, e, edge_tile=edge_tile, lift_steps=lift_steps,
+            interpret=interpret),
+        compress=lambda pi, w: (full_compress(
+            pi, tile=node_tile, interpret=interpret), w),
+        bill_lift=1 + lift_steps,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Segmentation helpers
+# ---------------------------------------------------------------------------
+
+def pad_and_segment(edges: jnp.ndarray, plan: SegmentationPlan
+                    ) -> jnp.ndarray:
+    """Pad ``edges`` with (0, 0) no-ops to ``plan.padded_edges`` and
+    reshape to [num_segments, segment_size, 2]. Trace-safe (static pad)."""
+    pad = plan.padded_edges - edges.shape[0]
+    if pad > 0:
+        edges = jnp.concatenate(
+            [edges, jnp.zeros((pad, 2), edges.dtype)], axis=0)
+    return edges.reshape(plan.num_segments, plan.segment_size, 2)
+
+
+def segment_true_counts(true_edges: int | jnp.ndarray,
+                        plan: SegmentationPlan) -> jnp.ndarray:
+    """Per-segment count of *true* (unpadded) edges, [num_segments] int32.
+
+    Segment i holds edge slots [i*seg, (i+1)*seg); the first
+    ``true_edges`` slots are real, the rest are (0, 0) padding. Accepts a
+    static int or a traced scalar (the batched path's per-graph counts).
+    """
+    starts = jnp.arange(plan.num_segments, dtype=jnp.int32) * plan.segment_size
+    return jnp.clip(jnp.asarray(true_edges, jnp.int32) - starts,
+                    0, plan.segment_size)
+
+
+# ---------------------------------------------------------------------------
+# Round composition (Fig. 4)
+# ---------------------------------------------------------------------------
+
+def segment_scan(pi: jnp.ndarray, segments: jnp.ndarray, ops: RoundOps,
+                 work: WorkCounters,
+                 true_counts: jnp.ndarray | None = None,
+                 ) -> tuple[jnp.ndarray, WorkCounters]:
+    """Fig. 4 inner structure: for each segment, hook then fully
+    compress, all inside one ``lax.scan`` (zero host round-trips).
+
+    ``true_counts`` ([num_segments] int32) bills hook_ops per segment on
+    true edges only; None bills the full (padded) segment size.
+    """
+    if true_counts is None:
+        true_counts = jnp.full((segments.shape[0],), segments.shape[1],
+                               jnp.int32)
+
+    def seg_body(carry, xs):
+        p, w = carry
+        seg, cnt = xs
+        p = ops.hook(p, seg)
+        w = w.add(hook_ops=cnt * ops.bill_lift, hook_rounds=1)
+        p, w = ops.compress(p, w)
+        return (p, w), None
+
+    (pi, work), _ = jax.lax.scan(seg_body, (pi, work),
+                                 (segments, true_counts))
+    return pi, work
+
+
+def cleanup_rounds(pi: jnp.ndarray, edges: jnp.ndarray, ops: RoundOps,
+                   work: WorkCounters,
+                   true_edges: int | jnp.ndarray | None = None,
+                   max_rounds: int = MAX_ROUNDS,
+                   ) -> tuple[jnp.ndarray, WorkCounters]:
+    """Re-hook ``edges`` until every edge is consistent (usually 0-1
+    rounds). Covers hook candidates dropped by deterministic
+    min-selection — the CAS retry loop of the GPU version resolves those
+    in-kernel (DESIGN.md §2). Also the whole of an *incremental* insert:
+    hooking a new edge batch into an existing label array is exactly
+    this loop (DESIGN.md §6; Hong et al.).
+
+    The initial consistency check short-circuits already-connected edge
+    sets to zero hook rounds — the incremental path's common case.
+    """
+    if true_edges is None:
+        true_edges = edges.shape[0]
+    bill = jnp.asarray(true_edges, jnp.int32) * ops.bill_lift
+
+    def cond(state):
+        _, done, rounds, _ = state
+        return jnp.logical_and(~done, rounds < max_rounds)
+
+    def body(state):
+        p, _, rounds, w = state
+        p = ops.hook(p, edges)
+        w = w.add(hook_ops=bill, hook_rounds=1)
+        p, w = ops.compress(p, w)
+        return p, edges_consistent(p, edges), rounds + 1, w
+
+    done0 = edges_consistent(pi, edges)
+    pi, _, _, work = jax.lax.while_loop(
+        cond, body, (pi, done0, jnp.zeros((), jnp.int32), work))
+    return pi, work
+
+
+def adaptive_rounds(edges: jnp.ndarray, num_nodes: int,
+                    plan: SegmentationPlan, *,
+                    ops: RoundOps | None = None,
+                    lift_steps: int = 2,
+                    true_edges: int | jnp.ndarray | None = None,
+                    max_rounds: int = MAX_ROUNDS,
+                    ) -> tuple[jnp.ndarray, WorkCounters]:
+    """The full adaptive pipeline (Fig. 4): segment scan, then cleanup.
+
+    ``true_edges`` defaults to ``plan.num_edges`` (the single-graph
+    case); the batched path passes a traced per-graph scalar instead.
+    Returns (labels, work) — callers add their own sync_rounds billing.
+    """
+    if ops is None:
+        ops = jnp_round_ops(lift_steps)
+    if true_edges is None:
+        true_edges = plan.num_edges
+    segments = pad_and_segment(edges, plan)
+    counts = segment_true_counts(true_edges, plan)
+
+    pi0 = jnp.arange(num_nodes, dtype=jnp.int32)
+    pi, work = segment_scan(pi0, segments, ops, WorkCounters.zeros(),
+                            true_counts=counts)
+    flat = segments.reshape(-1, 2)
+    pi, work = cleanup_rounds(pi, flat, ops, work, true_edges=true_edges,
+                              max_rounds=max_rounds)
+    return pi, work

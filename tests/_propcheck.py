@@ -1,0 +1,105 @@
+"""Property-test front end: hypothesis when installed, a deterministic
+fallback otherwise.
+
+The container this repo ships in does not bake in ``hypothesis``, and a
+module-level ``from hypothesis import ...`` used to kill collection of
+the whole tier-1 run. Test modules import ``given / settings / st`` from
+here instead; with hypothesis installed (``pip install -r
+requirements-dev.txt``) they get the real shrinking fuzzer, without it a
+small seeded generator draws a fixed, reproducible example sequence —
+the property tests keep running either way.
+
+The fallback implements only the strategy surface this suite uses:
+``integers, lists, tuples, just`` plus ``.flatmap`` / ``.map``.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                               # deterministic fallback
+    import functools
+    import inspect
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    # Fallback example budget: capped below hypothesis' max_examples to
+    # keep the fast tier fast (every example with a fresh shape is a
+    # fresh jit compile).
+    _MAX_EXAMPLES_CAP = 10
+    _SEED = 0xC0FFEE
+
+    class SearchStrategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+        def flatmap(self, fn):
+            return SearchStrategy(
+                lambda rng: fn(self._draw(rng)).example(rng))
+
+        def map(self, fn):
+            return SearchStrategy(lambda rng: fn(self._draw(rng)))
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return SearchStrategy(
+                lambda rng: int(rng.integers(min_value, max_value,
+                                             endpoint=True)))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                size = int(rng.integers(min_size, max_size, endpoint=True))
+                return [elements.example(rng) for _ in range(size)]
+            return SearchStrategy(draw)
+
+        @staticmethod
+        def tuples(*strats):
+            return SearchStrategy(
+                lambda rng: tuple(s.example(rng) for s in strats))
+
+        @staticmethod
+        def just(value):
+            return SearchStrategy(lambda rng: value)
+
+    st = _Strategies()
+
+    def settings(max_examples=20, deadline=None, **_kw):
+        def deco(fn):
+            fn._pc_max_examples = min(max_examples, _MAX_EXAMPLES_CAP)
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            # The drawn values fill the LAST len(strats) parameters
+            # (hypothesis' positional @given semantics); bind them by
+            # name so fixtures occupying the leading parameters can't
+            # collide with the drawn positionals.
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            keep = params[: len(params) - len(strats)]
+            drawn_names = [p.name for p in params[len(keep):]]
+
+            @functools.wraps(fn)
+            def wrapper(*fixture_args, **fixture_kw):
+                n = getattr(wrapper, "_pc_max_examples",
+                            _MAX_EXAMPLES_CAP)
+                rng = np.random.default_rng(_SEED)
+                for _ in range(n):
+                    drawn = {name: s.example(rng)
+                             for name, s in zip(drawn_names, strats)}
+                    fn(*fixture_args, **fixture_kw, **drawn)
+
+            wrapper._pc_max_examples = _MAX_EXAMPLES_CAP
+            # hide the drawn parameters from pytest's fixture resolution
+            wrapper.__signature__ = sig.replace(parameters=keep)
+            return wrapper
+        return deco

@@ -1,0 +1,206 @@
+"""Batched + incremental CC engines on the shared adaptive core:
+bit-identity with the single-graph path, oracle agreement under
+streaming insertions, and true-edge work billing."""
+import numpy as np
+import pytest
+
+from _propcheck import given, settings, st
+from repro.core import rounds
+from repro.core.batch import (bucket_shape, bucketize,
+                              connected_components_batched)
+from repro.core.cc import (connected_components,
+                           connected_components_hostloop, num_components)
+from repro.core.incremental import IncrementalCC
+from repro.core.segmentation import plan_segmentation
+from repro.core.unionfind import connected_components_oracle
+from repro.graphs import generators as G
+
+
+def mixed_graphs():
+    return [
+        G.chain(17),
+        G.star(9),
+        G.disjoint_cliques(4, 5),
+        G.grid_road(8, seed=1),
+        G.rmat(6, 4, seed=3),
+        G.chain(2),
+        # zero-edge graph: 5 isolated vertices
+        G.Graph(edges=np.zeros((0, 2), np.int64), num_nodes=5),
+    ]
+
+
+# --------------------------------------------------------------------------
+# Batched engine
+# --------------------------------------------------------------------------
+
+def test_batched_bit_identical_to_per_graph():
+    graphs = mixed_graphs()
+    batched = connected_components_batched(graphs)
+    assert len(batched) == len(graphs)
+    for g, res in zip(graphs, batched):
+        single = connected_components(g.edges, g.num_nodes)
+        want = connected_components_oracle(g.edges, g.num_nodes)
+        np.testing.assert_array_equal(np.asarray(res.labels), want,
+                                      err_msg=g.name)
+        np.testing.assert_array_equal(np.asarray(res.labels),
+                                      np.asarray(single.labels),
+                                      err_msg=g.name)
+        assert res.labels.shape == (g.num_nodes,)
+
+
+def test_batched_accepts_edge_tuples():
+    pairs = [(np.array([[0, 1], [1, 2]]), 4),
+             (np.array([[0, 3]]), 5)]
+    out = connected_components_batched(pairs)
+    np.testing.assert_array_equal(np.asarray(out[0].labels), [0, 0, 0, 3])
+    np.testing.assert_array_equal(np.asarray(out[1].labels),
+                                  [0, 1, 2, 0, 4])
+
+
+def test_bucketize_groups_by_padded_shape():
+    graphs = [(np.zeros((3, 2)), 7), (np.zeros((4, 2)), 8),
+              (np.zeros((100, 2)), 7)]
+    batches = bucketize(graphs)
+    shapes = {(b.num_nodes, b.edges.shape[1]) for b in batches}
+    assert (8, 8) in shapes          # the two small graphs share a bucket
+    assert (8, 128) in shapes
+    sizes = sorted(b.edges.shape[0] for b in batches)
+    assert sizes == [1, 2]
+    assert bucket_shape(7, 3) == (8, 8)
+    assert bucket_shape(9, 129) == (16, 256)
+
+
+def test_batched_work_bills_true_edges_only():
+    """hook_ops must be a multiple of E_true * (1 + lift_steps) even
+    though the bucket pads the edge list (padding is free)."""
+    g = G.chain(17)           # 16 edges -> padded to 32 in its bucket
+    res = connected_components_batched([g], lift_steps=2)[0]
+    bill = g.num_edges * 3
+    assert int(res.work.hook_ops) % bill == 0
+    assert int(res.work.hook_ops) >= bill
+    # jump_ops bill the true |V| per sweep, not the padded bucket height
+    assert int(res.work.jump_ops) == \
+        g.num_nodes * int(res.work.jump_sweeps)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.lists(
+    st.integers(2, 24).flatmap(
+        lambda n: st.tuples(
+            st.just(n),
+            st.lists(st.tuples(st.integers(0, n - 1),
+                               st.integers(0, n - 1)),
+                     min_size=0, max_size=40))),
+    min_size=1, max_size=6))
+def test_batched_matches_oracle_property(cases):
+    pairs = [(np.asarray(e, np.int32).reshape(-1, 2), n)
+             for n, e in cases]
+    out = connected_components_batched(pairs)
+    for (edges, n), res in zip(pairs, out):
+        want = connected_components_oracle(edges, n)
+        np.testing.assert_array_equal(np.asarray(res.labels), want)
+
+
+# --------------------------------------------------------------------------
+# Incremental engine
+# --------------------------------------------------------------------------
+
+def test_incremental_matches_oracle_over_batches():
+    n = 60
+    rng = np.random.default_rng(7)
+    inc = IncrementalCC(n)
+    accumulated = np.zeros((0, 2), np.int32)
+    for size in (5, 1, 17, 0, 9, 30):
+        batch = rng.integers(0, n, (size, 2)).astype(np.int32)
+        inc.insert(batch)
+        accumulated = np.concatenate([accumulated, batch], axis=0)
+        want = connected_components_oracle(accumulated, n)
+        np.testing.assert_array_equal(np.asarray(inc.labels), want)
+    assert inc.num_edges_inserted == accumulated.shape[0]
+    assert inc.num_components() == num_components(want)
+
+
+def test_incremental_noop_batch_costs_zero_hook_rounds():
+    inc = IncrementalCC(10)
+    inc.insert([[0, 1], [1, 2], [3, 4]])
+    before = dict(inc.work)
+    inc.insert([[0, 2], [2, 1], [4, 3]])   # all already connected
+    assert inc.work["hook_rounds"] == before["hook_rounds"]
+    assert inc.work["hook_ops"] == before["hook_ops"]
+    np.testing.assert_array_equal(
+        np.asarray(inc.labels),
+        connected_components_oracle(
+            np.array([[0, 1], [1, 2], [3, 4]]), 10))
+
+
+def test_incremental_rejects_out_of_range():
+    inc = IncrementalCC(4)
+    with pytest.raises(ValueError):
+        inc.insert([[0, 4]])
+    with pytest.raises(ValueError):
+        inc.insert([[-1, 2]])
+    with pytest.raises(ValueError):
+        inc.connected(0, 4)            # JAX would clamp, not error
+    with pytest.raises(ValueError):
+        inc.connected(-1, 0)
+
+
+def test_incremental_work_cheaper_than_recompute():
+    """The incremental absorb hooks only the new edges; a from-scratch
+    adaptive run re-hooks the full accumulated edge list every batch."""
+    n = 256
+    rng = np.random.default_rng(3)
+    batches = [rng.integers(0, n, (32, 2)).astype(np.int32)
+               for _ in range(8)]
+    inc = IncrementalCC(n)
+    full_hook_ops = 0
+    acc = np.zeros((0, 2), np.int32)
+    for b in batches:
+        inc.insert(b)
+        acc = np.concatenate([acc, b], axis=0)
+        full = connected_components(acc, n, method="adaptive")
+        full_hook_ops += int(full.work.hook_ops)
+    assert inc.work["hook_ops"] < full_hook_ops
+
+
+def test_incremental_empty_graph():
+    inc = IncrementalCC(0)
+    inc.insert(np.zeros((0, 2), np.int32))
+    assert inc.labels.shape == (0,)
+
+
+# --------------------------------------------------------------------------
+# Shared rounds core: billing + API contracts
+# --------------------------------------------------------------------------
+
+def test_segment_true_counts_sum_to_true_edges():
+    plan = plan_segmentation(100, 30)        # pads 100 edges over s segs
+    counts = np.asarray(rounds.segment_true_counts(100, plan))
+    assert counts.shape == (plan.num_segments,)
+    assert counts.sum() == 100
+    assert counts.max() <= plan.segment_size
+
+
+def test_adaptive_hook_ops_bill_true_edges():
+    """Single-graph adaptive billing: with padding present, hook_ops is
+    (1 + cleanup_rounds) * E_true * (1 + lift_steps) — never a function
+    of the padded segment size."""
+    g = G.chain(17)                          # 16 edges
+    lift, segs = 2, 3                        # seg=6 -> 18 padded slots
+    plan = plan_segmentation(g.num_edges, g.num_nodes, segs)
+    assert plan.padded_edges > g.num_edges   # the scenario under test
+    res = connected_components(g.edges, g.num_nodes, method="adaptive",
+                               num_segments=segs, lift_steps=lift)
+    cleanup = int(res.work.hook_rounds) - plan.num_segments
+    assert cleanup >= 0
+    # the old (buggy) padded billing would have charged
+    # plan.segment_size per scan segment instead of the true count
+    assert int(res.work.hook_ops) == \
+        (1 + cleanup) * g.num_edges * (1 + lift)
+
+
+def test_hostloop_unknown_method_raises():
+    g = G.chain(5)
+    with pytest.raises(ValueError, match="unknown method"):
+        connected_components_hostloop(g.edges, g.num_nodes,
+                                      method="adaptive")

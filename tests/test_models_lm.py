@@ -30,6 +30,7 @@ def test_forward_shapes_and_finite(smoke, rng):
     assert np.isfinite(float(aux))
 
 
+@pytest.mark.slow
 def test_loss_decreases_under_training(smoke, rng):
     from repro.train import loop
     from repro.train.optimizer import adamw, AdamWConfig
@@ -54,6 +55,7 @@ def test_chunked_loss_equals_dense(smoke, rng):
     assert abs(float(dense) - float(chunked)) < 1e-4, name
 
 
+@pytest.mark.slow
 def test_decode_matches_forward(smoke, rng):
     name, cfg, params = smoke
     B, S = 2, 12
@@ -71,6 +73,7 @@ def test_decode_matches_forward(smoke, rng):
     assert gen[0, 2] == np.asarray(jnp.argmax(fl, -1))[0, -1], name
 
 
+@pytest.mark.slow
 def test_blocked_attention_equals_dense(rng):
     B, S, H, D = 2, 2048, 4, 32
     q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
@@ -122,6 +125,7 @@ def test_gemma_ties_embeddings():
     assert "lm_head" not in struct
 
 
+@pytest.mark.slow
 def test_engine_continuous_batching_matches_standalone(rng):
     cfg = get_arch("qwen2.5-32b").make_smoke_config()
     params = T.init(jax.random.PRNGKey(0), cfg)

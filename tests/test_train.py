@@ -288,6 +288,7 @@ def test_prefetcher_order_and_exception():
         next(it)
 
 
+@pytest.mark.slow
 def test_launcher_smoke_train_with_injected_failure(tmp_path):
     from repro.launch import train as lt
     rc = lt.main(["--arch", "dcn-v2", "--steps", "30", "--batch", "8",
