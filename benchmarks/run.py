@@ -16,6 +16,11 @@
   incremental Incremental-vs-full-recompute table: streaming edge
               insertions absorbed by ``IncrementalCC`` vs a from-scratch
               adaptive run per batch (DESIGN.md §6).
+  service     Connectivity-service table: a mixed insert/query stream
+              through the multi-tenant registry (policy-routed inserts,
+              microbatched on-device queries) vs the recompute-per-query
+              counterfactual (DESIGN.md §7). Warm-starts the policy's
+              autotune cache (JSON under results/).
 
 Output: CSV blocks on stdout + files under benchmarks/results/; the
 batched/incremental tables additionally emit one standard ``BENCH
@@ -319,11 +324,104 @@ def incremental(scale: float) -> None:
     _emit_bench("incremental", rows)
 
 
+def service(scale: float) -> None:
+    """Connectivity-service table (DESIGN.md §7): two live tenants (a
+    social/kron R-MAT and a road grid), a mixed stream of insert and
+    query requests through the slot-based engine. The counterfactual a
+    query service without live labels would pay — one full adaptive
+    recompute of the accumulated edge set per query request — is
+    measured for real (same engine, same inputs). hook_ops is the
+    hardware-independent signal; every service query is answered from
+    the live label array (zero recomputes)."""
+    from repro.connectivity.policy import AutotuneCache, warm_start
+    from repro.connectivity.registry import GraphRegistry
+    from repro.connectivity.service import ConnectivityService
+    from repro.core.cc import connected_components
+    from repro.core.unionfind import connected_components_oracle
+    from repro.graphs.generators import grid_road, rmat
+
+    side = max(8, int((24e6 * scale) ** 0.5))
+    sc = max(8, int(np.log2(max(5e6 * scale, 2))))
+    tenants = {
+        "social": rmat(sc, 7, a=0.45, b=0.22, c=0.22, seed=1,
+                       name="social"),
+        "road": grid_road(side, extra_prob=0.02, seed=1, name="road"),
+    }
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    cache_path = os.path.join(RESULTS_DIR, "autotune_cache.json")
+    policy_cache = warm_start(tenants.values(), AutotuneCache(cache_path))
+
+    n_rounds, queries_per_round = 6, 4
+    pairs_per_query = 64
+
+    def run_stream(collect_counterfactual: bool):
+        registry = GraphRegistry(policy_cache=policy_cache)
+        svc = ConnectivityService(registry, slots=32)
+        rng = np.random.default_rng(0)
+        counter_ops = 0
+        for name, g in tenants.items():
+            registry.create(name, g.num_nodes)
+        splits = {name: np.array_split(
+            rng.permutation(g.num_edges), n_rounds)
+            for name, g in tenants.items()}
+        for rnd in range(n_rounds):
+            for name, g in tenants.items():
+                edges = np.asarray(g.edges)
+                svc.submit_insert(name, edges[splits[name][rnd]])
+                for _ in range(queries_per_round):
+                    pairs = rng.integers(0, g.num_nodes,
+                                         (pairs_per_query, 2))
+                    svc.submit_query(name, "same_component", pairs)
+                svc.submit_query(name, "count_components")
+            svc.run()
+            if collect_counterfactual:
+                for name, g in tenants.items():
+                    acc = np.concatenate(
+                        [np.asarray(g.edges)[s]
+                         for s in splits[name][: rnd + 1]], axis=0)
+                    res = connected_components(acc, g.num_nodes,
+                                               method="adaptive")
+                    counter_ops += (queries_per_round + 1) * int(
+                        res.work.hook_ops)
+        return svc, counter_ops
+
+    svc, counter_ops = run_stream(True)
+    # correctness gate: final labels equal the union-find oracle
+    for name, g in tenants.items():
+        want = connected_components_oracle(g.edges, g.num_nodes)
+        got = np.asarray(svc.registry.get(name).labels)
+        assert np.array_equal(got, want), name
+
+    t = _bench(lambda: run_stream(False)[0].registry.get(
+        "road").labels, reps=2)
+    service_ops = sum(s["hook_ops"] for s in svc.registry.stats().values())
+    assert service_ops < counter_ops, (service_ops, counter_ops)
+    st = svc.stats
+    rows = [{
+        "workload": "mixed-insert-query",
+        "tenants": len(tenants),
+        "rounds": n_rounds,
+        "insert_requests": st["inserts_absorbed"],
+        "query_requests": st["queries_served"],
+        "pairs_answered": st["pairs_answered"],
+        "query_calls": st["query_calls"],
+        "ms_stream": round(t * 1e3, 2),
+        "queries_per_s": round(st["queries_served"] / t, 1),
+        "recomputes_avoided": st["recomputes_avoided"],
+        "hook_ops_service": service_ops,
+        "hook_ops_perquery_recompute": counter_ops,
+        "hook_ops_saved_x": round(counter_ops / max(service_ops, 1), 2),
+        "autotune_cache": os.path.basename(cache_path),
+    }]
+    _emit_bench("service", rows)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=["table1", "fig5", "fig6", "kernels",
-                             "batched", "incremental"])
+                             "batched", "incremental", "service"])
     ap.add_argument("--scale", type=float, default=1 / 256,
                     help="Table I graph scale factor")
     args = ap.parse_args()
@@ -332,7 +430,8 @@ def main() -> None:
             "fig6": lambda: fig6(args.scale),
             "kernels": kernels,
             "batched": batched,
-            "incremental": lambda: incremental(args.scale)}
+            "incremental": lambda: incremental(args.scale),
+            "service": lambda: service(args.scale)}
     for name, job in jobs.items():
         if args.only and name != args.only:
             continue

@@ -1,0 +1,19 @@
+"""Connectivity query service (DESIGN.md §7): on-device query kernels
+over canonical label arrays, the adaptive method-selection policy, a
+multi-tenant registry with merge-precise invalidation, and a slot-based
+microbatching engine."""
+from repro.connectivity.policy import (AutotuneCache, GraphFeatures,
+                                       select_method)
+from repro.connectivity.queries import (component_histogram,
+                                        component_size, component_sizes,
+                                        count_components, same_component)
+from repro.connectivity.registry import GraphRegistry, TenantGraph
+from repro.connectivity.service import ConnectivityService, Request
+
+__all__ = [
+    "AutotuneCache", "GraphFeatures", "select_method",
+    "component_histogram", "component_size", "component_sizes",
+    "count_components", "same_component",
+    "GraphRegistry", "TenantGraph",
+    "ConnectivityService", "Request",
+]

@@ -1,0 +1,230 @@
+"""Adaptive method selection — the paper's heuristic as a serving policy.
+
+The paper's contribution is *adaptivity*: pick the work-efficient
+schedule from the input's shape instead of hardcoding it. This module
+is the brain behind ``connected_components(..., method="auto")`` and
+the registry's insert path. Two layers:
+
+1. **Heuristic** (`heuristic_method`) — the paper's segmentation rule
+   on cheap, O(1) features (|V|, |E|, density 2|E|/|V|, update rate):
+
+   * a pending insert batch that is small relative to the absorbed
+     edge set (update rate <= ``UPDATE_RATE_ABSORB``) is an
+     ``incremental-absorb`` (hook only the delta; Hong et al.) — a
+     bulk load falls through to a static method on the accumulated set;
+   * density < ``MIN_SEGMENT_DENSITY``: s = 2|E|/|V| rounds to <= 1
+     segment, so segmentation degenerates — run ``atomic_hook``
+     (one segment, no scan overhead);
+   * density >= ``LABELPROP_DENSITY_FRAC`` * |V| (near-clique regime,
+     O(1) diameter): ``labelprop`` converges in a sweep or two and
+     skips the hook/compress machinery;
+   * otherwise: ``adaptive`` (the paper's default, Fig. 4).
+
+2. **Autotune cache** (`AutotuneCache`) — measured truth beats
+   modeling. Wall-clock winners are cached per *bucketed* shape (the
+   power-of-two (V_pad, E_pad) bucket of ``repro.core.batch``, so one
+   measurement covers a whole size regime), persisted as JSON
+   (``{"version": 1, "entries": {"v1024_e4096": {"method": ...,
+   "ms": ...}, ...}}``), and warm-started by the benchmark sweep
+   (``benchmarks/run.py --only service`` calls `warm_start`).
+
+Selection order in `select_method`: update-rate rule first (absorb vs
+static is structural, not tunable), then autotune-cache hit, then the
+heuristic. Set ``REPRO_AUTOTUNE_CACHE=/path.json`` to persist the
+default process-wide cache across runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+
+STATIC_METHODS = ("adaptive", "atomic_hook", "labelprop")
+INCREMENTAL_ABSORB = "incremental-absorb"
+
+# heuristic thresholds (see module docstring)
+UPDATE_RATE_ABSORB = 0.5       # delta/total above this is a bulk load
+MIN_SEGMENT_DENSITY = 1.5      # below: s = round(2E/V) <= 1 segment
+LABELPROP_DENSITY_FRAC = 0.25  # density >= frac*V: near-clique regime
+
+CACHE_FORMAT_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphFeatures:
+    """Cheap selection features — all O(1) from array shapes."""
+
+    num_nodes: int
+    num_edges: int              # edges already absorbed (static: total)
+    delta_edges: int | None = None   # pending insert batch (None: static)
+
+    @property
+    def total_edges(self) -> int:
+        return self.num_edges + (self.delta_edges or 0)
+
+    @property
+    def density(self) -> float:
+        """The paper's segmentation key: 2|E|/|V| (average degree)."""
+        return 2.0 * self.total_edges / max(self.num_nodes, 1)
+
+    @property
+    def update_rate(self) -> float:
+        """|delta E| / |E total| — 0 for a static (no-delta) call."""
+        if self.delta_edges is None:
+            return 0.0
+        return self.delta_edges / max(self.total_edges, 1)
+
+
+def extract_features(num_nodes: int, num_edges: int,
+                     delta_edges: int | None = None) -> GraphFeatures:
+    return GraphFeatures(num_nodes=int(num_nodes),
+                         num_edges=int(num_edges),
+                         delta_edges=None if delta_edges is None
+                         else int(delta_edges))
+
+
+def heuristic_method(f: GraphFeatures) -> str:
+    """The paper's segmentation heuristic as a method choice."""
+    if (f.delta_edges is not None and f.num_edges > 0
+            and f.update_rate <= UPDATE_RATE_ABSORB):
+        return INCREMENTAL_ABSORB
+    if f.num_nodes <= 1 or f.total_edges == 0:
+        return "adaptive"              # trivial either way
+    if f.density < MIN_SEGMENT_DENSITY:
+        return "atomic_hook"
+    if f.density >= LABELPROP_DENSITY_FRAC * f.num_nodes:
+        return "labelprop"
+    return "adaptive"
+
+
+# ---------------------------------------------------------------------------
+# Measured autotune cache
+# ---------------------------------------------------------------------------
+
+class AutotuneCache:
+    """Measured best-method table keyed on the power-of-two shape bucket.
+
+    JSON format (``CACHE_FORMAT_VERSION``)::
+
+        {"version": 1,
+         "entries": {"v1024_e4096": {"method": "adaptive", "ms": 1.93,
+                                     "num_nodes": 1000, "num_edges": 3900},
+                     ...}}
+
+    A lookup for any graph landing in a recorded bucket returns the
+    measured winner; ``measure`` times the static candidates and
+    records one. ``path=None`` keeps the table in memory only.
+    """
+
+    def __init__(self, path: str | None = None):
+        self.path = path
+        self.entries: dict[str, dict] = {}
+        if path and os.path.exists(path):
+            self.load()
+
+    @staticmethod
+    def key(num_nodes: int, num_edges: int) -> str:
+        from repro.core.batch import bucket_shape
+        v_pad, e_pad = bucket_shape(num_nodes, num_edges)
+        return f"v{v_pad}_e{e_pad}"
+
+    def lookup(self, num_nodes: int, num_edges: int) -> str | None:
+        ent = self.entries.get(self.key(num_nodes, num_edges))
+        return ent["method"] if ent else None
+
+    def record(self, num_nodes: int, num_edges: int, method: str,
+               ms: float) -> None:
+        self.entries[self.key(num_nodes, num_edges)] = {
+            "method": method, "ms": round(float(ms), 4),
+            "num_nodes": int(num_nodes), "num_edges": int(num_edges)}
+        if self.path:
+            self.save()
+
+    def save(self) -> None:
+        payload = {"version": CACHE_FORMAT_VERSION, "entries": self.entries}
+        os.makedirs(os.path.dirname(os.path.abspath(self.path)),
+                    exist_ok=True)
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as fh:
+            json.dump(payload, fh, indent=1, sort_keys=True)
+        os.replace(tmp, self.path)
+
+    def load(self) -> None:
+        with open(self.path) as fh:
+            payload = json.load(fh)
+        if payload.get("version") != CACHE_FORMAT_VERSION:
+            return                      # stale format: start fresh
+        self.entries = dict(payload.get("entries", {}))
+
+    def measure(self, edges, num_nodes: int,
+                methods: tuple[str, ...] = STATIC_METHODS,
+                reps: int = 2) -> str:
+        """Time each static candidate on this graph, record and return
+        the wall-clock winner for its shape bucket."""
+        from repro.core.cc import connected_components
+        edges = np.asarray(edges, np.int32).reshape(-1, 2)
+        best_method, best_ms = None, float("inf")
+        for method in methods:
+            connected_components(edges, num_nodes,
+                                 method=method).labels.block_until_ready()
+            ts = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                connected_components(
+                    edges, num_nodes,
+                    method=method).labels.block_until_ready()
+                ts.append(time.perf_counter() - t0)
+            ms = float(np.median(ts)) * 1e3
+            if ms < best_ms:
+                best_method, best_ms = method, ms
+        self.record(num_nodes, edges.shape[0], best_method, best_ms)
+        return best_method
+
+
+def warm_start(graphs, cache: AutotuneCache, reps: int = 2
+               ) -> AutotuneCache:
+    """Benchmark-sweep warm start: measure every graph's bucket once."""
+    for g in graphs:
+        if cache.lookup(g.num_nodes, g.num_edges) is None:
+            cache.measure(g.edges, g.num_nodes, reps=reps)
+    return cache
+
+
+_default_cache: AutotuneCache | None = None
+
+
+def default_cache() -> AutotuneCache:
+    """Process-wide cache; persisted iff ``REPRO_AUTOTUNE_CACHE`` names
+    a JSON path."""
+    global _default_cache
+    if _default_cache is None:
+        _default_cache = AutotuneCache(
+            os.environ.get("REPRO_AUTOTUNE_CACHE"))
+    return _default_cache
+
+
+# ---------------------------------------------------------------------------
+# The selection entry point
+# ---------------------------------------------------------------------------
+
+def select_method(num_nodes: int, num_edges: int, *,
+                  delta_edges: int | None = None,
+                  cache: AutotuneCache | None = None) -> str:
+    """Pick the execution method from graph features.
+
+    Static callers (``connected_components(method="auto")``) pass sizes
+    only and get a method from ``STATIC_METHODS``; the registry's
+    insert path also passes ``delta_edges`` and may get
+    ``"incremental-absorb"`` back. Autotuned winners override the
+    heuristic for the static choice.
+    """
+    f = extract_features(num_nodes, num_edges, delta_edges)
+    choice = heuristic_method(f)
+    if choice == INCREMENTAL_ABSORB:
+        return choice
+    cache = default_cache() if cache is None else cache
+    hit = cache.lookup(f.num_nodes, f.total_edges)
+    return hit if hit is not None else choice

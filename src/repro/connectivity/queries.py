@@ -1,0 +1,115 @@
+"""Fully on-device connectivity query kernels over a label array.
+
+Every engine in ``repro.core`` converges to canonical min-id labels
+(``labels[v] == min vertex id of v's component``); once that array is
+on the device, every connectivity question is a gather / scatter-add /
+sort — no host round trip and no ``np.unique``:
+
+  * ``same_component(labels, pairs)``   — vectorized [Q, 2] batch of
+    "are u and v connected?" (one gather + compare);
+  * ``component_size(labels, vertices)``— per-vertex component sizes
+    via a scatter-add census over the label array;
+  * ``count_components(labels)``        — distinct-label count via
+    sort + boundary segment count (works for ANY representative
+    labeling, canonical or not — the on-device replacement for the old
+    host-side ``np.unique(...).size``);
+  * ``component_histogram(labels)``     — number of components per
+    power-of-two size bin (census + exact integer log2 via frexp).
+
+All kernels are jitted; the jit cache is keyed on the (static) label
+and query-batch shapes, so callers that pad query batches to shared
+buckets (``repro.core.batch.pad_rows_pow2``; what the service layer
+does) route every same-shape batch through one compiled program.
+Results stay on device — callers choose when to sync.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def same_component(labels: jnp.ndarray, pairs: jnp.ndarray) -> jnp.ndarray:
+    """bool [Q]: ``labels[u] == labels[v]`` for every pair (u, v).
+
+    ``pairs`` is an int [Q, 2] array of vertex ids. Out-of-range ids are
+    clamped by JAX gather semantics — validate at the API boundary
+    (the registry does).
+    """
+    pairs = jnp.asarray(pairs, jnp.int32).reshape(-1, 2)
+    return labels[pairs[:, 0]] == labels[pairs[:, 1]]
+
+
+@jax.jit
+def component_census(labels: jnp.ndarray) -> jnp.ndarray:
+    """int32 [V]: ``census[r]`` = size of the component whose
+    representative is ``r`` (0 for non-representative ids). One
+    scatter-add over the label array."""
+    v = labels.shape[0]
+    return jnp.zeros((v,), jnp.int32).at[labels].add(1)
+
+
+@jax.jit
+def component_sizes(labels: jnp.ndarray) -> jnp.ndarray:
+    """int32 [V]: size of every vertex's component (census gathered
+    back through the labels)."""
+    return component_census(labels)[labels]
+
+
+@jax.jit
+def component_size(labels: jnp.ndarray, vertices: jnp.ndarray
+                   ) -> jnp.ndarray:
+    """int32 [Q]: component size for each queried vertex."""
+    vertices = jnp.asarray(vertices, jnp.int32).reshape(-1)
+    return component_census(labels)[labels[vertices]]
+
+
+@jax.jit
+def _count_components(labels: jnp.ndarray) -> jnp.ndarray:
+    s = jnp.sort(labels)
+    return (jnp.sum(s[1:] != s[:-1]) + 1).astype(jnp.int32)
+
+
+def count_components(labels: jnp.ndarray) -> jnp.ndarray:
+    """int32 scalar: number of distinct labels (= components).
+
+    Sort + segment-boundary count, so it is correct for any
+    representative labeling, not just the canonical min-id fixed point.
+    Stays on device; wrap in ``int(...)`` to sync.
+    """
+    labels = jnp.asarray(labels)
+    if labels.shape[0] == 0:
+        return jnp.zeros((), jnp.int32)
+    return _count_components(labels)
+
+
+def _floor_log2(n: jnp.ndarray) -> jnp.ndarray:
+    """Exact floor(log2) for positive int32. frexp(x) = (m, e) with
+    m in [0.5, 1) gives floor(log2 x) == e - 1, but only while the
+    int->float32 cast is exact (< 2^24) — a component of size 2^25 - 1
+    would round UP and land one bin high. Shift the high half down so
+    every cast value fits in 16 bits."""
+    hi = n >> 16
+    val = jnp.where(hi > 0, hi, n).astype(jnp.float32)   # < 2^16: exact
+    _, exp = jnp.frexp(val)
+    return exp - 1 + jnp.where(hi > 0, 16, 0)
+
+
+@jax.jit
+def _component_histogram(labels: jnp.ndarray) -> jnp.ndarray:
+    v = labels.shape[0]
+    census = component_census(labels)
+    nbins = max(int(v - 1).bit_length() + 1, 1)
+    bins = jnp.where(census > 0, _floor_log2(jnp.maximum(census, 1)),
+                     nbins)                           # empty -> dropped
+    return jnp.zeros((nbins,), jnp.int32).at[bins].add(1, mode="drop")
+
+
+def component_histogram(labels: jnp.ndarray) -> jnp.ndarray:
+    """int32 [floor(log2 V) + 1]: ``hist[b]`` = number of components
+    with size in [2^b, 2^(b+1)). Census + exact log2 binning, all on
+    device."""
+    labels = jnp.asarray(labels)
+    if labels.shape[0] == 0:
+        return jnp.zeros((1,), jnp.int32)
+    return _component_histogram(labels)

@@ -1,0 +1,230 @@
+"""Multi-tenant graph registry: N named live graphs, versioned labels,
+query-result caching with merge-precise invalidation.
+
+Each tenant is a named vertex set with a live canonical label array
+backed by ``IncrementalCC``. Inserts are routed by the adaptive policy
+(``policy.select_method``): a small delta is absorbed incrementally
+(hook only the new edges), a bulk load is rebuilt through the chosen
+static engine and adopted. Queries run through the on-device kernels
+(``queries``), with query batches padded to the power-of-two buckets of
+``repro.core.batch`` so same-shape batches share one jit cache entry
+across tenants.
+
+**Version / invalidation protocol** (DESIGN.md §7): a tenant's label
+*version* is ``IncrementalCC.version`` — it ticks only when an insert
+batch actually merges components (the absorb jit reports ``any(labels
+!= old)`` in the same device call). Cached query results are stamped
+with the version they were computed at and served only while the
+version is unchanged; an insert that lands entirely inside existing
+components keeps every cached answer warm. Stale answers are therefore
+impossible by construction: connectivity under insert-only workloads
+changes exactly when labels change.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import numpy as np
+
+from repro.connectivity import policy, queries
+from repro.core.batch import pad_rows_pow2
+from repro.core.incremental import IncrementalCC
+
+_MAX_CACHED_RESULTS = 1024      # per tenant; FIFO-evicted
+
+
+@dataclasses.dataclass
+class TenantStats:
+    inserts: int = 0
+    absorbs: int = 0            # inserts routed through the incremental path
+    rebuilds: int = 0           # inserts routed through a static engine
+    merges: int = 0             # inserts that changed labels (version ticks)
+    queries: int = 0
+    cache_hits: int = 0
+
+
+class TenantGraph:
+    """One live graph: IncrementalCC state + accumulated edge log."""
+
+    def __init__(self, name: str, num_nodes: int, *, lift_steps: int = 2,
+                 policy_cache: policy.AutotuneCache | None = None):
+        self.name = name
+        self.num_nodes = num_nodes
+        self.inc = IncrementalCC(num_nodes, lift_steps=lift_steps)
+        self.policy_cache = policy_cache
+        self._edge_log: list[np.ndarray] = []   # for the bulk-rebuild path
+        self.stats = TenantStats()
+        self.last_method = None                  # last policy decision
+
+    @property
+    def version(self) -> int:
+        return self.inc.version
+
+    @property
+    def labels(self):
+        return self.inc.labels
+
+    @property
+    def num_edges(self) -> int:
+        return self.inc.num_edges_inserted
+
+    def edges(self) -> np.ndarray:
+        if not self._edge_log:
+            return np.zeros((0, 2), np.int32)
+        return np.concatenate(self._edge_log, axis=0)
+
+    def insert(self, new_edges) -> bool:
+        """Insert an edge batch; returns True iff components merged
+        (the label version ticked)."""
+        new_edges = np.asarray(new_edges, np.int32).reshape(-1, 2)
+        if (new_edges.size and
+                (new_edges.min() < 0 or new_edges.max() >= self.num_nodes)):
+            raise ValueError("edge endpoint out of range "
+                             f"[0, {self.num_nodes})")
+        before = self.inc.version
+        method = policy.select_method(
+            self.num_nodes, self.num_edges,
+            delta_edges=new_edges.shape[0], cache=self.policy_cache)
+        self.last_method = method
+        if new_edges.shape[0]:
+            self._edge_log.append(new_edges)
+        if method == policy.INCREMENTAL_ABSORB:
+            self.inc.insert(new_edges)
+            self.stats.absorbs += 1
+        else:
+            # bulk load: the accumulated set is mostly this batch — the
+            # chosen static engine (segmentation and all) beats hooking
+            # a huge unsegmented delta through the absorb loop
+            from repro.core.cc import connected_components
+            res = connected_components(self.edges(), self.num_nodes,
+                                       method=method)
+            self.inc.adopt(res.labels, work=res.work,
+                           num_edges=new_edges.shape[0])
+            self.stats.rebuilds += 1
+        self.stats.inserts += 1
+        merged = self.inc.version != before
+        self.stats.merges += int(merged)
+        return merged
+
+
+class GraphRegistry:
+    """Registry of named live graphs with version-stamped query caching."""
+
+    def __init__(self, *, lift_steps: int = 2,
+                 policy_cache: policy.AutotuneCache | None = None):
+        self.lift_steps = lift_steps
+        self.policy_cache = policy_cache
+        self._tenants: dict[str, TenantGraph] = {}
+        # per-tenant result cache: key -> (version, result); entries are
+        # dropped wholesale when the tenant's version ticks (a merge)
+        self._qcache: dict[str, dict] = {}
+
+    # -- tenant lifecycle --------------------------------------------------
+
+    def create(self, name: str, num_nodes: int) -> TenantGraph:
+        if name in self._tenants:
+            raise ValueError(f"tenant {name!r} already registered")
+        t = TenantGraph(name, num_nodes, lift_steps=self.lift_steps,
+                        policy_cache=self.policy_cache)
+        self._tenants[name] = t
+        self._qcache[name] = {}
+        return t
+
+    def get(self, name: str) -> TenantGraph:
+        if name not in self._tenants:
+            raise KeyError(f"unknown tenant {name!r}; "
+                           f"have {sorted(self._tenants)}")
+        return self._tenants[name]
+
+    def drop(self, name: str) -> None:
+        self.get(name)
+        del self._tenants[name]
+        del self._qcache[name]
+
+    def names(self) -> list[str]:
+        return sorted(self._tenants)
+
+    def __len__(self) -> int:
+        return len(self._tenants)
+
+    # -- mutation ----------------------------------------------------------
+
+    def insert(self, name: str, edges) -> int:
+        """Insert an edge batch; returns the tenant's label version.
+        Cached query results are invalidated ONLY when the batch merged
+        components."""
+        t = self.get(name)
+        if t.insert(edges):
+            self._qcache[name].clear()
+        return t.version
+
+    # -- queries (cached, on-device kernels) -------------------------------
+
+    def _cached(self, name: str, key, compute):
+        t = self.get(name)
+        cache = self._qcache[name]
+        t.stats.queries += 1
+        hit = cache.get(key)
+        if hit is not None and hit[0] == t.version:
+            t.stats.cache_hits += 1
+            return hit[1]
+        result = compute(t)
+        if len(cache) >= _MAX_CACHED_RESULTS:
+            cache.pop(next(iter(cache)))
+        cache[key] = (t.version, result)
+        return result
+
+    def _batched_query(self, name: str, kind: str, batch: np.ndarray,
+                       shape: tuple) -> np.ndarray:
+        """Shared validate/pad/cache path for vertex-batch queries:
+        bounds-check, pad to the power-of-two buckets (so every
+        same-shape batch — across all tenants of one |V| — hits one jit
+        cache entry), run the kernel, slice off the padding; cached by
+        content + label version."""
+        batch = np.asarray(batch, np.int32).reshape(shape)
+        t = self.get(name)
+        if batch.size and (batch.min() < 0 or batch.max() >= t.num_nodes):
+            raise ValueError(f"vertex out of range [0, {t.num_nodes})")
+        q = batch.shape[0]
+        kernel = getattr(queries, kind)
+        # digest, not raw bytes: keys stay O(1) even for huge batches
+        digest = hashlib.blake2b(batch.tobytes(), digest_size=16).digest()
+        return self._cached(
+            name, (kind, batch.shape, digest),
+            lambda t: np.asarray(kernel(t.labels,
+                                        pad_rows_pow2(batch)))[:q])
+
+    def same_component(self, name: str, pairs) -> np.ndarray:
+        """bool [Q] for an int [Q, 2] pair batch."""
+        return self._batched_query(name, "same_component", pairs, (-1, 2))
+
+    def component_size(self, name: str, vertices) -> np.ndarray:
+        """int32 [Q] component sizes for a vertex batch."""
+        return self._batched_query(name, "component_size", vertices,
+                                   (-1,))
+
+    def count_components(self, name: str) -> int:
+        return int(self._cached(
+            name, ("count_components",),
+            lambda t: queries.count_components(t.labels)))
+
+    def component_histogram(self, name: str) -> np.ndarray:
+        return np.asarray(self._cached(
+            name, ("component_histogram",),
+            lambda t: queries.component_histogram(t.labels)))
+
+    # -- introspection -----------------------------------------------------
+
+    def version(self, name: str) -> int:
+        return self.get(name).version
+
+    def stats(self) -> dict:
+        out = {}
+        for name, t in self._tenants.items():
+            out[name] = {**dataclasses.asdict(t.stats),
+                         "version": t.version,
+                         "num_nodes": t.num_nodes,
+                         "num_edges": t.num_edges,
+                         "hook_ops": t.inc.work["hook_ops"]}
+        return out

@@ -1,0 +1,177 @@
+"""Slot-based connectivity query engine: microbatched interleaved
+insert/query traffic over the multi-tenant registry.
+
+Mirrors the admit/step/retire idiom of ``repro.serving.engine``: a
+bounded number of request slots per tick; each tick admits queued
+requests, executes them in two phases, and retires them with results.
+
+Per tick:
+
+  * **inserts coalesce per tenant** — all admitted insert batches for
+    one tenant concatenate into ONE absorb/rebuild call (one device
+    dispatch instead of one per request);
+  * **queries microbatch per (tenant, kind)** — all admitted
+    ``same_component`` pairs (resp. ``component_size`` vertices) for a
+    tenant concatenate into one batch, padded to the power-of-two
+    buckets of ``repro.core.batch``, so every same-shape batch across
+    all tenants of one |V| routes through one jit cache entry.
+
+Consistency model: within a tick, inserts apply before queries, so a
+query observes every insert admitted in its tick (and all earlier
+ticks) — monotone read-fresh semantics. Connectivity under insert-only
+workloads is monotone, so answers never regress.
+
+Every query is served from the live label array — zero label
+recomputes. ``stats["recomputes_avoided"]`` counts the full CC runs a
+recompute-per-query design would have paid; the ``service`` benchmark
+(``benchmarks/run.py --only service``) prices that counterfactual in
+hook_ops.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.connectivity.registry import GraphRegistry
+
+QUERY_KINDS = ("same_component", "component_size", "count_components",
+               "component_histogram")
+KINDS = ("insert",) + QUERY_KINDS
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    tenant: str
+    kind: str                       # one of KINDS
+    payload: Optional[np.ndarray] = None
+    result: Any = None
+    done: bool = False
+    error: Optional[str] = None
+
+
+class ConnectivityService:
+    """Continuous-microbatching engine over a ``GraphRegistry``."""
+
+    def __init__(self, registry: GraphRegistry | None = None, *,
+                 slots: int = 32):
+        self.registry = registry if registry is not None else GraphRegistry()
+        self.slots = slots
+        self.queue: list[Request] = []
+        self._uid = 0
+        self.stats = {
+            "ticks": 0,
+            "inserts_absorbed": 0,        # insert requests completed
+            "insert_calls": 0,            # coalesced device-side inserts
+            "queries_served": 0,          # query requests completed
+            "query_calls": 0,             # microbatched kernel dispatches
+            "pairs_answered": 0,
+            "recomputes_avoided": 0,      # vs a recompute-per-query design
+            "errors": 0,
+        }
+
+    # -- submission --------------------------------------------------------
+
+    def submit(self, tenant: str, kind: str, payload=None) -> int:
+        if kind not in KINDS:
+            raise ValueError(f"unknown kind {kind!r}; choose from {KINDS}")
+        if kind in ("insert", "same_component", "component_size"):
+            if payload is None:
+                raise ValueError(f"kind {kind!r} requires a payload")
+            payload = np.asarray(payload, np.int32)
+            payload = payload.reshape(-1) if kind == "component_size" \
+                else payload.reshape(-1, 2)
+        else:
+            payload = None
+        self._uid += 1
+        self.queue.append(Request(self._uid, tenant, kind, payload))
+        return self._uid
+
+    def submit_insert(self, tenant: str, edges) -> int:
+        return self.submit(tenant, "insert",
+                           np.asarray(edges, np.int32).reshape(-1, 2))
+
+    def submit_query(self, tenant: str, kind: str, payload=None) -> int:
+        if kind not in QUERY_KINDS:
+            raise ValueError(f"unknown query kind {kind!r}; "
+                             f"choose from {QUERY_KINDS}")
+        return self.submit(tenant, kind, payload)
+
+    # -- the engine tick ---------------------------------------------------
+
+    def _fail(self, req: Request, err: Exception) -> None:
+        req.error = f"{type(err).__name__}: {err}"
+        req.done = True
+        self.stats["errors"] += 1
+
+    def _run_inserts(self, inserts: list[Request]) -> None:
+        by_tenant: dict[str, list[Request]] = {}
+        for r in inserts:
+            by_tenant.setdefault(r.tenant, []).append(r)
+        for tenant, reqs in by_tenant.items():
+            batch = np.concatenate([r.payload for r in reqs], axis=0)
+            try:
+                version = self.registry.insert(tenant, batch)
+            except Exception as err:     # fail the group, not the tick
+                for r in reqs:
+                    self._fail(r, err)
+                continue
+            self.stats["insert_calls"] += 1
+            for r in reqs:
+                r.result = version
+                r.done = True
+                self.stats["inserts_absorbed"] += 1
+
+    def _run_query_group(self, tenant: str, kind: str,
+                         reqs: list[Request]) -> None:
+        try:
+            if kind in ("same_component", "component_size"):
+                parts = [r.payload for r in reqs]
+                flat = np.concatenate(parts, axis=0)
+                answers = getattr(self.registry, kind)(tenant, flat)
+                self.stats["query_calls"] += 1
+                self.stats["pairs_answered"] += int(flat.shape[0])
+                off = 0
+                for r, part in zip(reqs, parts):
+                    r.result = answers[off:off + part.shape[0]]
+                    off += part.shape[0]
+            else:                       # scalar/histogram: one call serves all
+                answer = getattr(self.registry, kind)(tenant)
+                self.stats["query_calls"] += 1
+                for r in reqs:
+                    r.result = answer
+        except Exception as err:         # fail the group, not the tick
+            for r in reqs:
+                self._fail(r, err)
+            return
+        for r in reqs:
+            r.done = True
+            self.stats["queries_served"] += 1
+            self.stats["recomputes_avoided"] += 1
+
+    def step(self) -> list[Request]:
+        """One tick: admit up to ``slots`` requests, coalesce inserts,
+        microbatch queries, retire. Returns the retired requests."""
+        admitted = self.queue[: self.slots]
+        if not admitted:
+            return []
+        self.queue = self.queue[self.slots:]
+        self.stats["ticks"] += 1
+
+        self._run_inserts([r for r in admitted if r.kind == "insert"])
+        groups: dict[tuple[str, str], list[Request]] = {}
+        for r in admitted:
+            if r.kind != "insert":
+                groups.setdefault((r.tenant, r.kind), []).append(r)
+        for (tenant, kind), reqs in groups.items():
+            self._run_query_group(tenant, kind, reqs)
+        return admitted
+
+    def run(self) -> list[Request]:
+        """Drain the queue; returns every retired request in admit order."""
+        finished: list[Request] = []
+        while self.queue:
+            finished.extend(self.step())
+        return finished

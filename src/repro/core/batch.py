@@ -45,6 +45,26 @@ def _next_pow2(x: int) -> int:
     return 1 << max(0, int(x - 1).bit_length())
 
 
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= x (>= 1)."""
+    return _next_pow2(max(x, 1))
+
+
+def pad_rows_pow2(arr: np.ndarray, min_rows: int = _MIN_EDGES
+                  ) -> np.ndarray:
+    """Pad axis 0 with zero rows to a power-of-two count (floored at
+    ``min_rows``). The same bucket rule the batched engine uses for
+    edge lists, reused by the connectivity service to route same-shape
+    query microbatches through one jit cache entry; zero rows are
+    no-ops for every query kernel (vertex 0 compared with itself)."""
+    arr = np.asarray(arr)
+    target = next_pow2(max(arr.shape[0], min_rows))
+    if target == arr.shape[0]:
+        return arr
+    pad = np.zeros((target - arr.shape[0],) + arr.shape[1:], arr.dtype)
+    return np.concatenate([arr, pad], axis=0)
+
+
 def bucket_shape(num_nodes: int, num_edges: int) -> tuple[int, int]:
     """The (V_pad, E_pad) bucket a graph lands in: next powers of two,
     floored at small minima so tiny graphs share one compile."""

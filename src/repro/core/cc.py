@@ -192,7 +192,10 @@ def connected_components(
         self loops and duplicates are harmless).
       num_nodes: |V| (static).
       method: one of ``soman | multijump | atomic_hook | adaptive |
-        labelprop``.
+        labelprop``, or ``auto`` — the adaptive-selection policy
+        (``repro.connectivity.policy``) picks from the graph's features
+        (density 2|E|/|V| heuristic, overridden by a measured autotune
+        cache when one is warm).
       num_segments: override the adaptive 2|E|/|V| heuristic (adaptive only).
       lift_steps: bounded root-chase depth in the Atomic-Hook analogue.
 
@@ -205,6 +208,9 @@ def connected_components(
     if edges.shape[0] == 0:
         return CCResult(jnp.arange(num_nodes, dtype=jnp.int32),
                         WorkCounters.zeros())
+    if method == "auto":
+        from repro.connectivity.policy import select_method
+        method = select_method(num_nodes, edges.shape[0])
     return _cc_jit(edges, num_nodes=num_nodes, method=method,
                    num_segments=num_segments, lift_steps=lift_steps)
 
@@ -306,4 +312,8 @@ def connected_components_hostloop(
 
 
 def num_components(labels) -> int:
-    return int(np.unique(np.asarray(labels)).size)
+    """Distinct-label count — thin wrapper over the on-device
+    sort/segment kernel (``connectivity.queries.count_components``);
+    the old host-side ``np.unique`` round trip is gone."""
+    from repro.connectivity.queries import count_components
+    return int(count_components(jnp.asarray(labels)))

@@ -39,8 +39,17 @@ _MIN_BATCH_PAD = 64
 @functools.partial(jax.jit, static_argnames=("lift_steps",))
 def _absorb_jit(pi, new_edges, true_count, *, lift_steps):
     ops = rounds.jnp_round_ops(lift_steps)
-    return rounds.cleanup_rounds(pi, new_edges, ops, WorkCounters.zeros(),
-                                 true_edges=true_count)
+    new_pi, work = rounds.cleanup_rounds(pi, new_edges, ops,
+                                         WorkCounters.zeros(),
+                                         true_edges=true_count)
+    # merge detection rides in the same jit: the label-version counter
+    # (query-cache invalidation) must tick ONLY when labels changed
+    return new_pi, work, jnp.any(new_pi != pi)
+
+
+@jax.jit
+def _labels_changed(old_pi, new_pi):
+    return jnp.any(new_pi != old_pi)
 
 
 class IncrementalCC:
@@ -63,6 +72,10 @@ class IncrementalCC:
         self._pi = jnp.arange(num_nodes, dtype=jnp.int32)
         self.num_edges_inserted = 0
         self.batches_absorbed = 0
+        # label version: ticks ONLY when an insert actually merges
+        # components (labels changed) — the registry invalidates cached
+        # query results on version change and nothing else
+        self.version = 0
         # accumulated work, host-side ints (billed on true edges only)
         self.work = {k: 0 for k in WorkCounters._fields}
 
@@ -93,12 +106,39 @@ class IncrementalCC:
                      1 << int(e - 1).bit_length())
         padded = np.zeros((target, 2), np.int32)
         padded[:e] = new_edges
-        self._pi, work = _absorb_jit(
+        self._pi, work, changed = _absorb_jit(
             self._pi, jnp.asarray(padded),
             jnp.asarray(e, jnp.int32), lift_steps=self.lift_steps)
         for k, v in work._asdict().items():
             self.work[k] += int(v)
         self.work["sync_rounds"] += 1   # one jit call per absorb
+        if bool(changed):
+            self.version += 1
+        return self._pi
+
+    def adopt(self, labels, work=None, num_edges: int = 0) -> jnp.ndarray:
+        """Adopt externally computed canonical labels as the new state
+        (the registry's bulk-load path: the policy routed a large batch
+        through a static engine instead of the absorb). Bills ``work``
+        (a ``WorkCounters`` or field dict) into the accumulated
+        counters and ticks the version iff the labels changed.
+        """
+        labels = jnp.asarray(labels, jnp.int32)
+        if labels.shape != (self.num_nodes,):
+            raise ValueError(f"labels shape {labels.shape} != "
+                             f"({self.num_nodes},)")
+        changed = bool(_labels_changed(self._pi, labels)) \
+            if self.num_nodes else False
+        self._pi = labels
+        self.num_edges_inserted += int(num_edges)
+        self.batches_absorbed += 1
+        if work is not None:
+            if isinstance(work, WorkCounters):
+                work = work._asdict()
+            for k, v in work.items():
+                self.work[k] += int(v)
+        if changed:
+            self.version += 1
         return self._pi
 
     def connected(self, u: int, v: int) -> bool:
@@ -109,4 +149,7 @@ class IncrementalCC:
         return int(self._pi[u]) == int(self._pi[v])
 
     def num_components(self) -> int:
-        return int(np.unique(np.asarray(self._pi)).size)
+        """Component count — on-device sort/segment kernel, no host
+        ``np.unique`` round trip (``connectivity.queries``)."""
+        from repro.connectivity.queries import count_components
+        return int(count_components(self._pi))

@@ -453,16 +453,33 @@ def _write_full(buf_arr, new, start):
 
 
 def _write_ring(buf_arr, new, positions):
-    """Scatter new [B, S, ...] at per-request slots positions %% W."""
+    """Scatter new [B, S, ...] at per-request slots positions %% W.
+
+    Negative positions are DROPPED (scattered out of bounds): right-padded
+    prefill garbage must not be written at all — slot g %% W is shared with
+    real position g - W, so a masked-but-written garbage key would evict a
+    real key that is still inside the sliding window.
+    """
     w = buf_arr.shape[1]
-    slots = positions % w                       # [B, S]
+    slots = jnp.where(positions >= 0, positions % w, w)   # w = OOB -> drop
     b = buf_arr.shape[0]
     bi = jnp.arange(b, dtype=jnp.int32)[:, None]
-    return buf_arr.at[bi, slots].set(new.astype(buf_arr.dtype))
+    return buf_arr.at[bi, slots].set(new.astype(buf_arr.dtype),
+                                     mode="drop")
+
+
+def _ring_prefill_pos(prefill_len: int, width: int, batch: int
+                      ) -> jnp.ndarray:
+    """Fallback prefill write positions for a ring of ``width`` slots when
+    the caller supplied no per-request lengths: the last ``width`` buffer
+    positions, everything earlier dropped (-1)."""
+    idx = jnp.arange(prefill_len, dtype=jnp.int32)[None, :]
+    pos = jnp.where(idx >= prefill_len - width, idx, -1)
+    return jnp.broadcast_to(pos, (batch, prefill_len))
 
 
 def _attn_cached(p, cfg: LMConfig, h, positions, window, lc, k_pos,
-                 prefill_len: int):
+                 prefill_len: int, ring_pos=None):
     """Attention through the cache. ``prefill_len`` > 0: prefill mode
     (positions [S] = arange, write slots [0, S)); else decode (positions
     [B, 1], per-request scatter). Returns (attn_out, new_layer_cache).
@@ -471,19 +488,23 @@ def _attn_cached(p, cfg: LMConfig, h, positions, window, lc, k_pos,
     cache: a ring cache holds just the last W positions, but an early
     prefill query needs keys older than that — reading back through the
     cache would be wrong (and for full caches, fresh k/v skips the
-    read-back of empty padded slots)."""
+    read-back of empty padded slots).
+
+    ``ring_pos`` ([B, P] int32, -1 = drop) gives the per-request cache
+    write positions during a ring prefill: for a right-padded request of
+    real length L only positions [L - W, L) are written, so padding
+    garbage can never evict a real key whose position is still inside
+    the sliding window."""
     ring = window > 0
     if cfg.attention == "mla":
         ckv_new, kr_new = _mla_project(p["attn"], cfg, h, positions)
         if prefill_len > 0:
             if ring:
-                w = lc["ckv"].shape[1]
-                n = min(prefill_len, w)
-                idx = jnp.arange(prefill_len - n, prefill_len,
-                                 dtype=jnp.int32)
-                idx_b = jnp.broadcast_to(idx, (h.shape[0], n))
-                lc = {"ckv": _write_ring(lc["ckv"], ckv_new[:, -n:], idx_b),
-                      "kr": _write_ring(lc["kr"], kr_new[:, -n:], idx_b)}
+                if ring_pos is None:
+                    ring_pos = _ring_prefill_pos(
+                        prefill_len, lc["ckv"].shape[1], h.shape[0])
+                lc = {"ckv": _write_ring(lc["ckv"], ckv_new, ring_pos),
+                      "kr": _write_ring(lc["kr"], kr_new, ring_pos)}
             else:
                 lc = {"ckv": _write_full(lc["ckv"], ckv_new, 0),
                       "kr": _write_full(lc["kr"], kr_new, 0)}
@@ -505,12 +526,11 @@ def _attn_cached(p, cfg: LMConfig, h, positions, window, lc, k_pos,
     k_new, v_new = _gqa_project_kv(p["attn"], cfg, h, positions)
     if prefill_len > 0:
         if ring:
-            w = lc["k"].shape[1]
-            n = min(prefill_len, w)
-            idx = jnp.arange(prefill_len - n, prefill_len, dtype=jnp.int32)
-            idx_b = jnp.broadcast_to(idx, (h.shape[0], n))
-            lc = {"k": _write_ring(lc["k"], k_new[:, -n:], idx_b),
-                  "v": _write_ring(lc["v"], v_new[:, -n:], idx_b)}
+            if ring_pos is None:
+                ring_pos = _ring_prefill_pos(
+                    prefill_len, lc["k"].shape[1], h.shape[0])
+            lc = {"k": _write_ring(lc["k"], k_new, ring_pos),
+                  "v": _write_ring(lc["v"], v_new, ring_pos)}
         else:
             lc = {"k": _write_full(lc["k"], k_new, 0),
                   "v": _write_full(lc["v"], v_new, 0)}
@@ -534,10 +554,10 @@ def _attn_cached(p, cfg: LMConfig, h, positions, window, lc, k_pos,
 
 
 def _layer_apply_cached(p, cfg: LMConfig, x, positions, window, lc,
-                        k_pos, prefill_len: int):
+                        k_pos, prefill_len: int, ring_pos=None):
     h = L.rms_norm(x, p["ln1"], cfg.norm_eps, plus_one=cfg.post_norm)
     a, lc = _attn_cached(p, cfg, h, positions, window, lc, k_pos,
-                         prefill_len)
+                         prefill_len, ring_pos)
     if cfg.post_norm:
         a = L.rms_norm(a, p["ln1_post"], cfg.norm_eps, plus_one=True)
     x = x + a
@@ -549,11 +569,18 @@ def _layer_apply_cached(p, cfg: LMConfig, x, positions, window, lc,
 
 
 def forward_with_cache(params: dict, tokens: jnp.ndarray, cfg: LMConfig,
-                       cache: dict, positions: jnp.ndarray
+                       cache: dict, positions: jnp.ndarray,
+                       valid_len: jnp.ndarray | None = None
                        ) -> tuple[jnp.ndarray, dict]:
     """Cache-threaded forward.
 
-    Prefill: tokens [B, P], positions = arange(P) (1D).
+    Prefill: tokens [B, P], positions = arange(P) (1D). ``valid_len``
+    ([B] int32, optional) gives per-request true prompt lengths for
+    RIGHT-padded prefill: ring (sliding-window) caches then write only
+    positions [len_b - W, len_b) per request, so padding garbage at
+    positions >= len_b can never evict a real in-window key (slot g %% W
+    collides with position g - W). Without it, every request is assumed
+    full-length (the old behavior — correct only when lengths == P).
     Decode:  tokens [B, 1], positions [B, 1] (per-request).
     Returns (logits [B, S, V], updated cache).
     """
@@ -564,20 +591,30 @@ def forward_with_cache(params: dict, tokens: jnp.ndarray, cfg: LMConfig,
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
 
     new_pos = dict(cache)
+    ring_pos = None
     if prefill_len > 0:
         p_idx = jnp.arange(prefill_len, dtype=jnp.int32)
         pos_buf = _write_full(cache["pos"],
                               jnp.broadcast_to(p_idx, tokens.shape), 0)
         k_pos_global = pos_buf
+        if valid_len is None:
+            vl = jnp.full((tokens.shape[0], 1), prefill_len, jnp.int32)
+        else:
+            vl = jnp.asarray(valid_len, jnp.int32).reshape(-1, 1)
         if "pos_local" in cache:
             w = cache["pos_local"].shape[1]
-            n = min(prefill_len, w)
-            idx = jnp.arange(prefill_len - n, prefill_len,
-                             dtype=jnp.int32)
-            idx_b = jnp.broadcast_to(idx, (tokens.shape[0], n))
-            pos_local = _write_ring(cache["pos_local"], idx_b, idx_b)
+            idx_b = jnp.broadcast_to(p_idx, tokens.shape)
+            ring_pos = jnp.where((idx_b >= vl - w) & (idx_b < vl),
+                                 idx_b, -1)
+            pos_local = _write_ring(cache["pos_local"], ring_pos,
+                                    ring_pos)
             new_pos["pos_local"] = pos_local
             k_pos_local = pos_local
+        elif cfg.window > 0:
+            # uniform-window models keep a full-size cache (one slot per
+            # position, no eviction) — only mask the padding writes
+            idx_b = jnp.broadcast_to(p_idx, tokens.shape)
+            ring_pos = jnp.where(idx_b < vl, idx_b, -1)
         new_pos["pos"] = pos_buf
     else:
         bi = jnp.arange(tokens.shape[0])[:, None]
@@ -595,13 +632,14 @@ def forward_with_cache(params: dict, tokens: jnp.ndarray, cfg: LMConfig,
         if cfg.layer_pattern == "local_global":
             x, lc_l = _layer_apply_cached(
                 bp["local"], cfg, x, positions, cfg.window, lc["local"],
-                k_pos_local, prefill_len)
+                k_pos_local, prefill_len, ring_pos)
             x, lc_g = _layer_apply_cached(
                 bp["global"], cfg, x, positions, 0, lc["global"],
                 k_pos_global, prefill_len)
             return x, {"local": lc_l, "global": lc_g}
         x, lc = _layer_apply_cached(bp, cfg, x, positions, cfg.window,
-                                    lc, k_pos_global, prefill_len)
+                                    lc, k_pos_global, prefill_len,
+                                    ring_pos)
         return x, lc
 
     x, new_layers = jax.lax.scan(body, x, (params["blocks"],

@@ -40,10 +40,10 @@ from repro.models import transformer as T
 # --------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def _prefill(params, tokens, cache, cfg):
+def _prefill(params, tokens, cache, valid_len, cfg):
     positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
     logits, cache = T.forward_with_cache(params, tokens, cfg, cache,
-                                         positions)
+                                         positions, valid_len=valid_len)
     return logits, cache
 
 
@@ -155,7 +155,9 @@ class Engine:
             toks[0, :plen] = req.prompt
             one_cache = T.init_cache(self.cfg, 1, self.cache_buf)
             logits, one_cache = _prefill(self.params, jnp.asarray(toks),
-                                         one_cache, self.cfg)
+                                         one_cache,
+                                         jnp.asarray([plen], jnp.int32),
+                                         self.cfg)
             # mark slots beyond the real prompt as empty again
             pos = np.array(one_cache["pos"])
             pos[0, plen:self.prompt_buf] = -1
@@ -221,7 +223,8 @@ def generate(params, cfg: T.LMConfig, prompts: np.ndarray,
     toks = np.where(prompts >= 0, prompts, 0).astype(np.int32)
     buf = cache_buf or (p + max_new)
     cache = T.init_cache(cfg, b, buf)
-    logits, cache = _prefill(params, jnp.asarray(toks), cache, cfg)
+    logits, cache = _prefill(params, jnp.asarray(toks), cache,
+                             jnp.asarray(lengths), cfg)
     # void padding slots
     pos = np.array(cache["pos"])
     for i in range(b):

@@ -1,0 +1,351 @@
+"""Connectivity query service (DESIGN.md §7): on-device query kernels
+vs NumPy oracles across every generator family, policy selection,
+autotune-cache persistence, registry version/invalidation safety, and
+the slot-based service engine."""
+import collections
+import json
+
+import numpy as np
+import pytest
+
+from _propcheck import given, settings, st
+from repro.connectivity import policy, queries
+from repro.connectivity.registry import GraphRegistry
+from repro.connectivity.service import ConnectivityService
+from repro.core.batch import next_pow2, pad_rows_pow2
+from repro.core.cc import connected_components, num_components
+from repro.core.incremental import IncrementalCC
+from repro.core.unionfind import connected_components_oracle
+from repro.graphs import generators as G
+
+
+def generator_family_graphs():
+    """One graph per generators family (the kernel-oracle matrix)."""
+    return [
+        G.chain(23),
+        G.star(11),
+        G.disjoint_cliques(4, 5),
+        G.grid_road(7, seed=1),
+        G.rmat(6, 4, seed=3),
+        G.random_uniform(40, 70, seed=2),
+        G.molecule_batch(3, 7, 9, seed=4),
+        G.table1_scaled("usa-osm", scale=1 / 4096, seed=5),
+        # degenerate: no edges / single vertex
+        G.Graph(edges=np.zeros((0, 2), np.int64), num_nodes=6),
+        G.Graph(edges=np.zeros((0, 2), np.int64), num_nodes=1),
+    ]
+
+
+def oracle_labels(g):
+    return connected_components_oracle(g.edges, g.num_nodes)
+
+
+# --------------------------------------------------------------------------
+# Query kernels vs NumPy oracles
+# --------------------------------------------------------------------------
+
+def test_query_kernels_match_numpy_oracle_across_families():
+    rng = np.random.default_rng(0)
+    for g in generator_family_graphs():
+        labels = oracle_labels(g)
+        n = g.num_nodes
+        # count_components == np.unique
+        want_count = int(np.unique(labels).size) if n else 0
+        assert int(queries.count_components(labels)) == want_count, g.name
+        if n == 0:
+            continue
+        # same_component on a random pair batch
+        pairs = rng.integers(0, n, (17, 2))
+        got = np.asarray(queries.same_component(labels, pairs))
+        want = labels[pairs[:, 0]] == labels[pairs[:, 1]]
+        np.testing.assert_array_equal(got, want, err_msg=g.name)
+        # component_size against a Counter census
+        census = collections.Counter(labels.tolist())
+        verts = rng.integers(0, n, (13,))
+        got_sz = np.asarray(queries.component_size(labels, verts))
+        want_sz = np.array([census[labels[v]] for v in verts])
+        np.testing.assert_array_equal(got_sz, want_sz, err_msg=g.name)
+        # component_sizes for every vertex
+        got_all = np.asarray(queries.component_sizes(labels))
+        want_all = np.array([census[l] for l in labels.tolist()])
+        np.testing.assert_array_equal(got_all, want_all, err_msg=g.name)
+        # histogram: one count per component in bin floor(log2 size)
+        hist = np.asarray(queries.component_histogram(labels))
+        want_h = np.zeros_like(hist)
+        for size in census.values():
+            want_h[int(np.floor(np.log2(size)))] += 1
+        np.testing.assert_array_equal(hist, want_h, err_msg=g.name)
+        assert hist.sum() == want_count, g.name
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 30).flatmap(
+    lambda n: st.tuples(
+        st.just(n),
+        st.lists(st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+                 min_size=0, max_size=50),
+        st.lists(st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+                 min_size=1, max_size=20))))
+def test_query_kernels_property(case):
+    """Any random (graph, query batch): kernels == NumPy on the oracle
+    labels, and padding to the shared pow2 buckets never changes the
+    sliced answers."""
+    n, edges, qpairs = case
+    edges = np.asarray(edges, np.int32).reshape(-1, 2)
+    qpairs = np.asarray(qpairs, np.int32).reshape(-1, 2)
+    labels = connected_components_oracle(edges, n)
+    got = np.asarray(queries.same_component(labels, qpairs))
+    want = labels[qpairs[:, 0]] == labels[qpairs[:, 1]]
+    np.testing.assert_array_equal(got, want)
+    padded = pad_rows_pow2(qpairs)
+    assert padded.shape[0] == next_pow2(max(qpairs.shape[0], 8))
+    np.testing.assert_array_equal(
+        np.asarray(queries.same_component(labels, padded))[: len(qpairs)],
+        want)
+    assert int(queries.count_components(labels)) == np.unique(labels).size
+    sizes = np.asarray(queries.component_size(labels, qpairs[:, 0]))
+    census = collections.Counter(labels.tolist())
+    np.testing.assert_array_equal(
+        sizes, [census[labels[v]] for v in qpairs[:, 0]])
+
+
+def test_floor_log2_exact_at_int32_boundaries():
+    """The histogram binning must be exact where a float32 cast is not:
+    2^k - 1 above 2^24 rounds UP to 2^k under float32."""
+    ks = [1, 2, 15, 16, 17, 23, 24, 25, 26, 30]
+    n = np.array([x for k in ks for x in ((1 << k) - 1, 1 << k,
+                                          (1 << k) + 1)], np.int32)
+    got = np.asarray(queries._floor_log2(n))
+    want = np.floor(np.log2(n.astype(np.float64))).astype(np.int32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_num_components_wrappers_on_device():
+    g = G.disjoint_cliques(3, 4)
+    labels = connected_components(g.edges, g.num_nodes).labels
+    assert num_components(labels) == 3
+    inc = IncrementalCC(g.num_nodes)
+    inc.insert(g.edges)
+    assert inc.num_components() == 3
+    assert num_components(np.array([], np.int32)) == 0
+
+
+# --------------------------------------------------------------------------
+# Policy: heuristic, auto method, autotune cache
+# --------------------------------------------------------------------------
+
+def test_policy_heuristic_regimes():
+    # sparse (s <= 1 segment): atomic_hook
+    assert policy.select_method(100, 20) == "atomic_hook"
+    # mid-density: the paper's adaptive segmentation
+    assert policy.select_method(100, 400) == "adaptive"
+    # near-clique: labelprop
+    assert policy.select_method(12, 66) == "labelprop"
+    # small delta over existing state: incremental absorb
+    assert policy.select_method(100, 400, delta_edges=20) == \
+        policy.INCREMENTAL_ABSORB
+    # bulk load (delta dominates): a static method
+    assert policy.select_method(100, 10, delta_edges=500) in \
+        policy.STATIC_METHODS
+
+
+def test_method_auto_matches_oracle_across_families():
+    for g in generator_family_graphs():
+        res = connected_components(g.edges, g.num_nodes, method="auto")
+        np.testing.assert_array_equal(
+            np.asarray(res.labels), oracle_labels(g), err_msg=g.name)
+
+
+def test_autotune_cache_roundtrip_and_override(tmp_path):
+    path = str(tmp_path / "autotune.json")
+    cache = policy.AutotuneCache(path)
+    g = G.rmat(5, 4, seed=0)
+    won = cache.measure(g.edges, g.num_nodes)
+    assert won in policy.STATIC_METHODS
+    # measured winner overrides the heuristic for the whole bucket
+    assert policy.select_method(g.num_nodes, g.num_edges,
+                                cache=cache) == won
+    # persisted JSON reloads into a fresh cache
+    reloaded = policy.AutotuneCache(path)
+    assert reloaded.lookup(g.num_nodes, g.num_edges) == won
+    payload = json.loads(open(path).read())
+    assert payload["version"] == policy.CACHE_FORMAT_VERSION
+    (entry,) = payload["entries"].values()
+    assert entry["method"] == won and entry["ms"] > 0
+    # a different bucket misses
+    assert reloaded.lookup(4 * g.num_nodes, 64 * g.num_edges) is None
+
+
+# --------------------------------------------------------------------------
+# Registry: versioning + invalidation safety
+# --------------------------------------------------------------------------
+
+def test_registry_lifecycle_and_validation():
+    reg = GraphRegistry()
+    reg.create("a", 10)
+    with pytest.raises(ValueError, match="already registered"):
+        reg.create("a", 10)
+    with pytest.raises(KeyError, match="unknown tenant"):
+        reg.get("b")
+    with pytest.raises(ValueError, match="out of range"):
+        reg.insert("a", [[0, 10]])
+    with pytest.raises(ValueError, match="out of range"):
+        reg.same_component("a", [[0, 10]])
+    reg.drop("a")
+    assert reg.names() == []
+
+
+def test_registry_version_ticks_only_on_merge():
+    reg = GraphRegistry()
+    reg.create("g", 8)
+    v0 = reg.version("g")
+    reg.insert("g", [[0, 1], [2, 3]])
+    v1 = reg.version("g")
+    assert v1 > v0
+    # already-connected batch: no merge, version unchanged, cache warm
+    assert bool(reg.same_component("g", [[0, 1]])[0])
+    reg.insert("g", [[1, 0], [3, 2]])
+    assert reg.version("g") == v1
+    t = reg.get("g")
+    hits_before = t.stats.cache_hits
+    assert bool(reg.same_component("g", [[0, 1]])[0])
+    assert t.stats.cache_hits == hits_before + 1
+    # a merging batch ticks the version and invalidates
+    reg.insert("g", [[1, 2]])
+    assert reg.version("g") > v1
+    assert bool(reg.same_component("g", [[0, 3]])[0])
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(8, 28).flatmap(
+    lambda n: st.tuples(
+        st.just(n),
+        st.lists(st.lists(st.tuples(st.integers(0, n - 1),
+                                    st.integers(0, n - 1)),
+                          min_size=0, max_size=12),
+                 min_size=1, max_size=6))))
+def test_registry_never_serves_stale_answers_property(case):
+    """The invalidation property from the ISSUE: across any insert-batch
+    sequence, a cached ``same_component`` answer is never stale — every
+    response equals the union-find oracle on the edges inserted so far,
+    with the SAME query batch re-asked every round to maximize cache
+    pressure."""
+    n, batches = case
+    reg = GraphRegistry()
+    reg.create("t", n)
+    rng = np.random.default_rng(n)
+    fixed_pairs = rng.integers(0, n, (9, 2))      # re-asked every round
+    acc = np.zeros((0, 2), np.int32)
+    for batch in batches:
+        edges = np.asarray(batch, np.int32).reshape(-1, 2)
+        reg.insert("t", edges)
+        acc = np.concatenate([acc, edges], axis=0)
+        labels = connected_components_oracle(acc, n)
+        got = np.asarray(reg.same_component("t", fixed_pairs))
+        want = labels[fixed_pairs[:, 0]] == labels[fixed_pairs[:, 1]]
+        np.testing.assert_array_equal(got, want)
+        assert reg.count_components("t") == np.unique(labels).size
+        # and the full label state stays at the oracle fixed point
+        np.testing.assert_array_equal(np.asarray(reg.get("t").labels),
+                                      labels)
+
+
+def test_registry_policy_routes_bulk_then_absorb():
+    g = G.rmat(6, 6, seed=2)
+    reg = GraphRegistry()
+    t = reg.create("g", g.num_nodes)
+    edges = np.asarray(g.edges)
+    reg.insert("g", edges[: edges.shape[0] - 16])     # bulk load
+    assert t.last_method in policy.STATIC_METHODS
+    assert t.stats.rebuilds == 1
+    reg.insert("g", edges[edges.shape[0] - 16:])      # small delta
+    assert t.last_method == policy.INCREMENTAL_ABSORB
+    assert t.stats.absorbs == 1
+    np.testing.assert_array_equal(np.asarray(t.labels), oracle_labels(g))
+
+
+# --------------------------------------------------------------------------
+# Service engine
+# --------------------------------------------------------------------------
+
+def test_service_mixed_stream_matches_oracle_and_microbatches():
+    tenants = {"social": G.rmat(5, 5, seed=1),
+               "road": G.grid_road(6, seed=2)}
+    reg = GraphRegistry()
+    svc = ConnectivityService(reg, slots=64)
+    for name, g in tenants.items():
+        reg.create(name, g.num_nodes)
+    rng = np.random.default_rng(0)
+    n_rounds = 3
+    splits = {name: np.array_split(rng.permutation(g.num_edges), n_rounds)
+              for name, g in tenants.items()}
+    acc = {name: np.zeros((0, 2), np.int64) for name in tenants}
+    for rnd in range(n_rounds):
+        expected = {}
+        for name, g in tenants.items():
+            edges = np.asarray(g.edges)[splits[name][rnd]]
+            svc.submit_insert(name, edges)
+            acc[name] = np.concatenate([acc[name], edges], axis=0)
+            for _ in range(3):      # 3 requests -> ONE kernel call
+                pairs = rng.integers(0, g.num_nodes, (11, 2))
+                uid = svc.submit_query(name, "same_component", pairs)
+                expected[uid] = (name, pairs)
+            svc.submit_query(name, "count_components")
+        calls_before = svc.stats["query_calls"]
+        finished = {r.uid: r for r in svc.run()}
+        # per tick: 2 tenants x (1 same_component microbatch + 1 count)
+        assert svc.stats["query_calls"] == calls_before + 4
+        for uid, (name, pairs) in expected.items():
+            labels = connected_components_oracle(acc[name],
+                                                 tenants[name].num_nodes)
+            want = labels[pairs[:, 0]] == labels[pairs[:, 1]]
+            np.testing.assert_array_equal(
+                np.asarray(finished[uid].result), want)
+    assert svc.stats["inserts_absorbed"] == 2 * n_rounds
+    assert svc.stats["insert_calls"] == 2 * n_rounds
+    assert svc.stats["recomputes_avoided"] == svc.stats["queries_served"]
+    assert svc.stats["errors"] == 0
+
+
+def test_service_coalesces_inserts_per_tenant():
+    reg = GraphRegistry()
+    reg.create("g", 12)
+    svc = ConnectivityService(reg, slots=8)
+    for e in ([[0, 1]], [[1, 2]], [[3, 4]]):
+        svc.submit_insert("g", e)
+    svc.run()
+    # three insert requests -> one coalesced registry insert
+    assert svc.stats["inserts_absorbed"] == 3
+    assert svc.stats["insert_calls"] == 1
+    assert reg.get("g").stats.inserts == 1
+    assert bool(reg.same_component("g", [[0, 2]])[0])
+
+
+def test_service_errors_do_not_poison_the_tick():
+    reg = GraphRegistry()
+    reg.create("g", 8)
+    svc = ConnectivityService(reg, slots=8)
+    bad = svc.submit_query("nope", "count_components")
+    ok = svc.submit_query("g", "count_components")
+    finished = {r.uid: r for r in svc.run()}
+    assert finished[bad].error and finished[bad].done
+    assert finished[ok].result == 8 and finished[ok].error is None
+    with pytest.raises(ValueError, match="unknown kind"):
+        svc.submit("g", "frobnicate")
+    with pytest.raises(ValueError, match="unknown query kind"):
+        svc.submit_query("g", "insert")
+    with pytest.raises(ValueError, match="requires a payload"):
+        svc.submit_query("g", "same_component")
+    with pytest.raises(ValueError, match="requires a payload"):
+        svc.submit("g", "insert")
+
+
+def test_service_respects_slot_budget():
+    reg = GraphRegistry()
+    reg.create("g", 8)
+    svc = ConnectivityService(reg, slots=2)
+    for _ in range(5):
+        svc.submit_query("g", "count_components")
+    assert len(svc.step()) == 2
+    assert len(svc.queue) == 3
+    assert len(svc.run()) == 3
