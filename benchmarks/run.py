@@ -21,11 +21,17 @@
               microbatched on-device queries) vs the recompute-per-query
               counterfactual (DESIGN.md §7). Warm-starts the policy's
               autotune cache (JSON under results/).
+  fused       Fused-vs-per-round Pallas backend (DESIGN.md §8): the
+              whole segment scan in ONE pallas_call (cc_fused kernel,
+              method="pallas_fused") vs one launch per segment hook +
+              one per compress sweep, interpret mode on CPU. Launch
+              counts are the hardware-independent signal.
 
 Output: CSV blocks on stdout + files under benchmarks/results/; the
-batched/incremental tables additionally emit one standard ``BENCH
-{json}`` line per row (machine-scrapable; also written to
-``results/<name>.jsonl``).
+batched/incremental/service/fused tables additionally emit one standard
+``BENCH {json}`` line per row (machine-scrapable), a
+``results/<name>.jsonl``, AND a ``BENCH_<name>.json`` summary at the
+REPO ROOT so the perf trajectory is diffable across PRs.
 Usage: ``python -m benchmarks.run [--only fig5] [--scale 0.004]``.
 """
 from __future__ import annotations
@@ -38,6 +44,7 @@ import time
 import numpy as np
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _block(r):
@@ -73,7 +80,10 @@ def _emit(name: str, header: str, rows: list) -> None:
 
 def _emit_bench(name: str, rows: list[dict]) -> None:
     """Standard BENCH JSON: one ``BENCH {...}`` line per row on stdout
-    (scraped by CI/report tooling) + a JSONL file under results/."""
+    (scraped by CI/report tooling), a JSONL file under results/, and a
+    ``BENCH_<name>.json`` summary at the repo root — the root files are
+    committed-adjacent artifacts that make the perf trajectory diffable
+    across PRs (CI uploads them)."""
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"{name}.jsonl")
     with open(path, "w") as f:
@@ -82,7 +92,12 @@ def _emit_bench(name: str, rows: list[dict]) -> None:
             line = json.dumps(rec)
             f.write(line + "\n")
             print("BENCH " + line)
-    print(f"## {name} -> {path}")
+    summary = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    with open(summary, "w") as f:
+        json.dump({"bench": name, "rows": rows}, f, indent=1,
+                  sort_keys=True)
+        f.write("\n")
+    print(f"## {name} -> {path} + {summary}")
 
 
 def graphs_for_scale(scale: float):
@@ -417,11 +432,78 @@ def service(scale: float) -> None:
     _emit_bench("service", rows)
 
 
+def fused(scale: float) -> None:
+    """Fused-vs-per-round Pallas backend (DESIGN.md §8). The per-round
+    backend launches one hook kernel per segment plus one multi_jump
+    kernel per compress sweep (``num_segments + jump_sweeps`` per
+    segment scan); the fused ``cc_fused`` kernel runs the whole scan in
+    ONE pallas_call with scalar-prefetched segment boundaries. Launch
+    counts are the hardware-independent signal — CPU interpret-mode
+    wall-clock (reported for completeness) does not price launch
+    overhead the way a real accelerator does."""
+    import jax.numpy as jnp
+    from repro.core import rounds as R
+    from repro.core.cc import (connected_components,
+                               connected_components_pallas)
+    from repro.core.segmentation import plan_segmentation
+    from repro.core.unionfind import connected_components_oracle
+    from repro.kernels.cc_fused.ops import fused_segment_scan
+
+    rows = []
+    for g in graphs_for_scale(scale):
+        edges, n = g.edges, g.num_nodes
+        plan = plan_segmentation(g.num_edges, n)
+        want = connected_components_oracle(edges, n)
+        fused_res = connected_components(edges, n, method="pallas_fused")
+        assert np.array_equal(np.asarray(fused_res.labels), want), g.name
+        assert np.array_equal(
+            np.asarray(connected_components_pallas(edges, n,
+                                                   interpret=True)),
+            want), g.name
+        # SCAN-ONLY sweep count from the fused kernel's per-segment
+        # counters (bit-compatible with the jnp composition) — the
+        # trailing cleanup rounds cost extra launches on BOTH backends
+        # and are excluded so the per-scan ratio is honest
+        segs = R.pad_and_segment(
+            jnp.asarray(np.asarray(edges), jnp.int32).reshape(-1, 2),
+            plan)
+        counts = R.segment_true_counts(plan.num_edges, plan)
+        pi0 = jnp.arange(n, dtype=jnp.int32)
+        _, sweeps = fused_segment_scan(pi0, segs, counts, interpret=True)
+        scan_sweeps = int(sweeps.sum())
+        # time BOTH backends in interpret mode (the fused public path
+        # resolves interpret from the backend, which on a TPU host
+        # would compare a compiled kernel against the emulated
+        # baseline under a column name claiming otherwise)
+        from repro.core.cc import _cc_fused_jit
+        ej = jnp.asarray(np.asarray(edges), jnp.int32).reshape(-1, 2)
+        t_perround = _bench(lambda: connected_components_pallas(
+            edges, n, interpret=True), reps=1)
+        t_fused = _bench(lambda: _cc_fused_jit(
+            ej, None, num_nodes=n, num_segments=plan.num_segments,
+            lift_steps=2, interpret=True).labels, reps=1)
+        launches_old = plan.num_segments + scan_sweeps
+        rows.append({
+            "graph": g.name, "nodes": n, "edges": g.num_edges,
+            "num_segments": plan.num_segments,
+            "scan_jump_sweeps": scan_sweeps,
+            # 1 hook launch/segment + 1 multi_jump launch/sweep
+            "launches_perround_scan": launches_old,
+            "launches_fused_scan": 1,
+            "launch_reduction_x": launches_old,
+            "ms_perround_interpret": round(t_perround * 1e3, 2),
+            "ms_fused_interpret": round(t_fused * 1e3, 2),
+            "hook_ops": int(fused_res.work.hook_ops),
+        })
+    _emit_bench("fused", rows)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=["table1", "fig5", "fig6", "kernels",
-                             "batched", "incremental", "service"])
+                             "batched", "incremental", "service",
+                             "fused"])
     ap.add_argument("--scale", type=float, default=1 / 256,
                     help="Table I graph scale factor")
     args = ap.parse_args()
@@ -431,7 +513,8 @@ def main() -> None:
             "kernels": kernels,
             "batched": batched,
             "incremental": lambda: incremental(args.scale),
-            "service": lambda: service(args.scale)}
+            "service": lambda: service(args.scale),
+            "fused": lambda: fused(args.scale)}
     for name, job in jobs.items():
         if args.only and name != args.only:
             continue

@@ -38,11 +38,15 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import tempfile
 import time
 
 import numpy as np
 
+# the static engines the heuristic chooses between; the fused Pallas
+# backend joins the measured (autotune) candidate set below
 STATIC_METHODS = ("adaptive", "atomic_hook", "labelprop")
+AUTOTUNE_METHODS = STATIC_METHODS + ("pallas_fused",)
 INCREMENTAL_ABSORB = "incremental-absorb"
 
 # heuristic thresholds (see module docstring)
@@ -84,6 +88,8 @@ def extract_features(num_nodes: int, num_edges: int,
                          num_edges=int(num_edges),
                          delta_edges=None if delta_edges is None
                          else int(delta_edges))
+
+
 
 
 def heuristic_method(f: GraphFeatures) -> str:
@@ -144,13 +150,29 @@ class AutotuneCache:
             self.save()
 
     def save(self) -> None:
+        """Atomic write: a process-unique temp file in the target dir +
+        an atomic rename (``os.replace`` — rename semantics with
+        cross-platform overwrite) — two concurrent
+        ``ConnectivityService`` processes can interleave saves without
+        ever corrupting the JSON (a fixed ``.tmp`` name would let their
+        writes interleave in the SAME temp file; last rename still
+        wins, but both renames are atomic)."""
         payload = {"version": CACHE_FORMAT_VERSION, "entries": self.entries}
-        os.makedirs(os.path.dirname(os.path.abspath(self.path)),
-                    exist_ok=True)
-        tmp = self.path + ".tmp"
-        with open(tmp, "w") as fh:
-            json.dump(payload, fh, indent=1, sort_keys=True)
-        os.replace(tmp, self.path)
+        target = os.path.abspath(self.path)
+        os.makedirs(os.path.dirname(target), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(target),
+                                   prefix=os.path.basename(target) + ".",
+                                   suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as fh:
+                json.dump(payload, fh, indent=1, sort_keys=True)
+            os.replace(tmp, target)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
 
     def load(self) -> None:
         with open(self.path) as fh:
@@ -160,22 +182,34 @@ class AutotuneCache:
         self.entries = dict(payload.get("entries", {}))
 
     def measure(self, edges, num_nodes: int,
-                methods: tuple[str, ...] = STATIC_METHODS,
+                methods: tuple[str, ...] | None = None,
                 reps: int = 2) -> str:
-        """Time each static candidate on this graph, record and return
-        the wall-clock winner for its shape bucket."""
+        """Time each candidate (static engines; plus the fused Pallas
+        backend when a real kernel backend is available — wall-clocking
+        the Python-interpreted emulation off-TPU is slow and says
+        nothing about the compiled kernel) on this graph, record and
+        return the wall-clock winner for its shape bucket. Every rep
+        drains in-flight async work with ``block_until_ready`` BEFORE
+        starting its timer — otherwise asynchronously dispatched work
+        from the previous candidate flatters whichever method is
+        measured next."""
         from repro.core.cc import connected_components
+        if methods is None:
+            from repro.kernels import default_interpret
+            methods = STATIC_METHODS if default_interpret() \
+                else AUTOTUNE_METHODS
         edges = np.asarray(edges, np.int32).reshape(-1, 2)
         best_method, best_ms = None, float("inf")
         for method in methods:
-            connected_components(edges, num_nodes,
-                                 method=method).labels.block_until_ready()
+            warm = connected_components(edges, num_nodes, method=method)
+            warm.labels.block_until_ready()
             ts = []
             for _ in range(reps):
+                warm.labels.block_until_ready()   # quiesce before t0
                 t0 = time.perf_counter()
-                connected_components(
-                    edges, num_nodes,
-                    method=method).labels.block_until_ready()
+                warm = connected_components(edges, num_nodes,
+                                            method=method)
+                warm.labels.block_until_ready()
                 ts.append(time.perf_counter() - t0)
             ms = float(np.median(ts)) * 1e3
             if ms < best_ms:
@@ -228,3 +262,15 @@ def select_method(num_nodes: int, num_edges: int, *,
     cache = default_cache() if cache is None else cache
     hit = cache.lookup(f.num_nodes, f.total_edges)
     return hit if hit is not None else choice
+
+
+def select_for(num_nodes: int, num_edges: int, delta=None, *,
+               cache: AutotuneCache | None = None) -> str:
+    """The registry's insert-path selection over a pending-insert
+    ``DeviceGraph``: the update-rate feature comes from the delta's
+    static pytree metadata (true edge count) — no device sync, no host
+    round trip of edge data."""
+    return select_method(
+        num_nodes, num_edges,
+        delta_edges=None if delta is None else delta.num_edges,
+        cache=cache)

@@ -11,14 +11,25 @@ static engine and adopted. Queries run through the on-device kernels
 across tenants.
 
 **Version / invalidation protocol** (DESIGN.md §7): a tenant's label
-*version* is ``IncrementalCC.version`` — it ticks only when an insert
-batch actually merges components (the absorb jit reports ``any(labels
-!= old)`` in the same device call). Cached query results are stamped
-with the version they were computed at and served only while the
-version is unchanged; an insert that lands entirely inside existing
-components keeps every cached answer warm. Stale answers are therefore
-impossible by construction: connectivity under insert-only workloads
-changes exactly when labels change.
+*version* is ``IncrementalCC``'s device-resident version counter — it
+ticks only when an insert batch actually merges components (the absorb
+jit detects ``any(labels != old)`` and ticks IN the same device
+program; the insert path never syncs it to the host). Cached query
+results are stamped with the version they were computed at and served
+only while the version is unchanged — validation happens lazily at
+query time (one scalar sync on a path that syncs anyway to return the
+answer), so an insert that lands entirely inside existing components
+keeps every cached answer warm and stale answers are impossible by
+construction: connectivity under insert-only workloads changes exactly
+when labels change. Superseded entries age out via FIFO eviction.
+
+**DeviceGraph substrate** (DESIGN.md §8): insert batches are
+``DeviceGraph``s (host arrays go through the ``from_edges`` shim with
+bounds validation); the edge log is a list of DeviceGraphs whose bulk
+rebuilds concatenate ON DEVICE; policy features (density, update rate)
+come from static DeviceGraph metadata. The steady-state insert path —
+coalescing, feature extraction, absorb, version tick — performs zero
+host transfers (tested under ``jax.transfer_guard("disallow")``).
 """
 from __future__ import annotations
 
@@ -30,22 +41,26 @@ import numpy as np
 from repro.connectivity import policy, queries
 from repro.core.batch import pad_rows_pow2
 from repro.core.incremental import IncrementalCC
+from repro.graphs.device import DeviceGraph, validate_edge_bounds
 
 _MAX_CACHED_RESULTS = 1024      # per tenant; FIFO-evicted
 
 
 @dataclasses.dataclass
 class TenantStats:
+    # merge counts are NOT tracked here: the device-resident version
+    # counter ticks exactly on merging inserts, so registry.stats()
+    # reports it as "merges" (a host field would force a sync per insert)
     inserts: int = 0
     absorbs: int = 0            # inserts routed through the incremental path
     rebuilds: int = 0           # inserts routed through a static engine
-    merges: int = 0             # inserts that changed labels (version ticks)
     queries: int = 0
     cache_hits: int = 0
 
 
 class TenantGraph:
-    """One live graph: IncrementalCC state + accumulated edge log."""
+    """One live graph: IncrementalCC state + accumulated DeviceGraph
+    edge log."""
 
     def __init__(self, name: str, num_nodes: int, *, lift_steps: int = 2,
                  policy_cache: policy.AutotuneCache | None = None):
@@ -53,13 +68,19 @@ class TenantGraph:
         self.num_nodes = num_nodes
         self.inc = IncrementalCC(num_nodes, lift_steps=lift_steps)
         self.policy_cache = policy_cache
-        self._edge_log: list[np.ndarray] = []   # for the bulk-rebuild path
+        self._edge_log: list[DeviceGraph] = []  # for the bulk-rebuild path
         self.stats = TenantStats()
         self.last_method = None                  # last policy decision
 
     @property
     def version(self) -> int:
+        """Label version as a host int (syncs; query-path use)."""
         return self.inc.version
+
+    @property
+    def version_device(self):
+        """Label version as a device scalar (no sync; insert-path use)."""
+        return self.inc.version_device
 
     @property
     def labels(self):
@@ -69,43 +90,59 @@ class TenantGraph:
     def num_edges(self) -> int:
         return self.inc.num_edges_inserted
 
-    def edges(self) -> np.ndarray:
+    def graph(self) -> DeviceGraph:
+        """The accumulated edge set as ONE DeviceGraph (device-side
+        concat of the insert log — no host ``np.concatenate``)."""
         if not self._edge_log:
-            return np.zeros((0, 2), np.int32)
-        return np.concatenate(self._edge_log, axis=0)
+            return DeviceGraph.from_edges(
+                np.zeros((0, 2), np.int32), self.num_nodes,
+                name=self.name)
+        return DeviceGraph.concat(self._edge_log, name=self.name)
 
-    def insert(self, new_edges) -> bool:
-        """Insert an edge batch; returns True iff components merged
-        (the label version ticked)."""
-        new_edges = np.asarray(new_edges, np.int32).reshape(-1, 2)
-        if (new_edges.size and
-                (new_edges.min() < 0 or new_edges.max() >= self.num_nodes)):
-            raise ValueError("edge endpoint out of range "
-                             f"[0, {self.num_nodes})")
-        before = self.inc.version
-        method = policy.select_method(
-            self.num_nodes, self.num_edges,
-            delta_edges=new_edges.shape[0], cache=self.policy_cache)
+    def edges(self) -> np.ndarray:
+        """Host view of the accumulated edges (syncs; introspection)."""
+        g = self.graph()
+        t = g.true_edges_static
+        return np.asarray(g.edges)[: g.edges.shape[0] if t is None else t]
+
+    def _coerce(self, new_edges) -> DeviceGraph:
+        """Host arrays are validated + device_put; DeviceGraphs pass
+        through untouched (no sync — the caller owns bounds there)."""
+        if isinstance(new_edges, DeviceGraph):
+            if new_edges.num_nodes != self.num_nodes:
+                raise ValueError(
+                    f"delta num_nodes {new_edges.num_nodes} != "
+                    f"{self.num_nodes}")
+            return new_edges
+        arr = np.asarray(new_edges, np.int32).reshape(-1, 2)
+        validate_edge_bounds(arr, self.num_nodes)
+        return DeviceGraph.from_edges(arr, self.num_nodes,
+                                      name=self.name)
+
+    def insert(self, new_edges) -> None:
+        """Insert an edge batch (DeviceGraph or host array). The merge
+        decision (version tick) happens ON DEVICE inside the absorb —
+        this path never syncs; read ``version``/``version_device`` to
+        observe it."""
+        delta = self._coerce(new_edges)
+        method = policy.select_for(self.num_nodes, self.num_edges,
+                                   delta, cache=self.policy_cache)
         self.last_method = method
-        if new_edges.shape[0]:
-            self._edge_log.append(new_edges)
+        if delta.num_edges:
+            self._edge_log.append(delta)
         if method == policy.INCREMENTAL_ABSORB:
-            self.inc.insert(new_edges)
+            self.inc.insert_graph(delta)
             self.stats.absorbs += 1
         else:
             # bulk load: the accumulated set is mostly this batch — the
             # chosen static engine (segmentation and all) beats hooking
             # a huge unsegmented delta through the absorb loop
             from repro.core.cc import connected_components
-            res = connected_components(self.edges(), self.num_nodes,
-                                       method=method)
+            res = connected_components(self.graph(), method=method)
             self.inc.adopt(res.labels, work=res.work,
-                           num_edges=new_edges.shape[0])
+                           num_edges=delta.num_edges)
             self.stats.rebuilds += 1
         self.stats.inserts += 1
-        merged = self.inc.version != before
-        self.stats.merges += int(merged)
-        return merged
 
 
 class GraphRegistry:
@@ -145,19 +182,24 @@ class GraphRegistry:
     def names(self) -> list[str]:
         return sorted(self._tenants)
 
+    def __contains__(self, name: str) -> bool:
+        return name in self._tenants
+
     def __len__(self) -> int:
         return len(self._tenants)
 
     # -- mutation ----------------------------------------------------------
 
-    def insert(self, name: str, edges) -> int:
-        """Insert an edge batch; returns the tenant's label version.
-        Cached query results are invalidated ONLY when the batch merged
-        components."""
+    def insert(self, name: str, edges):
+        """Insert an edge batch (DeviceGraph or host array); returns the
+        tenant's label version as a DEVICE scalar (the insert path never
+        syncs — ``int(...)`` it to observe). Cached query results are
+        invalidated ONLY when the batch merged components: entries are
+        version-stamped and validated lazily at query time, so no eager
+        host-side merge check is needed here."""
         t = self.get(name)
-        if t.insert(edges):
-            self._qcache[name].clear()
-        return t.version
+        t.insert(edges)
+        return t.version_device
 
     # -- queries (cached, on-device kernels) -------------------------------
 
@@ -222,8 +264,12 @@ class GraphRegistry:
     def stats(self) -> dict:
         out = {}
         for name, t in self._tenants.items():
+            version = t.version            # introspection path: sync OK
             out[name] = {**dataclasses.asdict(t.stats),
-                         "version": t.version,
+                         # the version ticks exactly on merging inserts,
+                         # so it IS the merge count (tracked on device)
+                         "merges": version,
+                         "version": version,
                          "num_nodes": t.num_nodes,
                          "num_edges": t.num_edges,
                          "hook_ops": t.inc.work["hook_ops"]}

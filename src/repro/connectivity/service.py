@@ -9,7 +9,11 @@ Per tick:
 
   * **inserts coalesce per tenant** — all admitted insert batches for
     one tenant concatenate into ONE absorb/rebuild call (one device
-    dispatch instead of one per request);
+    dispatch instead of one per request). Payloads are device_put at
+    submit time and coalesced with ``DeviceGraph.concat`` ON DEVICE
+    (DESIGN.md §8): the steady-state tick performs zero host transfers
+    — no ``np.concatenate``, no host-side merge check — which the
+    transfer-guard test pins down;
   * **queries microbatch per (tenant, kind)** — all admitted
     ``same_component`` pairs (resp. ``component_size`` vertices) for a
     tenant concatenate into one batch, padded to the power-of-two
@@ -32,9 +36,11 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Optional
 
+import jax
 import numpy as np
 
 from repro.connectivity.registry import GraphRegistry
+from repro.graphs.device import DeviceGraph, validate_edge_bounds
 
 QUERY_KINDS = ("same_component", "component_size", "count_components",
                "component_histogram")
@@ -46,7 +52,9 @@ class Request:
     uid: int
     tenant: str
     kind: str                       # one of KINDS
-    payload: Optional[np.ndarray] = None
+    # np array for query kinds; a DeviceGraph for inserts (device-put
+    # at admission so the tick stays transfer-free)
+    payload: Optional[Any] = None
     result: Any = None
     done: bool = False
     error: Optional[str] = None
@@ -77,7 +85,9 @@ class ConnectivityService:
     def submit(self, tenant: str, kind: str, payload=None) -> int:
         if kind not in KINDS:
             raise ValueError(f"unknown kind {kind!r}; choose from {KINDS}")
-        if kind in ("insert", "same_component", "component_size"):
+        if kind == "insert":
+            payload = self._ingest_insert(tenant, payload)
+        elif kind in ("same_component", "component_size"):
             if payload is None:
                 raise ValueError(f"kind {kind!r} requires a payload")
             payload = np.asarray(payload, np.int32)
@@ -89,9 +99,37 @@ class ConnectivityService:
         self.queue.append(Request(self._uid, tenant, kind, payload))
         return self._uid
 
+    def _ingest_insert(self, tenant: str, payload) -> DeviceGraph:
+        """Admission-time ingress: validate on host (while the data IS
+        host data), then explicit device_put — the tick itself then
+        touches device arrays only. DeviceGraph payloads pass through."""
+        if payload is None:
+            raise ValueError("kind 'insert' requires a payload")
+        if isinstance(payload, DeviceGraph):
+            return payload
+        num_nodes = self.registry.get(tenant).num_nodes \
+            if tenant in self.registry else None
+        if isinstance(payload, jax.Array):
+            edges = payload.astype("int32").reshape(-1, 2)
+            # admission-time ingress may sync: bounds-check the host
+            # view so an out-of-range endpoint errors here instead of
+            # silently clamping inside the absorb (DeviceGraph payloads
+            # are the no-sync fast lane — the caller owns bounds there)
+            if num_nodes is not None:
+                validate_edge_bounds(np.asarray(edges), num_nodes)
+        else:
+            arr = np.asarray(payload, np.int32).reshape(-1, 2)
+            if num_nodes is not None:
+                validate_edge_bounds(arr, num_nodes)
+            edges = jax.device_put(arr)
+        if num_nodes is None:
+            # unknown tenant: the tick's failure path will reject the
+            # group; a zero-|V| DeviceGraph just carries the payload
+            num_nodes = 0
+        return DeviceGraph.from_edges(edges, num_nodes)
+
     def submit_insert(self, tenant: str, edges) -> int:
-        return self.submit(tenant, "insert",
-                           np.asarray(edges, np.int32).reshape(-1, 2))
+        return self.submit(tenant, "insert", edges)
 
     def submit_query(self, tenant: str, kind: str, payload=None) -> int:
         if kind not in QUERY_KINDS:
@@ -106,13 +144,32 @@ class ConnectivityService:
         req.done = True
         self.stats["errors"] += 1
 
+    @staticmethod
+    def _rebind(payload: DeviceGraph, num_nodes: int) -> DeviceGraph:
+        """Bind a pre-create payload (|V|=0 marker) to the tenant's
+        |V|, running the bounds validation it skipped at admission.
+        This is the rare tenant-created-after-submit path, so the
+        device->host sync for the check is acceptable."""
+        validate_edge_bounds(np.asarray(payload.edges), num_nodes)
+        return DeviceGraph.from_edges(payload.edges, num_nodes)
+
     def _run_inserts(self, inserts: list[Request]) -> None:
         by_tenant: dict[str, list[Request]] = {}
         for r in inserts:
             by_tenant.setdefault(r.tenant, []).append(r)
         for tenant, reqs in by_tenant.items():
-            batch = np.concatenate([r.payload for r in reqs], axis=0)
             try:
+                # device-side coalescing: one concat + ONE absorb per
+                # tenant per tick, zero host transfers. Only payloads
+                # submitted before the tenant existed (|V|=0 marker)
+                # re-bind to its |V| — with the bounds check they
+                # skipped at admission; a real |V| mismatch must fall
+                # through to the registry's error, not be papered over.
+                n = self.registry.get(tenant).num_nodes
+                batch = DeviceGraph.concat(
+                    [self._rebind(r.payload, n) if
+                     r.payload.num_nodes == 0 and n != 0 else r.payload
+                     for r in reqs])
                 version = self.registry.insert(tenant, batch)
             except Exception as err:     # fail the group, not the tick
                 for r in reqs:
@@ -120,6 +177,8 @@ class ConnectivityService:
                 continue
             self.stats["insert_calls"] += 1
             for r in reqs:
+                # the version rides as a device scalar; int(...) it to
+                # observe (the tick itself must not sync)
                 r.result = version
                 r.done = True
                 self.stats["inserts_absorbed"] += 1

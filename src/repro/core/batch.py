@@ -102,6 +102,33 @@ class GraphBatch(NamedTuple):
     indices: np.ndarray      # int32 [B] positions in the caller's list
 
 
+def stack_device_graphs(graphs: Sequence) -> list[GraphBatch]:
+    """DeviceGraph bucket stacking: group by the (V_pad, E_pad) pow2
+    bucket, pad each member's edges on DEVICE (jitted (0,0) rows) and
+    ``jnp.stack`` the bucket — no host round trip. True edge/node
+    counts come from static DeviceGraph metadata (explicit device_put,
+    so the path stays legal under ``jax.transfer_guard``)."""
+    buckets: dict[tuple[int, int], list[int]] = {}
+    for i, g in enumerate(graphs):
+        if g.true_edges_static is None:
+            raise ValueError("batched execution needs static true "
+                             "edge counts (graph %d)" % i)
+        buckets.setdefault(
+            bucket_shape(g.num_nodes, int(g.edges.shape[0])),
+            []).append(i)
+    out = []
+    for (v_pad, e_pad), members in sorted(buckets.items()):
+        stack = jnp.stack(
+            [graphs[i].pad_rows(e_pad).edges for i in members])
+        tn = np.asarray([graphs[i].num_nodes for i in members], np.int32)
+        te = np.asarray([graphs[i].true_edges_static for i in members],
+                        np.int32)
+        out.append(GraphBatch(edges=stack, num_nodes=v_pad,
+                              true_nodes=tn, true_edges=te,
+                              indices=np.asarray(members, np.int32)))
+    return out
+
+
 def bucketize(graphs: Sequence[tuple[np.ndarray, int]]
               ) -> list[GraphBatch]:
     """Group (edges, num_nodes) pairs into shape buckets."""
@@ -144,19 +171,36 @@ def connected_components_batched(
     Returns:
       One ``CCResult`` per input graph, in input order, labels truncated
       to the graph's true |V| — bit-identical to per-graph
-      ``connected_components``.
+      ``connected_components``. DeviceGraph inputs stay device-resident
+      end to end (device labels out); host inputs get host labels.
     """
-    pairs = [(g.edges, g.num_nodes) if hasattr(g, "num_nodes") else g
-             for g in graphs]
-    results: list[CCResult | None] = [None] * len(pairs)
-    for batch in bucketize(pairs):
+    from repro.graphs.device import DeviceGraph
+    graphs = list(graphs)
+    device_in = bool(graphs) and all(
+        isinstance(g, DeviceGraph) for g in graphs)
+    if device_in:
+        batches = stack_device_graphs(graphs)
+    else:
+        pairs = [(g.edges, g.num_nodes) if hasattr(g, "num_nodes") else g
+                 for g in graphs]
+        batches = bucketize(pairs)
+    results: list[CCResult | None] = [None] * len(graphs)
+    for batch in batches:
         res = _cc_batched_jit(
             jnp.asarray(batch.edges),
-            jnp.asarray(batch.true_edges),
-            jnp.asarray(batch.true_nodes),
+            jax.device_put(np.asarray(batch.true_edges)),
+            jax.device_put(np.asarray(batch.true_nodes)),
             num_nodes=batch.num_nodes,
             num_segments=num_segments,
             lift_steps=lift_steps)
+        if device_in:
+            # stay on device: per-row static slices, no transfers
+            for row, i in enumerate(batch.indices):
+                n = int(batch.true_nodes[row])
+                results[int(i)] = CCResult(
+                    labels=res.labels[row, :n],
+                    work=WorkCounters(*(c[row] for c in res.work)))
+            continue
         # host views, no per-graph device transfers: [B, V_pad] -> B rows
         labels = np.asarray(res.labels)
         work = jax.tree.map(np.asarray, res.work)

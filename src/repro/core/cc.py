@@ -53,6 +53,10 @@ from repro.core.segmentation import SegmentationPlan, plan_segmentation
 _MAX_ROUNDS = rounds.MAX_ROUNDS   # outer hook-round fuel
 
 METHODS = ("soman", "multijump", "atomic_hook", "adaptive", "labelprop")
+# + the fused Pallas backend (one kernel launch per segment scan);
+# labels are bit-identical to the jnp backend, validated in tests
+FUSED_METHOD = "pallas_fused"
+ALL_METHODS = METHODS + (FUSED_METHOD,)
 HOSTLOOP_METHODS = ("soman", "multijump")
 
 
@@ -65,8 +69,9 @@ class CCResult(NamedTuple):
 # Variant: Soman et al. baseline (Fig. 1) — single-level hooks and jumps
 # ---------------------------------------------------------------------------
 
-def _cc_soman(edges: jnp.ndarray, num_nodes: int) -> CCResult:
-    e = edges.shape[0]
+def _cc_soman(edges: jnp.ndarray, num_nodes: int,
+              true_edges=None) -> CCResult:
+    e = edges.shape[0] if true_edges is None else true_edges
 
     def outer_cond(state):
         _, changed, rounds_, _ = state
@@ -95,8 +100,9 @@ def _cc_soman(edges: jnp.ndarray, num_nodes: int) -> CCResult:
 # Variant: + Multi-Jump (fused compress, device-resident)
 # ---------------------------------------------------------------------------
 
-def _cc_multijump(edges: jnp.ndarray, num_nodes: int) -> CCResult:
-    e = edges.shape[0]
+def _cc_multijump(edges: jnp.ndarray, num_nodes: int,
+                  true_edges=None) -> CCResult:
+    e = edges.shape[0] if true_edges is None else true_edges
 
     def outer_cond(state):
         _, changed, rounds_, _ = state
@@ -124,13 +130,15 @@ def _cc_multijump(edges: jnp.ndarray, num_nodes: int) -> CCResult:
 # ---------------------------------------------------------------------------
 
 def _cc_atomic_hook(edges: jnp.ndarray, num_nodes: int,
-                    lift_steps: int = 2) -> CCResult:
+                    lift_steps: int = 2, true_edges=None) -> CCResult:
     # Atomic-Hook is the adaptive cleanup loop run from scratch over the
     # whole (single-segment) edge list.
+    if true_edges is None:
+        true_edges = edges.shape[0]
     ops = rounds.jnp_round_ops(lift_steps)
     pi0 = jnp.arange(num_nodes, dtype=jnp.int32)
     pi, work = rounds.cleanup_rounds(pi0, edges, ops, WorkCounters.zeros(),
-                                     true_edges=edges.shape[0])
+                                     true_edges=true_edges)
     # the whole program is one fused device loop: a single host sync
     work = work.add(sync_rounds=1)
     return CCResult(pi, work)
@@ -141,45 +149,66 @@ def _cc_atomic_hook(edges: jnp.ndarray, num_nodes: int,
 # ---------------------------------------------------------------------------
 
 def _cc_adaptive(edges: jnp.ndarray, num_nodes: int,
-                 plan: SegmentationPlan, lift_steps: int = 2) -> CCResult:
+                 plan: SegmentationPlan, lift_steps: int = 2,
+                 true_edges=None) -> CCResult:
     """Fig. 4: for each of the s = 2|E|/|V| segments, Atomic-Hook the
     segment then fully compress, then a trailing consistency loop —
     all via the shared ``rounds.adaptive_rounds`` core, which bills
     hook_ops on true (unpadded) edges only.
     """
-    pi, work = rounds.adaptive_rounds(edges, num_nodes, plan,
-                                      lift_steps=lift_steps,
-                                      true_edges=edges.shape[0])
+    pi, work = rounds.adaptive_rounds(
+        edges, num_nodes, plan, lift_steps=lift_steps,
+        true_edges=edges.shape[0] if true_edges is None else true_edges)
     work = work.add(sync_rounds=1)   # one jit call end-to-end
     return CCResult(pi, work)
 
 
 # ---------------------------------------------------------------------------
-# Public API
+# Public API — consumes DeviceGraph (raw arrays via the from_edges shim)
 # ---------------------------------------------------------------------------
 
 @functools.partial(
     jax.jit, static_argnames=("num_nodes", "method", "num_segments",
                               "lift_steps"))
-def _cc_jit(edges, *, num_nodes, method, num_segments, lift_steps):
+def _cc_jit(edges, true_edges, *, num_nodes, method, num_segments,
+            lift_steps):
     if method == "soman":
-        return _cc_soman(edges, num_nodes)
+        return _cc_soman(edges, num_nodes, true_edges)
     if method == "multijump":
-        return _cc_multijump(edges, num_nodes)
+        return _cc_multijump(edges, num_nodes, true_edges)
     if method == "atomic_hook":
-        return _cc_atomic_hook(edges, num_nodes, lift_steps)
+        return _cc_atomic_hook(edges, num_nodes, lift_steps, true_edges)
     if method == "adaptive":
         plan = plan_segmentation(edges.shape[0], num_nodes, num_segments)
-        return _cc_adaptive(edges, num_nodes, plan, lift_steps)
+        return _cc_adaptive(edges, num_nodes, plan, lift_steps,
+                            true_edges)
     if method == "labelprop":
         from repro.core.labelprop import _cc_labelprop
-        return _cc_labelprop(edges, num_nodes)
-    raise ValueError(f"unknown method {method!r}; choose from {METHODS}")
+        return _cc_labelprop(edges, num_nodes, true_edges)
+    raise ValueError(f"unknown method {method!r}; choose from "
+                     f"{ALL_METHODS}")
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_nodes", "num_segments", "lift_steps",
+                              "interpret"))
+def _cc_fused_jit(edges, true_edges, *, num_nodes, num_segments,
+                  lift_steps, interpret):
+    """method="pallas_fused": the shared adaptive composition over the
+    fused segment-scan kernel — ONE pallas_call per segment scan (and
+    one per cleanup round) instead of ``num_segments + jump_sweeps``
+    launches. Labels and work counters are bit-compatible with the jnp
+    backend (asserted in tests)."""
+    plan = plan_segmentation(edges.shape[0], num_nodes, num_segments)
+    ops = rounds.fused_round_ops(lift_steps, interpret=interpret)
+    pi, work = rounds.adaptive_rounds(edges, num_nodes, plan, ops=ops,
+                                      true_edges=true_edges)
+    return CCResult(pi, work.add(sync_rounds=1))
 
 
 def connected_components(
-    edges,
-    num_nodes: int,
+    graph,
+    num_nodes: int | None = None,
     method: str = "adaptive",
     *,
     num_segments: int | None = None,
@@ -188,31 +217,53 @@ def connected_components(
     """Compute connected components.
 
     Args:
-      edges: [E, 2] int array of undirected edges (one direction suffices;
-        self loops and duplicates are harmless).
-      num_nodes: |V| (static).
+      graph: a ``repro.graphs.device.DeviceGraph`` (the native input),
+        a host ``repro.graphs.format.Graph``, or a raw [E, 2] int edge
+        array (one direction per undirected edge suffices; self loops
+        and duplicates are harmless) — raw arrays go through the
+        ``DeviceGraph.from_edges`` shim and need ``num_nodes``.
+      num_nodes: |V| (static; only for raw edge arrays).
       method: one of ``soman | multijump | atomic_hook | adaptive |
-        labelprop``, or ``auto`` — the adaptive-selection policy
-        (``repro.connectivity.policy``) picks from the graph's features
-        (density 2|E|/|V| heuristic, overridden by a measured autotune
-        cache when one is warm).
-      num_segments: override the adaptive 2|E|/|V| heuristic (adaptive only).
+        labelprop | pallas_fused``, or ``auto`` — the adaptive-selection
+        policy (``repro.connectivity.policy``) picks from the graph's
+        features (density 2|E|/|V| heuristic, overridden by a measured
+        autotune cache when one is warm). ``pallas_fused`` runs the
+        fused segment-scan kernel (one launch per scan; interpret mode
+        off-TPU).
+      num_segments: override the adaptive 2|E|/|V| heuristic.
       lift_steps: bounded root-chase depth in the Atomic-Hook analogue.
 
     Returns:
-      ``CCResult(labels, work)`` with canonical min-id labels.
+      ``CCResult(labels, work)`` with canonical min-id labels. Work is
+      billed on TRUE (unpadded) edges — a padded DeviceGraph costs what
+      its real edges cost.
     """
-    edges = jnp.asarray(edges, jnp.int32).reshape(-1, 2)
-    if num_nodes <= 0:
+    from repro.graphs.device import as_device_graph
+    g = as_device_graph(graph, num_nodes, num_segments=num_segments)
+    if g.num_nodes <= 0:
         return CCResult(jnp.zeros((0,), jnp.int32), WorkCounters.zeros())
-    if edges.shape[0] == 0:
-        return CCResult(jnp.arange(num_nodes, dtype=jnp.int32),
+    if g.edges.shape[0] == 0 or g.true_edges_static == 0:
+        return CCResult(jnp.arange(g.num_nodes, dtype=jnp.int32),
                         WorkCounters.zeros())
     if method == "auto":
         from repro.connectivity.policy import select_method
-        method = select_method(num_nodes, edges.shape[0])
-    return _cc_jit(edges, num_nodes=num_nodes, method=method,
-                   num_segments=num_segments, lift_steps=lift_steps)
+        method = select_method(g.num_nodes, g.num_edges)
+    # the common exact-sized case keeps true_edges out of the traced
+    # operands entirely (None): billing stays a compile-time constant
+    # and no per-call scalar device_put is paid; only padded graphs
+    # thread a traced scalar
+    t = g.true_edges_static
+    true = None if (t is not None and t == int(g.edges.shape[0])) \
+        else g.true_edges_device()
+    if method == FUSED_METHOD:
+        from repro.kernels import default_interpret
+        return _cc_fused_jit(g.edges, true, num_nodes=g.num_nodes,
+                             num_segments=g.plan.num_segments,
+                             lift_steps=lift_steps,
+                             interpret=default_interpret())
+    return _cc_jit(g.edges, true, num_nodes=g.num_nodes, method=method,
+                   num_segments=g.plan.num_segments,
+                   lift_steps=lift_steps)
 
 
 # ---------------------------------------------------------------------------
@@ -235,21 +286,24 @@ def _cc_adaptive_pallas(edges, *, num_nodes, num_segments, lift_steps,
     return pi
 
 
-def connected_components_pallas(edges, num_nodes: int, *,
+def connected_components_pallas(graph, num_nodes: int | None = None, *,
                                 num_segments: int | None = None,
                                 lift_steps: int = 2,
                                 interpret: bool | None = None) -> jnp.ndarray:
-    """Adaptive CC on the Pallas kernel backend (hook + multi_jump
-    kernels; DESIGN.md §2). Returns canonical min-id labels."""
+    """Adaptive CC on the per-round Pallas kernel backend (hook +
+    multi_jump kernels; DESIGN.md §2) — one launch per segment hook and
+    per compress sweep. Prefer ``method="pallas_fused"`` for the
+    single-launch fused pipeline. Returns canonical min-id labels."""
+    from repro.graphs.device import as_device_graph
     from repro.kernels import default_interpret
     interpret = default_interpret() if interpret is None else interpret
-    edges = jnp.asarray(edges, jnp.int32).reshape(-1, 2)
-    if num_nodes <= 0:
+    g = as_device_graph(graph, num_nodes, num_segments=num_segments)
+    if g.num_nodes <= 0:
         return jnp.zeros((0,), jnp.int32)
-    if edges.shape[0] == 0:
-        return jnp.arange(num_nodes, dtype=jnp.int32)
-    return _cc_adaptive_pallas(edges, num_nodes=num_nodes,
-                               num_segments=num_segments,
+    if g.edges.shape[0] == 0:
+        return jnp.arange(g.num_nodes, dtype=jnp.int32)
+    return _cc_adaptive_pallas(g.edges, num_nodes=g.num_nodes,
+                               num_segments=g.plan.num_segments,
                                lift_steps=lift_steps, interpret=interpret)
 
 

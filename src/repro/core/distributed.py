@@ -43,24 +43,34 @@ from repro.core.segmentation import plan_segmentation
 _MAX_ROUNDS = 8
 
 
-def make_distributed_cc(mesh: Mesh, num_nodes: int, edges_per_shard: int,
+def make_distributed_cc(graph, mesh: Mesh,
                         axis_names: tuple[str, ...] = ("data",),
                         lift_steps: int = 2,
                         local_segments: int | None = None):
-    """Build a jitted distributed-CC callable for a fixed mesh/shape.
+    """Build a jitted distributed-CC callable for a sharded DeviceGraph.
 
     Args:
+      graph: a ``DeviceGraph`` already sharded over ``mesh`` via
+        ``DeviceGraph.shard(mesh, axis_names)`` — its (padded) edge
+        array divides evenly into per-chip partitions. The callable is
+        specialized to this graph's static shape/plan; run it on the
+        graph itself or any same-shape sharded DeviceGraph.
       mesh: device mesh; edges are sharded over ``axis_names`` (flattened).
-      num_nodes: |V| (static).
-      edges_per_shard: per-chip edge count (static; pad with (0,0)).
       axis_names: mesh axes the edge list is sharded over.
       local_segments: per-chip segmentation (None = paper heuristic on the
         per-chip subproblem).
 
     Returns:
-      fn(edges_sharded [n_shards*edges_per_shard, 2]) -> labels [V].
+      fn(graph: DeviceGraph) -> labels [V] (replicated).
     """
     n_shards = int(np.prod([mesh.shape[a] for a in axis_names]))
+    num_nodes = graph.num_nodes
+    total = int(graph.edges.shape[0])
+    if total % n_shards:
+        raise ValueError(
+            f"edge count {total} does not divide into {n_shards} shards; "
+            "shard the graph with DeviceGraph.shard(mesh, axis_names)")
+    edges_per_shard = total // n_shards
     segs = local_segments or plan_segmentation(
         edges_per_shard, num_nodes).num_segments
     segs = max(1, min(segs, edges_per_shard))
@@ -106,21 +116,28 @@ def make_distributed_cc(mesh: Mesh, num_nodes: int, edges_per_shard: int,
                    check_rep=False)
 
     def run(edges_sharded):
-        edges_sharded = jnp.asarray(edges_sharded, jnp.int32).reshape(
-            n_shards * edges_per_shard, 2)
         out = fn(edges_sharded)          # [n_shards, V] identical rows
         return out[0]
 
-    return jax.jit(run)
+    jitted = jax.jit(run)
+
+    def call(g):
+        from repro.graphs.device import as_device_graph
+        return jitted(as_device_graph(g, num_nodes).edges)
+
+    # the raw edges-level entry point ([n_shards*edges_per_shard, 2] ->
+    # labels), for AOT lowering over ShapeDtypeStructs (launch.dryrun)
+    call.on_edges = jitted
+    return call
 
 
 def distributed_connected_components(graph, mesh: Mesh,
                                      axis_names=("data",),
                                      lift_steps: int = 2):
-    """Convenience wrapper: partition a host Graph and run on ``mesh``."""
-    from repro.graphs.partition import partition_edges
-    n_shards = int(np.prod([mesh.shape[a] for a in axis_names]))
-    parts = partition_edges(graph, n_shards)          # [S, E/S, 2]
-    fn = make_distributed_cc(mesh, graph.num_nodes, parts.shape[1],
-                             axis_names=axis_names, lift_steps=lift_steps)
-    return fn(parts.reshape(-1, 2))
+    """Convenience wrapper: shard a graph (host ``Graph``, raw arrays,
+    or an unsharded ``DeviceGraph``) over ``mesh`` and run."""
+    from repro.graphs.device import as_device_graph
+    dg = as_device_graph(graph).shard(mesh, axis_names)
+    fn = make_distributed_cc(dg, mesh, axis_names=axis_names,
+                             lift_steps=lift_steps)
+    return fn(dg)

@@ -18,8 +18,20 @@ components short-circuits at the initial consistency check, costing
 ZERO hook rounds. The work counters accumulate across batches so the
 saving is measurable (``benchmarks/run.py --only incremental``).
 
-Batches are padded to power-of-two lengths with (0, 0) no-op edges so a
-stream of variably-sized batches hits a handful of jit entries; padding
+State residency (DESIGN.md §8): labels AND the label version live on
+device and are threaded through the absorb jit — the steady-state
+insert path performs ZERO host synchronizations (no ``bool(changed)``,
+no per-field ``int(...)``). The version ticks inside the same device
+program that detects a merge. Per-batch work counters come back as
+int32 device scalars and queue unsynced; they fold into host
+arbitrary-precision ints lazily (at ``work`` access, or every
+``_DRAIN_EVERY`` batches as an amortized sync point), so accumulated
+totals never wrap int32 over a long-lived instance.
+
+Insert batches arrive as host arrays (validated + padded on host) or as
+``DeviceGraph``s (``insert_graph`` — the service's coalesced path:
+device-side concat + jitted pow2 padding, transfer-free under
+``jax.transfer_guard("disallow")``). Padding is (0, 0) no-op edges and
 is never billed (true counts thread through the shared core).
 """
 from __future__ import annotations
@@ -34,22 +46,31 @@ from repro.core import rounds
 from repro.core.rounds import WorkCounters
 
 _MIN_BATCH_PAD = 64
+_DRAIN_EVERY = 256   # fold pending per-batch work into host ints
 
 
 @functools.partial(jax.jit, static_argnames=("lift_steps",))
-def _absorb_jit(pi, new_edges, true_count, *, lift_steps):
+def _absorb_jit(pi, new_edges, true_count, version, *, lift_steps):
+    """One absorb: cleanup loop over the new edges + merge detection +
+    version tick, all in ONE device program. Returns the PER-BATCH
+    work counters (int32 — safe for a single batch; the caller
+    accumulates across batches in host arbitrary-precision ints,
+    lazily, so no int32 wraparound over a long-lived instance)."""
     ops = rounds.jnp_round_ops(lift_steps)
     new_pi, work = rounds.cleanup_rounds(pi, new_edges, ops,
                                          WorkCounters.zeros(),
                                          true_edges=true_count)
-    # merge detection rides in the same jit: the label-version counter
-    # (query-cache invalidation) must tick ONLY when labels changed
-    return new_pi, work, jnp.any(new_pi != pi)
+    work = work.add(sync_rounds=1)      # one jit call per absorb
+    # the label-version counter (query-cache invalidation) must tick
+    # ONLY when labels changed — detected on device, no host round trip
+    version = version + jnp.any(new_pi != pi).astype(version.dtype)
+    return new_pi, version, work
 
 
 @jax.jit
-def _labels_changed(old_pi, new_pi):
-    return jnp.any(new_pi != old_pi)
+def _adopt_jit(pi, labels, version):
+    changed = jnp.any(labels != pi)
+    return labels, version + changed.astype(version.dtype)
 
 
 class IncrementalCC:
@@ -72,24 +93,63 @@ class IncrementalCC:
         self._pi = jnp.arange(num_nodes, dtype=jnp.int32)
         self.num_edges_inserted = 0
         self.batches_absorbed = 0
-        # label version: ticks ONLY when an insert actually merges
-        # components (labels changed) — the registry invalidates cached
-        # query results on version change and nothing else
-        self.version = 0
-        # accumulated work, host-side ints (billed on true edges only)
-        self.work = {k: 0 for k in WorkCounters._fields}
+        # device-resident: the version ticks inside the absorb jit
+        self._version = jnp.zeros((), jnp.int32)
+        # work accounting: each absorb emits per-batch int32 device
+        # counters (billed on true edges only); they queue here unsynced
+        # and fold into host arbitrary-precision ints lazily — at
+        # inspection (``work``) or every _DRAIN_EVERY batches — so the
+        # steady-state insert path stays transfer-free AND the
+        # accumulated totals never wrap int32
+        self._work_host = {k: 0 for k in WorkCounters._fields}
+        self._work_pending: list[WorkCounters] = []
 
     @property
     def labels(self) -> jnp.ndarray:
         """Canonical min-id labels, [num_nodes] int32."""
         return self._pi
 
-    def insert(self, new_edges) -> jnp.ndarray:
-        """Absorb a batch of edge insertions; returns the new labels.
+    @property
+    def version(self) -> int:
+        """Label version as a host int (syncs; see ``version_device``)."""
+        return int(self._version)
 
-        Self loops, duplicates, and already-connected edges are
-        harmless (the latter cost zero hook rounds).
-        """
+    @property
+    def version_device(self) -> jnp.ndarray:
+        """Label version as a device int32 scalar (no sync)."""
+        return self._version
+
+    def _drain_work(self) -> None:
+        # explicit device_get, not int(): the amortized drain can fire
+        # inside a jax.transfer_guard("disallow") region (every
+        # _DRAIN_EVERY-th absorb), where implicit conversions raise but
+        # explicit transfers are allowed
+        for w in jax.device_get(self._work_pending):
+            for k, v in w._asdict().items():
+                self._work_host[k] += int(v)
+        self._work_pending.clear()
+
+    def _queue_work(self, work: WorkCounters | dict | None) -> None:
+        if work is None:
+            return
+        if isinstance(work, WorkCounters):
+            self._work_pending.append(work)
+        else:
+            for k, v in work.items():
+                self._work_host[k] += int(v)
+        if len(self._work_pending) >= _DRAIN_EVERY:
+            self._drain_work()           # rare amortized sync point
+
+    @property
+    def work(self) -> dict:
+        """Accumulated work counters as host ints (syncs on access)."""
+        self._drain_work()
+        return dict(self._work_host)
+
+    def insert(self, new_edges) -> jnp.ndarray:
+        """Absorb a host-array batch of edge insertions; returns the new
+        labels. Self loops, duplicates, and already-connected edges are
+        harmless (the latter cost zero hook rounds)."""
         new_edges = np.asarray(new_edges, np.int32).reshape(-1, 2)
         if (new_edges.size and
                 (new_edges.min() < 0 or new_edges.max() >= self.num_nodes)):
@@ -102,18 +162,36 @@ class IncrementalCC:
             return self._pi
         # pad to a power-of-two bucket: few jit entries for a stream of
         # ragged batches ((0,0) self-loop no-ops, never billed)
-        target = max(_MIN_BATCH_PAD,
-                     1 << int(e - 1).bit_length())
+        target = max(_MIN_BATCH_PAD, 1 << int(e - 1).bit_length())
         padded = np.zeros((target, 2), np.int32)
         padded[:e] = new_edges
-        self._pi, work, changed = _absorb_jit(
-            self._pi, jnp.asarray(padded),
-            jnp.asarray(e, jnp.int32), lift_steps=self.lift_steps)
-        for k, v in work._asdict().items():
-            self.work[k] += int(v)
-        self.work["sync_rounds"] += 1   # one jit call per absorb
-        if bool(changed):
-            self.version += 1
+        self._pi, self._version, batch_work = _absorb_jit(
+            self._pi, jax.device_put(padded),
+            jax.device_put(np.int32(e)), self._version,
+            lift_steps=self.lift_steps)
+        self._queue_work(batch_work)
+        return self._pi
+
+    def insert_graph(self, delta) -> jnp.ndarray:
+        """Absorb a device-resident ``DeviceGraph`` insert batch — the
+        registry/service steady-state path. Coalescing (``concat``) and
+        pow2 padding happen on device; the absorb jit threads labels,
+        version, and work counters without a single host transfer
+        (validated under ``jax.transfer_guard("disallow")``). Bounds are
+        NOT re-checked on this path (device values; the API boundary
+        validates host inputs)."""
+        if delta.num_nodes != self.num_nodes:
+            raise ValueError(f"delta num_nodes {delta.num_nodes} != "
+                             f"{self.num_nodes}")
+        self.num_edges_inserted += delta.num_edges
+        self.batches_absorbed += 1
+        if self.num_nodes == 0 or delta.edges.shape[0] == 0:
+            return self._pi
+        padded = delta.pad_pow2(min_rows=_MIN_BATCH_PAD)
+        self._pi, self._version, batch_work = _absorb_jit(
+            self._pi, padded.edges, padded.true_edges_device(),
+            self._version, lift_steps=self.lift_steps)
+        self._queue_work(batch_work)
         return self._pi
 
     def adopt(self, labels, work=None, num_edges: int = 0) -> jnp.ndarray:
@@ -121,24 +199,20 @@ class IncrementalCC:
         (the registry's bulk-load path: the policy routed a large batch
         through a static engine instead of the absorb). Bills ``work``
         (a ``WorkCounters`` or field dict) into the accumulated
-        counters and ticks the version iff the labels changed.
+        counters and ticks the version iff the labels changed — the
+        merge detection runs on device.
         """
         labels = jnp.asarray(labels, jnp.int32)
         if labels.shape != (self.num_nodes,):
             raise ValueError(f"labels shape {labels.shape} != "
                              f"({self.num_nodes},)")
-        changed = bool(_labels_changed(self._pi, labels)) \
-            if self.num_nodes else False
-        self._pi = labels
         self.num_edges_inserted += int(num_edges)
         self.batches_absorbed += 1
-        if work is not None:
-            if isinstance(work, WorkCounters):
-                work = work._asdict()
-            for k, v in work.items():
-                self.work[k] += int(v)
-        if changed:
-            self.version += 1
+        self._queue_work(work)
+        if self.num_nodes == 0:
+            return self._pi
+        self._pi, self._version = _adopt_jit(self._pi, labels,
+                                             self._version)
         return self._pi
 
     def connected(self, u: int, v: int) -> bool:

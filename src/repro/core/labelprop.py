@@ -12,9 +12,10 @@ from repro.core.cc import CCResult, WorkCounters
 _MAX_ITERS = 4096
 
 
-def _cc_labelprop(edges: jnp.ndarray, num_nodes: int) -> CCResult:
+def _cc_labelprop(edges: jnp.ndarray, num_nodes: int,
+                  true_edges=None) -> CCResult:
     u, v = edges[:, 0], edges[:, 1]
-    e = edges.shape[0]
+    e = edges.shape[0] if true_edges is None else true_edges
 
     def cond(state):
         _, changed, iters, _ = state

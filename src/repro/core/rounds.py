@@ -145,19 +145,27 @@ def edges_consistent(pi: jnp.ndarray, edges: jnp.ndarray) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 class RoundOps(NamedTuple):
-    """The two pluggable kernels of a hook+compress round.
+    """The pluggable kernels of a hook+compress round.
 
     * ``hook(pi, edges) -> pi``        — one hook pass over an edge set,
     * ``compress(pi, work) -> (pi, work)`` — full compress, threading work,
     * ``bill_lift``                    — hook evaluations billed per true
                                          edge (1 + lift_steps for the
-                                         root-chasing Atomic-Hook).
+                                         root-chasing Atomic-Hook),
+    * ``scan``                         — optional FUSED segment scan:
+      ``scan(pi, segments, true_counts, work) -> (pi, work)`` runs the
+      whole Fig. 4 inner pipeline (every hook round + every compress
+      sweep) in ONE kernel launch, billing internally. When set,
+      ``segment_scan`` delegates to it and ``cleanup_rounds`` issues one
+      launch per cleanup round instead of ``1 + jump_sweeps``.
     """
 
     hook: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
     compress: Callable[[jnp.ndarray, WorkCounters],
                        tuple[jnp.ndarray, WorkCounters]]
     bill_lift: int
+    scan: Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray, WorkCounters],
+                   tuple[jnp.ndarray, WorkCounters]] | None = None
 
 
 def jnp_round_ops(lift_steps: int = 2,
@@ -184,6 +192,39 @@ def pallas_round_ops(lift_steps: int, edge_tile: int, node_tile: int,
         compress=lambda pi, w: (full_compress(
             pi, tile=node_tile, interpret=interpret), w),
         bill_lift=1 + lift_steps,
+    )
+
+
+def fused_round_ops(lift_steps: int = 2, *,
+                    interpret: bool | None = None,
+                    bill_nodes: int | jnp.ndarray | None = None
+                    ) -> RoundOps:
+    """Fused-kernel ops (``kernels.cc_fused``): the whole segment scan —
+    hook rounds with bounded root chase plus multi-jump compress — in
+    ONE ``pallas_call`` per scan. Billing is bit-compatible with the
+    jnp backend: hook_ops on scalar-prefetched TRUE per-segment counts,
+    jump_sweeps from the kernel's exact per-segment sweep counters.
+    ``hook``/``compress`` fall back to the jnp primitives (used only by
+    callers that bypass the fused scan)."""
+    from repro.kernels.cc_fused.ops import fused_segment_scan
+    bill = 1 + lift_steps
+
+    def scan(pi, segments, true_counts, work):
+        v = pi.shape[0] if bill_nodes is None else bill_nodes
+        pi, sweeps = fused_segment_scan(pi, segments, true_counts,
+                                        lift_steps=lift_steps,
+                                        interpret=interpret)
+        total = jnp.sum(sweeps)
+        return pi, work.add(
+            hook_ops=jnp.sum(true_counts) * bill,
+            hook_rounds=segments.shape[0],
+            jump_ops=total * v, jump_sweeps=total)
+
+    return RoundOps(
+        hook=lambda pi, e: hook_edges(pi, e, lift_steps=lift_steps),
+        compress=lambda pi, w: compress(pi, w, bill_nodes=bill_nodes),
+        bill_lift=bill,
+        scan=scan,
     )
 
 
@@ -228,10 +269,15 @@ def segment_scan(pi: jnp.ndarray, segments: jnp.ndarray, ops: RoundOps,
 
     ``true_counts`` ([num_segments] int32) bills hook_ops per segment on
     true edges only; None bills the full (padded) segment size.
+
+    With fused ops (``ops.scan`` set) the whole scan is ONE kernel
+    launch instead of ``num_segments + jump_sweeps``.
     """
     if true_counts is None:
         true_counts = jnp.full((segments.shape[0],), segments.shape[1],
                                jnp.int32)
+    if ops.scan is not None:
+        return ops.scan(pi, segments, true_counts, work)
 
     def seg_body(carry, xs):
         p, w = carry
@@ -264,6 +310,7 @@ def cleanup_rounds(pi: jnp.ndarray, edges: jnp.ndarray, ops: RoundOps,
     if true_edges is None:
         true_edges = edges.shape[0]
     bill = jnp.asarray(true_edges, jnp.int32) * ops.bill_lift
+    true1 = jnp.asarray(true_edges, jnp.int32).reshape(1)
 
     def cond(state):
         _, done, rounds, _ = state
@@ -271,9 +318,14 @@ def cleanup_rounds(pi: jnp.ndarray, edges: jnp.ndarray, ops: RoundOps,
 
     def body(state):
         p, _, rounds, w = state
-        p = ops.hook(p, edges)
-        w = w.add(hook_ops=bill, hook_rounds=1)
-        p, w = ops.compress(p, w)
+        if ops.scan is not None:
+            # fused backend: hook + full compress of the (single-segment)
+            # edge set in ONE launch per cleanup round
+            p, w = ops.scan(p, edges[None], true1, w)
+        else:
+            p = ops.hook(p, edges)
+            w = w.add(hook_ops=bill, hook_rounds=1)
+            p, w = ops.compress(p, w)
         return p, edges_consistent(p, edges), rounds + 1, w
 
     done0 = edges_consistent(pi, edges)

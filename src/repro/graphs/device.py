@@ -1,0 +1,315 @@
+"""DeviceGraph — the device-resident graph substrate (DESIGN.md §8).
+
+Every execution mode above ``repro.core.rounds`` used to thread graphs
+as ad-hoc ``(edges, num_nodes, true_edges)`` tuples with host-side numpy
+at the seams (policy feature extraction, service insert coalescing,
+distributed partitioning). ``DeviceGraph`` replaces those tuples with
+ONE registered pytree that every layer consumes:
+
+  * ``edges``      — on-device int32 [E, 2] COO (possibly padded with
+                     (0, 0) no-op self loops);
+  * ``num_nodes``  — static |V| (a jit cache key);
+  * ``true_edges`` — the unpadded edge count, static int *or* traced
+                     int32 scalar (work counters bill true edges only);
+  * ``plan``       — the attached ``SegmentationPlan`` (static), keyed
+                     on the paper's s = 2|E|/|V| heuristic over the
+                     TRUE edge count, covering the stored (padded)
+                     edge array;
+  * CSR offsets    — built lazily on device via sort + searchsorted
+                     (``csr()``), cached on the instance.
+
+Static fields ride in the pytree aux data, so a DeviceGraph crosses
+``jax.jit`` boundaries directly and two graphs of one shape bucket hit
+one compile. All device-shaping helpers (``pad_pow2``, ``concat``,
+``pad_rows``) are jit-backed: under ``jax.transfer_guard("disallow")``
+the steady-state service path runs them without a single implicit
+host transfer (eager ``jnp.zeros`` would materialize a host constant).
+
+Padding invariant: rows past ``true_edges`` are (0, 0) self loops —
+hook no-ops for every engine — and are never billed (see
+``rounds.WorkCounters``).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.batch import next_pow2
+from repro.core.segmentation import (SegmentationPlan, adaptive_num_segments,
+                                     plan_segmentation)
+
+_MIN_PAD_ROWS = 8
+
+
+def validate_edge_bounds(edges: np.ndarray, num_nodes: int) -> None:
+    """Raise unless every endpoint lies in [0, num_nodes) — the ONE
+    validation rule every host-ingress path shares (registry coerce,
+    service admission/rebind). Callers pass a HOST array; device-
+    resident paths skip validation by contract (a sync would defeat
+    them)."""
+    edges = np.asarray(edges)
+    if edges.size and (edges.min() < 0 or edges.max() >= num_nodes):
+        raise ValueError(f"edge endpoint out of range [0, {num_nodes})")
+
+
+@functools.partial(jax.jit, static_argnames=("rows",))
+def _pad_rows_jit(edges: jnp.ndarray, *, rows: int) -> jnp.ndarray:
+    """Append ``rows`` (0, 0) no-op rows on device (jitted so it stays
+    transfer-free under ``jax.transfer_guard``)."""
+    return jnp.concatenate(
+        [edges, jnp.zeros((rows, 2), edges.dtype)], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("num_nodes",))
+def _build_csr_jit(edges: jnp.ndarray, *, num_nodes: int):
+    """On-device CSR offsets: sort edges by source, then binary-search
+    the row starts (no host bincount/cumsum round trip)."""
+    src = edges[:, 0]
+    order = jnp.argsort(src, stable=True)
+    sorted_src = src[order]
+    neighbors = edges[order, 1]
+    offsets = jnp.searchsorted(
+        sorted_src, jnp.arange(num_nodes + 1, dtype=jnp.int32))
+    return offsets.astype(jnp.int32), neighbors
+
+
+@jax.tree_util.register_pytree_node_class
+class DeviceGraph:
+    """Device-resident COO graph + segmentation plan (one pytree)."""
+
+    def __init__(self, edges, num_nodes: int, true_edges,
+                 plan: SegmentationPlan, name: str = "graph"):
+        self.edges = edges                     # int32 [E, 2], device
+        self.num_nodes = int(num_nodes)        # static
+        self.true_edges = true_edges           # static int | traced scalar
+        self.plan = plan                       # static
+        self.name = name
+        self._csr = None                       # lazy (offsets, neighbors)
+
+    # -- pytree protocol ---------------------------------------------------
+
+    def tree_flatten(self):
+        if self.true_edges_static is not None:
+            return ((self.edges,),
+                    (self.num_nodes, self.true_edges_static, self.plan,
+                     self.name))
+        return ((self.edges, self.true_edges),
+                (self.num_nodes, None, self.plan, self.name))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        num_nodes, true_static, plan, name = aux
+        if true_static is not None:
+            (edges,) = children
+            return cls(edges, num_nodes, true_static, plan, name=name)
+        edges, true_edges = children
+        return cls(edges, num_nodes, true_edges, plan, name=name)
+
+    # -- constructors ------------------------------------------------------
+
+    @classmethod
+    def from_edges(cls, edges, num_nodes: int, *, true_edges=None,
+                   num_segments: int | None = None,
+                   name: str = "graph") -> "DeviceGraph":
+        """The raw-array shim: accepts host numpy / lists (explicitly
+        device_put) or already-device jnp arrays (left in place)."""
+        if isinstance(edges, jnp.ndarray):
+            edges = edges.astype(jnp.int32).reshape(-1, 2)
+        else:
+            edges = jax.device_put(
+                np.asarray(edges, np.int32).reshape(-1, 2))
+        e_stored = int(edges.shape[0])
+        if true_edges is None:
+            true_edges = e_stored
+        plan = _plan_for(e_stored, int(num_nodes), true_edges, num_segments)
+        return cls(edges, int(num_nodes), true_edges, plan, name=name)
+
+    @classmethod
+    def from_host(cls, graph, *, num_segments: int | None = None
+                  ) -> "DeviceGraph":
+        """From a host ``repro.graphs.format.Graph`` (one device_put)."""
+        return cls.from_edges(graph.edges, graph.num_nodes,
+                              num_segments=num_segments,
+                              name=getattr(graph, "name", "graph"))
+
+    # -- static metadata (policy features — zero host round-trips) ---------
+
+    @property
+    def true_edges_static(self) -> int | None:
+        """The true edge count when known statically, else None."""
+        if isinstance(self.true_edges, (int, np.integer)):
+            return int(self.true_edges)
+        return None
+
+    @property
+    def num_edges(self) -> int:
+        """Best static edge count: true if static, else the stored
+        (padded) row count."""
+        t = self.true_edges_static
+        return t if t is not None else int(self.edges.shape[0])
+
+    @property
+    def density(self) -> float:
+        """The paper's segmentation key 2|E|/|V| from static metadata."""
+        return 2.0 * self.num_edges / max(self.num_nodes, 1)
+
+    def true_edges_device(self) -> jnp.ndarray:
+        """The true edge count as a device scalar (explicit transfer —
+        legal under ``transfer_guard('disallow')``)."""
+        if isinstance(self.true_edges, jnp.ndarray):
+            return self.true_edges
+        return jax.device_put(np.int32(self.true_edges))
+
+    # -- device-side shaping -----------------------------------------------
+
+    def pad_rows(self, target: int) -> "DeviceGraph":
+        """Pad the stored edge array with (0, 0) no-ops to ``target``
+        rows (device-side, jitted). ``true_edges`` is preserved."""
+        e = int(self.edges.shape[0])
+        if target <= e:
+            return self
+        edges = _pad_rows_jit(self.edges, rows=target - e)
+        plan = _plan_for(target, self.num_nodes, self.true_edges, None)
+        return DeviceGraph(edges, self.num_nodes, self.true_edges, plan,
+                           name=self.name)
+
+    def pad_pow2(self, min_rows: int = _MIN_PAD_ROWS) -> "DeviceGraph":
+        """Pad to the next power-of-two row count (floored at
+        ``min_rows``) — the shape-bucket rule of ``repro.core.batch``
+        (same ``next_pow2``, so both layers share jit-cache buckets),
+        letting a stream of ragged batches hit a handful of entries."""
+        e = int(self.edges.shape[0])
+        return self.pad_rows(next_pow2(max(e, min_rows)))
+
+    @classmethod
+    def concat(cls, graphs: Sequence["DeviceGraph"],
+               name: str | None = None) -> "DeviceGraph":
+        """Device-side concatenation of same-|V| graphs (the service's
+        insert-coalescing primitive — replaces host ``np.concatenate``).
+        Every part needs a STATIC true count; counts sum statically.
+
+        Parts with static padding are trimmed first so the result keeps
+        the prefix invariant (first ``true_edges`` rows are real) that
+        per-segment billing and the fused kernel's edge masking rely on.
+        """
+        graphs = list(graphs)
+        if not graphs:
+            raise ValueError("concat needs at least one DeviceGraph")
+        if len({g.num_nodes for g in graphs}) != 1:
+            raise ValueError("concat requires identical num_nodes, got "
+                             f"{[g.num_nodes for g in graphs]}")
+        if len(graphs) == 1:
+            return graphs[0]
+        parts, trues = [], []
+        for g in graphs:
+            s = g.true_edges_static
+            if s is None:
+                # a traced-count part MAY be padded, and its pads would
+                # land in the interior where the kernel's mask reads
+                # them as real — refuse rather than silently corrupt
+                raise ValueError(
+                    "concat needs static true_edges on every part "
+                    "(prefix-padding invariant)")
+            if s < int(g.edges.shape[0]):
+                parts.append(g.edges[:s])      # static slice, device op
+            else:
+                parts.append(g.edges)
+            trues.append(s)
+        edges = jnp.concatenate(parts, axis=0)
+        true = int(sum(trues))
+        plan = _plan_for(int(edges.shape[0]), graphs[0].num_nodes, true,
+                         None)
+        return cls(edges, graphs[0].num_nodes, true, plan,
+                   name=name or graphs[0].name)
+
+    def shard(self, mesh: Mesh, axis_names: tuple[str, ...] = ("data",)
+              ) -> "DeviceGraph":
+        """Shard the edge list over the mesh's ``axis_names`` (padding
+        with (0, 0) no-ops so non-divisible edge counts split evenly).
+        The result is what ``core.distributed.make_distributed_cc``
+        consumes."""
+        n_shards = int(np.prod([mesh.shape[a] for a in axis_names]))
+        e = int(self.edges.shape[0])
+        per = max(1, (e + n_shards - 1) // n_shards)
+        padded = self.pad_rows(per * n_shards)
+        spec = P(axis_names if len(axis_names) > 1 else axis_names[0],
+                 None)
+        edges = jax.device_put(padded.edges, NamedSharding(mesh, spec))
+        return DeviceGraph(edges, self.num_nodes, padded.true_edges,
+                           padded.plan, name=self.name)
+
+    # -- lazy on-device CSR ------------------------------------------------
+
+    def csr(self) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """(offsets int32 [V+1], neighbors int32 [E]) built on device
+        via sort + searchsorted, cached. Built over the stored edge
+        array; padded (0, 0) rows surface as extra 0->0 entries, so
+        callers that need exact degrees should slice to
+        ``true_edges_static`` first (``trim()``)."""
+        if self._csr is None:
+            self._csr = _build_csr_jit(self.edges,
+                                       num_nodes=self.num_nodes)
+        return self._csr
+
+    def trim(self) -> "DeviceGraph":
+        """Drop padded rows (requires a static true count)."""
+        t = self.true_edges_static
+        if t is None:
+            raise ValueError("trim() needs a static true_edges")
+        if t == int(self.edges.shape[0]):
+            return self
+        return DeviceGraph.from_edges(self.edges[:t], self.num_nodes,
+                                      name=self.name)
+
+    def __repr__(self) -> str:
+        t = self.true_edges_static
+        return (f"DeviceGraph(|V|={self.num_nodes}, "
+                f"|E|={self.edges.shape[0]}"
+                + (f", true={t}" if t is not None
+                   and t != self.edges.shape[0] else "")
+                + f", s={self.plan.num_segments}, name={self.name!r})")
+
+
+def _plan_for(e_stored: int, num_nodes: int, true_edges,
+              num_segments: int | None) -> SegmentationPlan:
+    """Plan over the STORED row count, with the paper's s = 2|E|/|V|
+    heuristic evaluated on the TRUE count when it is static (padding
+    must not inflate the segment count)."""
+    if num_segments is None:
+        heur = true_edges if isinstance(true_edges, (int, np.integer)) \
+            else e_stored
+        num_segments = adaptive_num_segments(int(heur), num_nodes)
+    return plan_segmentation(e_stored, num_nodes, num_segments)
+
+
+def as_device_graph(graph, num_nodes: int | None = None, *,
+                    num_segments: int | None = None) -> DeviceGraph:
+    """Coerce any accepted graph spelling to a DeviceGraph:
+
+      * a ``DeviceGraph`` — returned as-is (``num_segments`` override
+        rebuilds the plan only);
+      * a host ``Graph`` (anything with ``.edges``/``.num_nodes``);
+      * raw ``(edges, num_nodes)`` arrays — the compatibility shim.
+    """
+    if isinstance(graph, DeviceGraph):
+        if num_segments is not None and \
+                num_segments != graph.plan.num_segments:
+            plan = plan_segmentation(int(graph.edges.shape[0]),
+                                     graph.num_nodes, num_segments)
+            return DeviceGraph(graph.edges, graph.num_nodes,
+                               graph.true_edges, plan, name=graph.name)
+        return graph
+    if hasattr(graph, "edges") and hasattr(graph, "num_nodes"):
+        return DeviceGraph.from_edges(graph.edges, graph.num_nodes,
+                                      num_segments=num_segments,
+                                      name=getattr(graph, "name", "graph"))
+    if num_nodes is None:
+        raise ValueError("raw edge arrays need an explicit num_nodes")
+    return DeviceGraph.from_edges(graph, num_nodes,
+                                  num_segments=num_segments)

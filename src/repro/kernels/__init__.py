@@ -8,6 +8,10 @@ Each subpackage ships three modules:
   * ``ref.py``    — the pure-jnp oracle the kernel is tested against.
 
 Kernel inventory (see DESIGN.md §2 for why these are the hot spots):
+  * cc_fused        — the WHOLE Fig. 4 segment scan (every hook round +
+                      every compress sweep) in ONE pallas_call with
+                      scalar-prefetched segment boundaries (DESIGN.md
+                      §8; replaces num_segments + jump_sweeps launches).
   * multi_jump      — fused Compress: blocked pointer jumping with
                       continuous write-back (the paper's Multi-Jump).
   * hook            — deterministic Atomic-Hook analogue: edge-tile

@@ -1,0 +1,1 @@
+from repro.kernels.cc_fused.ops import fused_segment_scan

@@ -1,0 +1,130 @@
+"""Fused segment-scan Pallas kernel — the WHOLE Fig. 4 inner pipeline
+in ONE ``pallas_call``.
+
+The per-round backend (``kernels.hook`` + ``kernels.multi_jump``) pays
+one kernel launch per segment hook plus one per compress sweep:
+``num_segments + jump_sweeps`` launches per segment scan. Sutton et
+al.'s 6.8× comes precisely from eliminating that per-round scheduling
+overhead; this kernel removes it on TPU by running every hook round and
+every compress sweep inside a single sequential 1-D grid over segments:
+
+  * grid step i processes segment i: gather both endpoint parents,
+    bounded vectorized root chase (``lift_steps``, the Atomic-Hook
+    analogue), high-to-low rule, deterministic scatter-min into the
+    VMEM-resident parent workspace;
+  * then the fused Multi-Jump compress runs to its fixed point in the
+    SAME grid step (``fori`` over the provably sufficient
+    ceil(log2 V) + 2 pointer-doubling fuel, masked after convergence),
+    counting actual sweeps exactly like ``rounds.compress`` so work
+    billing stays bit-compatible with the jnp backend;
+  * π persists in the output buffer across grid steps (revisited whole-
+    array block — the standard accumulation idiom), so later segments
+    observe earlier segments' hooks: the same memory-visibility order
+    as the sequential ``lax.scan`` it replaces, hence bit-identical
+    labels.
+
+Per-segment TRUE edge counts arrive as a scalar-prefetched operand
+(``pltpu.PrefetchScalarGridSpec``): available in SMEM before the grid
+body runs, they mask padded edge slots to (0, 0) no-ops — work counters
+bill true edges only, and the schedule never depends on pad content.
+Callers must uphold the prefix invariant (real edges first within the
+flattened segment array — what ``rounds.pad_and_segment`` and
+``DeviceGraph`` guarantee).
+
+Outputs: (π', per-segment sweep counts int32 [S]) — the sweep counts
+feed ``jump_ops``/``jump_sweeps`` billing outside the kernel.
+
+VMEM budget matches ``kernels.multi_jump``: π is int32[V] resident
+across the grid (V ≲ 24M per core on v5e before an HBM+DMA variant is
+needed).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _cc_fused_kernel(counts_ref, segs_ref, pi_init_ref, pi_ref,
+                     sweeps_ref, *, lift_steps: int, fuel: int,
+                     segment_size: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():                                   # seed the workspace once
+        pi_ref[...] = pi_init_ref[...]
+
+    pi = pi_ref[...]                           # incl. earlier segments' hooks
+    seg = segs_ref[...].reshape(segment_size, 2)
+    # scalar-prefetched true count: mask padded slots to (0,0) no-ops
+    mask = jax.lax.iota(jnp.int32, segment_size) < counts_ref[i]
+    u = jnp.where(mask, seg[:, 0], 0)
+    v = jnp.where(mask, seg[:, 1], 0)
+
+    # Atomic-Hook analogue: bounded root chase + high-low scatter-min
+    pu = jnp.take(pi, u, axis=0)
+    pv = jnp.take(pi, v, axis=0)
+    for _ in range(lift_steps):
+        pu = jnp.take(pi, pu, axis=0)
+        pv = jnp.take(pi, pv, axis=0)
+    hi = jnp.maximum(pu, pv)
+    lo = jnp.minimum(pu, pv)
+    pi = pi.at[hi].min(lo)
+
+    # fused Multi-Jump compress to the fixed point, counting sweeps
+    # exactly like rounds.compress (each executed sweep bills once,
+    # including the final no-change sweep that detects convergence)
+    def body(_, carry):
+        p, changed, n = carry
+        nxt = jnp.where(changed, jnp.take(p, p, axis=0), p)
+        n = n + changed.astype(jnp.int32)
+        changed = jnp.logical_and(changed, jnp.any(nxt != p))
+        return nxt, changed, n
+
+    pi, _, nsweeps = jax.lax.fori_loop(
+        0, fuel, body,
+        (pi, jnp.asarray(True), jnp.zeros((), jnp.int32)))
+
+    pi_ref[...] = pi
+    sweeps_ref[...] = jnp.full((1,), nsweeps, jnp.int32)
+
+
+def cc_fused_pallas(pi: jnp.ndarray, segments: jnp.ndarray,
+                    true_counts: jnp.ndarray, *, lift_steps: int = 2,
+                    fuel: int = 34, interpret: bool = True
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One fused segment scan: ``segments`` [S, seg, 2] hooked and
+    compressed against π in a single ``pallas_call``.
+
+    Returns (π', sweeps [S]) where ``sweeps[i]`` is the number of
+    compress sweeps segment i's grid step executed.
+    """
+    num_segments, segment_size, _ = segments.shape
+    v = pi.shape[0]
+    kernel = functools.partial(_cc_fused_kernel, lift_steps=lift_steps,
+                               fuel=fuel, segment_size=segment_size)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                 # true_counts -> SMEM
+        grid=(num_segments,),
+        in_specs=[
+            pl.BlockSpec((1, segment_size, 2), lambda i, c: (i, 0, 0)),
+            pl.BlockSpec((v,), lambda i, c: (0,)),
+        ],
+        out_specs=[
+            # π: whole-array block revisited every step (persistent)
+            pl.BlockSpec((v,), lambda i, c: (0,)),
+            pl.BlockSpec((1,), lambda i, c: (i,)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((v,), pi.dtype),
+            jax.ShapeDtypeStruct((num_segments,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(true_counts, segments, pi)

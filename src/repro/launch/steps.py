@@ -344,16 +344,22 @@ def _build_cc(shape, mesh, multi_pod) -> Cell:
     from repro.core.distributed import make_distributed_cc
     import numpy as np
 
+    from repro.core.segmentation import plan_segmentation
+    from repro.graphs.device import DeviceGraph
+
     specs = cc_graphs.input_specs(shape)
     axes = all_axes(multi_pod)
     n_shards = int(np.prod([mesh.shape[a] for a in axes]))
     e = specs["edges"].shape[0]
     per = (e + n_shards - 1) // n_shards
     padded = jax.ShapeDtypeStruct((per * n_shards, 2), jnp.int32)
-    fn = make_distributed_cc(mesh, specs["num_nodes"], per,
-                             axis_names=axes)
-    # make_distributed_cc returns a jitted callable; unwrap for lowering
-    return Cell("cc-adaptive", shape, "cc", fn, args=(padded,),
+    # abstract DeviceGraph: shape/plan metadata only, no real edges
+    dg = DeviceGraph(padded, specs["num_nodes"], e,
+                     plan_segmentation(per * n_shards,
+                                       specs["num_nodes"]))
+    fn = make_distributed_cc(dg, mesh, axis_names=axes)
+    # lower the raw edges-level entry point over the ShapeDtypeStruct
+    return Cell("cc-adaptive", shape, "cc", fn.on_edges, args=(padded,),
                 in_shardings=(NamedSharding(mesh, P(axes, None)),))
 
 

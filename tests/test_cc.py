@@ -197,3 +197,142 @@ def test_pallas_on_structured_graphs():
         got = connected_components_pallas(g.edges, g.num_nodes,
                                           interpret=True)
         np.testing.assert_array_equal(np.asarray(got), want)
+
+
+# --------------------------------------------------------------------------
+# Fused Pallas backend (method="pallas_fused"): one launch per segment scan
+# --------------------------------------------------------------------------
+
+def _fused_oracle_matrix():
+    """The propcheck oracle matrix: RMAT, grid-road, star, disconnected."""
+    return (G.rmat(7, 4, seed=11), G.grid_road(10, seed=11), G.star(33),
+            G.disjoint_cliques(4, 6, seed=11))
+
+
+def test_pallas_fused_bit_identical_to_jnp_backend():
+    """Acceptance: labels bit-identical to the jnp backend on the oracle
+    matrix — and the work counters match too (same hooks, same sweeps)."""
+    for g in _fused_oracle_matrix():
+        want = connected_components_oracle(g.edges, g.num_nodes)
+        jnp_res = connected_components(g.edges, g.num_nodes,
+                                       method="adaptive")
+        fused = connected_components(g.edges, g.num_nodes,
+                                     method="pallas_fused")
+        np.testing.assert_array_equal(np.asarray(fused.labels), want,
+                                      err_msg=g.name)
+        np.testing.assert_array_equal(np.asarray(fused.labels),
+                                      np.asarray(jnp_res.labels),
+                                      err_msg=g.name)
+        for field, a, b in zip(WorkCounters._fields, fused.work,
+                               jnp_res.work):
+            assert int(a) == int(b), (g.name, field, int(a), int(b))
+
+
+def _subjaxprs(v):
+    if isinstance(v, jax.core.ClosedJaxpr):
+        yield v.jaxpr
+    elif isinstance(v, jax.core.Jaxpr):
+        yield v
+    elif isinstance(v, (list, tuple)):
+        for x in v:
+            yield from _subjaxprs(x)
+
+
+def _pallas_call_sites(jaxpr) -> int:
+    """Static pallas_call call sites in a jaxpr (recursing through
+    pjit/scan/while sub-jaxprs)."""
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                n += _pallas_call_sites(sub)
+    return n
+
+
+def _launch_lower_bound(jaxpr) -> int:
+    """Lower bound on runtime kernel launches: scan bodies multiply by
+    their static trip count; while bodies count once (>= 1 trip for the
+    compress loop, whose first sweep always runs)."""
+    n = 0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "pallas_call":
+            n += 1
+        elif name == "scan":
+            n += eqn.params["length"] * _launch_lower_bound(
+                eqn.params["jaxpr"].jaxpr)
+        else:
+            for v in eqn.params.values():
+                for sub in _subjaxprs(v):
+                    n += _launch_lower_bound(sub)
+    return n
+
+
+def test_fused_single_launch_vs_per_round_backend():
+    """Acceptance: the fused path issues 1 pallas_call per segment scan
+    where the per-round backend issued >= num_segments + jump_sweeps
+    launches (one hook launch per segment + one multi_jump launch per
+    compress sweep)."""
+    import jax.numpy as jnp
+    from repro.core import cc as cc_mod
+    from repro.core import rounds
+    from repro.graphs.device import as_device_graph
+    from repro.kernels.cc_fused.ops import fused_segment_scan
+
+    g = G.rmat(7, 4, seed=5)
+    dg = as_device_graph(g)
+    plan = dg.plan
+    assert plan.num_segments > 1          # a real multi-segment scan
+    segments = rounds.pad_and_segment(dg.edges, plan)
+    counts = rounds.segment_true_counts(plan.num_edges, plan)
+    pi0 = jnp.arange(g.num_nodes, dtype=jnp.int32)
+
+    # fused: the WHOLE segment scan is ONE pallas_call
+    fused_jaxpr = jax.make_jaxpr(
+        lambda p, s, c: fused_segment_scan(p, s, c, interpret=True))(
+            pi0, segments, counts).jaxpr
+    assert _pallas_call_sites(fused_jaxpr) == 1
+
+    # per-round backend: its hook launch is nested under the segment
+    # scan (x num_segments at runtime) and its compress launch under the
+    # sweep loop (x per-segment sweeps at runtime)
+    old_jaxpr = jax.make_jaxpr(
+        lambda e: cc_mod._cc_adaptive_pallas(
+            e, num_nodes=g.num_nodes, num_segments=plan.num_segments,
+            lift_steps=2, interpret=True))(dg.edges).jaxpr
+    assert _launch_lower_bound(old_jaxpr) >= plan.num_segments + 1
+
+    # scan-only sweep count from the fused kernel's counters (verified
+    # bit-compatible with the jnp composition in the sibling test):
+    # every segment compresses at least once, so the per-round backend's
+    # num_segments hook launches + one launch per sweep dominate the
+    # fused path's single launch many times over
+    _, sweeps = fused_segment_scan(pi0, segments, counts, interpret=True)
+    scan_sweeps = int(sweeps.sum())
+    assert scan_sweeps >= plan.num_segments
+    old_scan_launches = plan.num_segments + scan_sweeps
+    assert old_scan_launches >= 2 * plan.num_segments > 2
+    assert _pallas_call_sites(fused_jaxpr) < old_scan_launches
+
+
+def test_fused_kernel_matches_ref_sweep_counts():
+    """The fused kernel's per-segment sweep counters equal the jnp
+    composition's exactly (work billing is bit-compatible)."""
+    import jax.numpy as jnp
+    from repro.core import rounds
+    from repro.graphs.device import as_device_graph
+    from repro.kernels.cc_fused.ops import fused_segment_scan
+    from repro.kernels.cc_fused.ref import ref_segment_scan
+
+    g = G.grid_road(9, seed=4)
+    dg = as_device_graph(g)
+    segments = rounds.pad_and_segment(dg.edges, dg.plan)
+    counts = rounds.segment_true_counts(dg.plan.num_edges, dg.plan)
+    pi0 = jnp.arange(g.num_nodes, dtype=jnp.int32)
+    got_pi, sweeps = fused_segment_scan(pi0, segments, counts,
+                                        interpret=True)
+    ref_pi, ref_work = ref_segment_scan(pi0, segments, counts)
+    np.testing.assert_array_equal(np.asarray(got_pi), np.asarray(ref_pi))
+    assert int(sweeps.sum()) == int(ref_work.jump_sweeps)

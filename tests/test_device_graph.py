@@ -1,0 +1,154 @@
+"""DeviceGraph substrate (DESIGN.md §8): pytree round trips, padding /
+true-count invariants, device-side concat, on-device CSR, sharding, and
+the engines' DeviceGraph entry points."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.batch import connected_components_batched
+from repro.core.cc import connected_components
+from repro.core.unionfind import connected_components_oracle
+from repro.graphs import generators as G
+from repro.graphs.device import DeviceGraph, as_device_graph
+from repro.graphs.format import build_csr
+
+
+def test_from_host_and_shim_agree():
+    g = G.rmat(6, 4, seed=0)
+    dg = DeviceGraph.from_host(g)
+    dg2 = as_device_graph(g.edges, g.num_nodes)
+    assert dg.num_nodes == dg2.num_nodes == g.num_nodes
+    assert dg.true_edges_static == dg2.true_edges_static == g.num_edges
+    assert dg.plan == dg2.plan
+    np.testing.assert_array_equal(np.asarray(dg.edges),
+                                  np.asarray(dg2.edges))
+    # already-a-DeviceGraph passes through untouched
+    assert as_device_graph(dg) is dg
+
+
+def test_pad_pow2_invariants():
+    g = G.grid_road(5, seed=1)
+    dg = DeviceGraph.from_host(g)
+    padded = dg.pad_pow2()
+    e = g.num_edges
+    assert padded.edges.shape[0] == 1 << (e - 1).bit_length()
+    assert padded.true_edges_static == e          # true count preserved
+    arr = np.asarray(padded.edges)
+    np.testing.assert_array_equal(arr[:e], np.asarray(g.edges))
+    assert (arr[e:] == 0).all()                   # (0,0) no-op rows
+    # plan covers the stored rows, heuristic keyed on the TRUE count
+    assert padded.plan.padded_edges >= padded.edges.shape[0]
+    assert padded.plan.num_segments == dg.plan.num_segments
+
+
+def test_concat_sums_true_counts_and_trims_padding():
+    a = DeviceGraph.from_edges([[0, 1], [1, 2]], 6).pad_pow2()
+    b = DeviceGraph.from_edges([[3, 4]], 6)
+    c = DeviceGraph.concat([a, b])
+    assert c.true_edges_static == 3
+    # a's pad rows were trimmed: prefix invariant holds after concat
+    np.testing.assert_array_equal(
+        np.asarray(c.edges)[:3], [[0, 1], [1, 2], [3, 4]])
+    with pytest.raises(ValueError, match="identical num_nodes"):
+        DeviceGraph.concat([a, DeviceGraph.from_edges([[0, 1]], 7)])
+    labels = connected_components(c).labels
+    np.testing.assert_array_equal(
+        np.asarray(labels),
+        connected_components_oracle(np.asarray(c.edges)[:3], 6))
+
+
+def test_pytree_roundtrip_and_jit_boundary():
+    dg = DeviceGraph.from_host(G.star(9)).pad_pow2()
+    leaves, treedef = jax.tree.flatten(dg)
+    back = jax.tree.unflatten(treedef, leaves)
+    assert back.num_nodes == dg.num_nodes
+    assert back.true_edges_static == dg.true_edges_static
+    assert back.plan == dg.plan
+
+    @jax.jit
+    def through(g):
+        return g.edges.sum(), g
+
+    total, out = through(dg)
+    assert int(total) == int(np.asarray(dg.edges).sum())
+    assert out.plan == dg.plan            # static aux survives the jit
+    # traced true count flattens as a leaf
+    traced = DeviceGraph(dg.edges, dg.num_nodes,
+                         jnp.asarray(7, jnp.int32), dg.plan)
+    assert traced.true_edges_static is None
+    assert len(jax.tree.leaves(traced)) == 2
+
+
+def test_csr_matches_host_builder():
+    g = G.rmat(5, 4, seed=2)
+    dg = DeviceGraph.from_host(g)
+    offsets, neighbors = dg.csr()
+    host = build_csr(g.edges, g.num_nodes, symmetrize=False)
+    np.testing.assert_array_equal(np.asarray(offsets), host.indptr)
+    # per-row neighbor MULTISETS agree (sort order within a row is free)
+    off = np.asarray(offsets)
+    nb = np.asarray(neighbors)
+    for v in range(g.num_nodes):
+        np.testing.assert_array_equal(
+            np.sort(nb[off[v]:off[v + 1]]),
+            np.sort(host.indices[host.indptr[v]:host.indptr[v + 1]]))
+    assert dg._csr is not None            # cached after first build
+
+
+def test_trim_and_density_metadata():
+    g = G.disjoint_cliques(3, 4, seed=2)
+    dg = DeviceGraph.from_host(g)
+    assert dg.density == pytest.approx(2.0 * g.num_edges / g.num_nodes)
+    padded = dg.pad_pow2(min_rows=2 * g.num_edges)
+    assert padded.density == dg.density   # padding never inflates features
+    trimmed = padded.trim()
+    assert trimmed.edges.shape[0] == g.num_edges
+    np.testing.assert_array_equal(np.asarray(trimmed.edges),
+                                  np.asarray(g.edges))
+    assert padded.trim().true_edges_static == g.num_edges
+    with pytest.raises(ValueError, match="static true_edges"):
+        DeviceGraph(dg.edges, dg.num_nodes,
+                    jnp.asarray(3, jnp.int32), dg.plan).trim()
+
+
+def test_engines_consume_device_graph():
+    graphs = [G.rmat(5, 3, seed=s) for s in range(3)] + [G.chain(23)]
+    dgs = [DeviceGraph.from_host(g) for g in graphs]
+    # single-graph API
+    for g, dg in zip(graphs, dgs):
+        want = connected_components_oracle(g.edges, g.num_nodes)
+        np.testing.assert_array_equal(
+            np.asarray(connected_components(dg).labels), want)
+    # batched API: device in -> device out, bit-identical to per-graph
+    batched = connected_components_batched(dgs)
+    for g, r in zip(graphs, batched):
+        assert isinstance(r.labels, jax.Array)
+        np.testing.assert_array_equal(
+            np.asarray(r.labels),
+            np.asarray(connected_components(g.edges, g.num_nodes).labels))
+
+
+def test_padded_device_graph_bills_true_edges():
+    g = G.disjoint_cliques(3, 4, seed=0)
+    dg = DeviceGraph.from_host(g)
+    padded = dg.pad_rows(4 * g.num_edges)
+    lean = connected_components(dg)
+    fat = connected_components(padded)
+    np.testing.assert_array_equal(np.asarray(lean.labels),
+                                  np.asarray(fat.labels))
+    # 4x padding must NOT inflate hook billing (padding is free)
+    assert int(fat.work.hook_ops) == int(lean.work.hook_ops)
+
+
+def test_shard_single_device_mesh():
+    from jax.sharding import Mesh
+    g = G.star(13)                        # 12 edges: nothing to pad on 1 dev
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    dg = DeviceGraph.from_host(g).shard(mesh, ("data",))
+    assert dg.edges.shape[0] % 1 == 0
+    from repro.core.distributed import make_distributed_cc
+    fn = make_distributed_cc(dg, mesh, ("data",))
+    np.testing.assert_array_equal(
+        np.asarray(fn(dg)),
+        connected_components_oracle(g.edges, g.num_nodes))

@@ -1,11 +1,18 @@
 """Multi-device behaviour, via subprocesses that force 8 host devices
-(the main test process must keep the real single-device view)."""
+(the main test process must keep the real single-device view).
+
+The distributed-CC oracle test runs in the FAST tier (it is the only
+coverage ``core.distributed`` gets outside ``-m slow``); the heavy
+LM/GNN/elastic cases stay slow-marked."""
 import json
+import os
 import subprocess
 import sys
 import textwrap
 
 import pytest
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def run_sub(body: str) -> str:
@@ -17,12 +24,58 @@ def run_sub(body: str) -> str:
         import jax.numpy as jnp
         import numpy as np
     """) + textwrap.dedent(body)
+    # inherit the parent env: a stripped PATH/env makes XLA's CPU client
+    # stall for minutes on host introspection (observed 470s -> 1.2s for
+    # the same program). XLA_FLAGS is overridden in-code above, before
+    # the child imports jax.
+    env = {**os.environ, "PYTHONPATH": "src"}
+    env.pop("XLA_FLAGS", None)
     out = subprocess.run([sys.executable, "-c", code],
                          capture_output=True, text=True,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-                         cwd="/root/repo", timeout=600)
+                         env=env, cwd=_REPO_ROOT, timeout=600)
     assert out.returncode == 0, out.stderr[-3000:]
     return out.stdout
+
+
+def test_distributed_cc_oracle_8dev_fast_tier():
+    """Fast-tier coverage for ``core.distributed`` on 8 forced host
+    devices: the sharded-DeviceGraph path must equal both the
+    union-find oracle and the single-device engine, including edge
+    counts that do NOT divide into 8 shards (star: 12 edges, cliques:
+    30 — ``DeviceGraph.shard`` pads with (0,0) no-ops)."""
+    out = run_sub("""
+        from repro.core.cc import connected_components
+        from repro.core.distributed import (distributed_connected_components,
+                                            make_distributed_cc)
+        from repro.core.unionfind import connected_components_oracle
+        from repro.graphs.device import DeviceGraph
+        from repro.graphs.generators import (disjoint_cliques, grid_road,
+                                             rmat, star)
+        assert len(jax.devices()) == 8
+        mesh = jax.sharding.Mesh(np.array(jax.devices()), ("data",))
+        # star: 12 edges, cliques: 30 — neither divides into 8 shards
+        # (DeviceGraph.shard pads with (0,0) no-ops); rmat/grid divide.
+        cases = (rmat(6, 4, seed=2), grid_road(7, seed=3), star(13),
+                 disjoint_cliques(3, 5, seed=1))
+        assert any(g.num_edges % 8 for g in cases)
+        for g in cases:
+            dg = DeviceGraph.from_host(g).shard(mesh, ("data",))
+            assert dg.edges.shape[0] % 8 == 0
+            fn = make_distributed_cc(dg, mesh, ("data",))
+            labels = np.asarray(fn(dg))
+            want = connected_components_oracle(g.edges, g.num_nodes)
+            single = np.asarray(
+                connected_components(g.edges, g.num_nodes).labels)
+            np.testing.assert_array_equal(labels, want, err_msg=g.name)
+            np.testing.assert_array_equal(labels, single, err_msg=g.name)
+        # convenience wrapper shards internally
+        g = star(13)
+        np.testing.assert_array_equal(
+            np.asarray(distributed_connected_components(g, mesh)),
+            connected_components_oracle(g.edges, g.num_nodes))
+        print("DIST_FAST_OK")
+    """)
+    assert "DIST_FAST_OK" in out
 
 
 @pytest.mark.slow
