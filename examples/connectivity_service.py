@@ -1,22 +1,23 @@
 """Connectivity-as-a-service: multi-tenant live graphs under mixed
-insert/query traffic (DESIGN.md §7).
+insert/delete/query traffic (DESIGN.md §7, §9).
 
 Two tenants share one registry — a power-law "social" graph (R-MAT)
-and a high-diameter "road" grid. A stream of interleaved edge-insert
-and connectivity-query requests flows through the slot-based service
-engine, which coalesces inserts per tenant and microbatches same-shape
-query batches through shared jit cache entries. The adaptive policy
-routes every insert: the opening bulk load goes through a static
-engine chosen from the graph's density, later deltas are absorbed
-incrementally; queries are answered from the live canonical label
-array — never a recompute.
+and a high-diameter "road" grid. A stream of interleaved edge-insert,
+edge-delete, and connectivity-query requests flows through the
+slot-based service engine, which coalesces mutations per tenant and
+microbatches same-shape query batches through shared jit cache
+entries. The adaptive policy routes every mutation: the opening bulk
+load goes through a static engine chosen from the graph's density,
+later insert deltas are absorbed incrementally, and delete batches
+tombstone + scope-recompute only the components they touched; queries
+are answered from the live canonical label array — never a recompute.
 
     PYTHONPATH=src python examples/connectivity_service.py
 """
 import numpy as np
 
 from repro.connectivity import ConnectivityService, GraphRegistry
-from repro.core.unionfind import connected_components_oracle
+from repro.core.unionfind import DynamicConnectivityOracle
 from repro.graphs.generators import grid_road, rmat
 
 
@@ -26,20 +27,26 @@ def main() -> None:
 
     registry = GraphRegistry()
     svc = ConnectivityService(registry, slots=16)
+    oracles = {}
     for name, g in tenants.items():
         registry.create(name, g.num_nodes)
+        oracles[name] = DynamicConnectivityOracle(g.num_nodes)
 
     n_rounds = 5
     splits = {name: np.array_split(rng.permutation(g.num_edges), n_rounds)
               for name, g in tenants.items()}
-    acc = {name: np.zeros((0, 2), np.int64) for name in tenants}
 
     for rnd in range(n_rounds):
         uids = {}
         for name, g in tenants.items():
             edges = np.asarray(g.edges)[splits[name][rnd]]
             svc.submit_insert(name, edges)
-            acc[name] = np.concatenate([acc[name], edges], axis=0)
+            oracles[name].insert(edges)
+            if rnd:          # churn: retire a few live edges each round
+                live = oracles[name].alive()
+                kills = live[rng.integers(0, live.shape[0], 3)]
+                svc.submit_delete(name, kills)
+                oracles[name].delete(kills)
             pairs = rng.integers(0, g.num_nodes, (32, 2))
             uids[name] = (svc.submit_query(name, "same_component", pairs),
                           pairs)
@@ -48,9 +55,10 @@ def main() -> None:
 
         line = [f"round {rnd}:"]
         for name, g in tenants.items():
-            # every answer must agree with a union-find oracle on the
-            # accumulated edge set (queries see this round's inserts)
-            labels = connected_components_oracle(acc[name], g.num_nodes)
+            # every answer must agree with a from-scratch union-find
+            # oracle over the SURVIVING edges (queries see this
+            # round's inserts and deletes)
+            labels = oracles[name].labels()
             uid, pairs = uids[name]
             want = labels[pairs[:, 0]] == labels[pairs[:, 1]]
             assert np.array_equal(np.asarray(finished[uid].result), want)
@@ -62,16 +70,19 @@ def main() -> None:
 
     print("\nper-tenant registry stats:")
     for name, s in registry.stats().items():
-        print(f"  {name:7s} inserts={s['inserts']} "
-              f"(absorbs={s['absorbs']} rebuilds={s['rebuilds']} "
-              f"merges={s['merges']}) queries={s['queries']} "
-              f"cache_hits={s['cache_hits']} hook_ops={s['hook_ops']}")
+        print(f"  {name:7s} inserts={s['inserts']} deletes={s['deletes']} "
+              f"(absorbs={s['absorbs']} scoped={s['scoped_deletes']} "
+              f"rebuilds={s['rebuilds']} "
+              f"partition_changes={s['partition_changes']}) "
+              f"queries={s['queries']} cache_hits={s['cache_hits']} "
+              f"hook_ops={s['hook_ops']}")
     st = svc.stats
     print(f"service: {st['queries_served']} query requests in "
           f"{st['query_calls']} device calls, "
           f"{st['inserts_absorbed']} inserts in {st['insert_calls']} "
-          f"coalesced absorbs, {st['recomputes_avoided']} label "
-          f"recomputes avoided")
+          f"coalesced absorbs, {st['deletes_absorbed']} deletes in "
+          f"{st['delete_calls']} coalesced tombstone ticks, "
+          f"{st['recomputes_avoided']} label recomputes avoided")
 
     # the component-size histogram, straight off the device
     hist = registry.component_histogram("social")

@@ -12,6 +12,13 @@ the registry's insert path. Two layers:
      edge set (update rate <= ``UPDATE_RATE_ABSORB``) is an
      ``incremental-absorb`` (hook only the delta; Hong et al.) — a
      bulk load falls through to a static method on the accumulated set;
+   * a pending DELETE batch that is small relative to the alive edge
+     set (delete rate <= ``DELETE_RATE_SCOPED``) is a
+     ``tombstone-delete`` (scoped recompute over the affected
+     components only, DESIGN.md §9; the ``-fused`` variant when the
+     autotune cache crowned ``pallas_fused`` for the surviving-graph
+     bucket) — a bulk drop falls through to a static rebuild over the
+     survivors;
    * density < ``MIN_SEGMENT_DENSITY``: s = 2|E|/|V| rounds to <= 1
      segment, so segmentation degenerates — run ``atomic_hook``
      (one segment, no scan overhead);
@@ -48,9 +55,17 @@ import numpy as np
 STATIC_METHODS = ("adaptive", "atomic_hook", "labelprop")
 AUTOTUNE_METHODS = STATIC_METHODS + ("pallas_fused",)
 INCREMENTAL_ABSORB = "incremental-absorb"
+# delete-path routes (DESIGN.md §9): tombstone + scoped recompute over
+# the affected components only — the fused variant runs the scoped scan
+# through the cc_fused kernel (one launch); a bulk delete falls through
+# to a static rebuild over the surviving log instead
+DYNAMIC_DELETE = "tombstone-delete"
+DYNAMIC_DELETE_FUSED = "tombstone-delete-fused"
+DELETE_METHODS = (DYNAMIC_DELETE, DYNAMIC_DELETE_FUSED)
 
 # heuristic thresholds (see module docstring)
 UPDATE_RATE_ABSORB = 0.5       # delta/total above this is a bulk load
+DELETE_RATE_SCOPED = 0.5       # deletes/alive above this is a bulk drop
 MIN_SEGMENT_DENSITY = 1.5      # below: s = round(2E/V) <= 1 segment
 LABELPROP_DENSITY_FRAC = 0.25  # density >= frac*V: near-clique regime
 
@@ -63,11 +78,18 @@ class GraphFeatures:
 
     num_nodes: int
     num_edges: int              # edges already absorbed (static: total)
-    delta_edges: int | None = None   # pending insert batch (None: static)
+    delta_edges: int | None = None    # pending insert batch (None: static)
+    delta_deletes: int | None = None  # pending delete batch (None: static)
 
     @property
     def total_edges(self) -> int:
         return self.num_edges + (self.delta_edges or 0)
+
+    @property
+    def remaining_edges(self) -> int:
+        """Post-delete edge-count upper bound (a delete row retires at
+        most every copy of one edge; absent rows retire nothing)."""
+        return max(self.num_edges - (self.delta_deletes or 0), 0)
 
     @property
     def density(self) -> float:
@@ -81,19 +103,38 @@ class GraphFeatures:
             return 0.0
         return self.delta_edges / max(self.total_edges, 1)
 
+    @property
+    def delete_rate(self) -> float:
+        """|delete batch| / |E alive| — the delete-side twin of
+        ``update_rate``: a batch small relative to the surviving set is
+        worth scoping, a bulk drop is worth a static rebuild."""
+        if self.delta_deletes is None:
+            return 0.0
+        return self.delta_deletes / max(self.num_edges, 1)
+
 
 def extract_features(num_nodes: int, num_edges: int,
-                     delta_edges: int | None = None) -> GraphFeatures:
+                     delta_edges: int | None = None,
+                     delta_deletes: int | None = None) -> GraphFeatures:
     return GraphFeatures(num_nodes=int(num_nodes),
                          num_edges=int(num_edges),
                          delta_edges=None if delta_edges is None
-                         else int(delta_edges))
+                         else int(delta_edges),
+                         delta_deletes=None if delta_deletes is None
+                         else int(delta_deletes))
 
 
 
 
 def heuristic_method(f: GraphFeatures) -> str:
     """The paper's segmentation heuristic as a method choice."""
+    if f.delta_deletes is not None:
+        if f.num_edges > 0 and f.delete_rate <= DELETE_RATE_SCOPED:
+            return DYNAMIC_DELETE
+        # bulk drop: a static engine over the surviving edge set beats
+        # scoping (most components are affected anyway)
+        return heuristic_method(GraphFeatures(f.num_nodes,
+                                              f.remaining_edges))
     if (f.delta_edges is not None and f.num_edges > 0
             and f.update_rate <= UPDATE_RATE_ABSORB):
         return INCREMENTAL_ABSORB
@@ -246,31 +287,47 @@ def default_cache() -> AutotuneCache:
 
 def select_method(num_nodes: int, num_edges: int, *,
                   delta_edges: int | None = None,
+                  delta_deletes: int | None = None,
                   cache: AutotuneCache | None = None) -> str:
     """Pick the execution method from graph features.
 
     Static callers (``connected_components(method="auto")``) pass sizes
     only and get a method from ``STATIC_METHODS``; the registry's
     insert path also passes ``delta_edges`` and may get
-    ``"incremental-absorb"`` back. Autotuned winners override the
-    heuristic for the static choice.
+    ``"incremental-absorb"`` back; its delete path passes
+    ``delta_deletes`` and may get a ``DELETE_METHODS`` route back — the
+    fused variant when the autotune cache's measured winner for the
+    surviving-graph bucket is ``pallas_fused`` (measured truth decides
+    which kernel backend runs the scoped scan, same as it decides the
+    static engine). Autotuned winners override the heuristic for the
+    static choice.
     """
-    f = extract_features(num_nodes, num_edges, delta_edges)
+    f = extract_features(num_nodes, num_edges, delta_edges, delta_deletes)
     choice = heuristic_method(f)
     if choice == INCREMENTAL_ABSORB:
         return choice
     cache = default_cache() if cache is None else cache
-    hit = cache.lookup(f.num_nodes, f.total_edges)
+    if choice == DYNAMIC_DELETE:
+        hit = cache.lookup(f.num_nodes, max(f.remaining_edges, 1))
+        return DYNAMIC_DELETE_FUSED if hit == "pallas_fused" else choice
+    lookup_edges = f.total_edges if f.delta_deletes is None \
+        else max(f.remaining_edges, 1)
+    hit = cache.lookup(f.num_nodes, lookup_edges)
     return hit if hit is not None else choice
 
 
 def select_for(num_nodes: int, num_edges: int, delta=None, *,
+               delete: bool = False,
                cache: AutotuneCache | None = None) -> str:
-    """The registry's insert-path selection over a pending-insert
-    ``DeviceGraph``: the update-rate feature comes from the delta's
-    static pytree metadata (true edge count) — no device sync, no host
-    round trip of edge data."""
+    """The registry's mutation-path selection over a pending
+    ``DeviceGraph`` delta: the update/delete-rate feature comes from
+    the delta's static pytree metadata (true edge count) — no device
+    sync, no host round trip of edge data. ``delete=True`` routes the
+    batch through the delete-side heuristic (scoped tombstone delete
+    vs full static rebuild over the survivors)."""
+    size = None if delta is None else delta.num_edges
     return select_method(
         num_nodes, num_edges,
-        delta_edges=None if delta is None else delta.num_edges,
+        delta_edges=None if delete else size,
+        delta_deletes=size if delete else None,
         cache=cache)

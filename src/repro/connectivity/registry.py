@@ -1,27 +1,31 @@
 """Multi-tenant graph registry: N named live graphs, versioned labels,
-query-result caching with merge-precise invalidation.
+query-result caching with partition-precise invalidation.
 
 Each tenant is a named vertex set with a live canonical label array
-backed by ``IncrementalCC``. Inserts are routed by the adaptive policy
+backed by the fully-dynamic ``DynamicCC`` (labels + device-resident
+tombstone edge log). Inserts are routed by the adaptive policy
 (``policy.select_method``): a small delta is absorbed incrementally
 (hook only the new edges), a bulk load is rebuilt through the chosen
-static engine and adopted. Queries run through the on-device kernels
-(``queries``), with query batches padded to the power-of-two buckets of
-``repro.core.batch`` so same-shape batches share one jit cache entry
-across tenants.
+static engine and adopted. Deletes are routed by the delete-rate twin
+(DESIGN.md §9): a small batch tombstones + scoped-recomputes only the
+affected components, a bulk drop rebuilds the survivors statically.
+Queries run through the on-device kernels (``queries``), with query
+batches padded to the power-of-two buckets of ``repro.core.batch`` so
+same-shape batches share one jit cache entry across tenants.
 
-**Version / invalidation protocol** (DESIGN.md §7): a tenant's label
-*version* is ``IncrementalCC``'s device-resident version counter — it
-ticks only when an insert batch actually merges components (the absorb
-jit detects ``any(labels != old)`` and ticks IN the same device
-program; the insert path never syncs it to the host). Cached query
-results are stamped with the version they were computed at and served
-only while the version is unchanged — validation happens lazily at
-query time (one scalar sync on a path that syncs anyway to return the
-answer), so an insert that lands entirely inside existing components
-keeps every cached answer warm and stale answers are impossible by
-construction: connectivity under insert-only workloads changes exactly
-when labels change. Superseded entries age out via FIFO eviction.
+**Version / invalidation protocol** (DESIGN.md §7, §9): a tenant's
+label *version* is ``DynamicCC``'s device-resident version counter —
+it ticks only when a mutation actually changes the partition: the
+absorb jit detects a MERGE, the delete jit detects a SPLIT, both via
+``any(labels != old)`` IN the same device program (neither path syncs
+it to the host). Cached query results are stamped with the version
+they were computed at and served only while the version is unchanged —
+validation happens lazily at query time (one scalar sync on a path
+that syncs anyway to return the answer), so an insert landing inside
+existing components or a non-bridge delete keeps every cached answer
+warm, and stale answers are impossible by construction: connectivity
+changes exactly when canonical labels change. Superseded entries age
+out via FIFO eviction.
 
 **DeviceGraph substrate** (DESIGN.md §8): insert batches are
 ``DeviceGraph``s (host arrays go through the ``from_edges`` shim with
@@ -40,7 +44,7 @@ import numpy as np
 
 from repro.connectivity import policy, queries
 from repro.core.batch import pad_rows_pow2
-from repro.core.incremental import IncrementalCC
+from repro.core.incremental import DynamicCC
 from repro.graphs.device import DeviceGraph, validate_edge_bounds
 
 _MAX_CACHED_RESULTS = 1024      # per tenant; FIFO-evicted
@@ -48,27 +52,29 @@ _MAX_CACHED_RESULTS = 1024      # per tenant; FIFO-evicted
 
 @dataclasses.dataclass
 class TenantStats:
-    # merge counts are NOT tracked here: the device-resident version
-    # counter ticks exactly on merging inserts, so registry.stats()
-    # reports it as "merges" (a host field would force a sync per insert)
+    # partition-change counts are NOT tracked here: the device-resident
+    # version counter ticks exactly on merging inserts AND splitting
+    # deletes, so registry.stats() reports it as "partition_changes" (a
+    # host field would force a sync per mutation)
     inserts: int = 0
+    deletes: int = 0            # delete requests
     absorbs: int = 0            # inserts routed through the incremental path
-    rebuilds: int = 0           # inserts routed through a static engine
+    scoped_deletes: int = 0     # deletes routed through the scoped recompute
+    rebuilds: int = 0           # mutations routed through a static engine
     queries: int = 0
     cache_hits: int = 0
 
 
 class TenantGraph:
-    """One live graph: IncrementalCC state + accumulated DeviceGraph
-    edge log."""
+    """One live graph: fully-dynamic ``DynamicCC`` state (labels +
+    device-resident tombstone edge log)."""
 
     def __init__(self, name: str, num_nodes: int, *, lift_steps: int = 2,
                  policy_cache: policy.AutotuneCache | None = None):
         self.name = name
         self.num_nodes = num_nodes
-        self.inc = IncrementalCC(num_nodes, lift_steps=lift_steps)
+        self.inc = DynamicCC(num_nodes, lift_steps=lift_steps)
         self.policy_cache = policy_cache
-        self._edge_log: list[DeviceGraph] = []  # for the bulk-rebuild path
         self.stats = TenantStats()
         self.last_method = None                  # last policy decision
 
@@ -88,22 +94,27 @@ class TenantGraph:
 
     @property
     def num_edges(self) -> int:
+        """Inserted-edge total (host-known, no sync) — the policy's
+        size feature. Under churn this is an upper bound on the alive
+        count (the exact count lives on device; syncing it per
+        mutation would defeat the transfer-free tick)."""
         return self.inc.num_edges_inserted
 
     def graph(self) -> DeviceGraph:
-        """The accumulated edge set as ONE DeviceGraph (device-side
-        concat of the insert log — no host ``np.concatenate``)."""
-        if not self._edge_log:
+        """The SURVIVING edge set as ONE compacted DeviceGraph (the
+        tombstone log's alive view — no host ``np.concatenate``)."""
+        if self.inc.log.rows == 0:
             return DeviceGraph.from_edges(
                 np.zeros((0, 2), np.int32), self.num_nodes,
                 name=self.name)
-        return DeviceGraph.concat(self._edge_log, name=self.name)
+        return self.inc.graph()
 
     def edges(self) -> np.ndarray:
-        """Host view of the accumulated edges (syncs; introspection)."""
+        """Host view of the surviving edges (syncs; introspection)."""
         g = self.graph()
         t = g.true_edges_static
-        return np.asarray(g.edges)[: g.edges.shape[0] if t is None else t]
+        return np.asarray(g.edges)[: int(g.true_edges) if t is None
+                                   else t]
 
     def _coerce(self, new_edges) -> DeviceGraph:
         """Host arrays are validated + device_put; DeviceGraphs pass
@@ -128,21 +139,48 @@ class TenantGraph:
         method = policy.select_for(self.num_nodes, self.num_edges,
                                    delta, cache=self.policy_cache)
         self.last_method = method
-        if delta.num_edges:
-            self._edge_log.append(delta)
         if method == policy.INCREMENTAL_ABSORB:
-            self.inc.insert_graph(delta)
+            self.inc.insert_graph(delta)     # logs + absorbs
             self.stats.absorbs += 1
         else:
             # bulk load: the accumulated set is mostly this batch — the
             # chosen static engine (segmentation and all) beats hooking
             # a huge unsegmented delta through the absorb loop
             from repro.core.cc import connected_components
+            self.inc.stage(delta)            # log only; adopt accounts
             res = connected_components(self.graph(), method=method)
             self.inc.adopt(res.labels, work=res.work,
                            num_edges=delta.num_edges)
             self.stats.rebuilds += 1
         self.stats.inserts += 1
+
+    def delete(self, dels) -> None:
+        """Delete an edge batch (DeviceGraph or host array; each row
+        retires every alive copy of that undirected edge, absent rows
+        are no-ops). Routed by the delete-rate policy: a small batch
+        tombstones + scoped-recomputes in ONE device program
+        (``DynamicCC.delete_graph`` — the version ticks iff a
+        component actually split, mirroring the insert path's merge
+        tick); a bulk drop tombstones and rebuilds the survivors
+        through a static engine. Never syncs."""
+        batch = self._coerce(dels)
+        method = policy.select_for(self.num_nodes, self.num_edges,
+                                   batch, delete=True,
+                                   cache=self.policy_cache)
+        self.last_method = method
+        if method in policy.DELETE_METHODS:
+            self.inc.scan_method = \
+                "pallas_fused" if method == policy.DYNAMIC_DELETE_FUSED \
+                else "jnp"
+            self.inc.delete_graph(batch)
+            self.stats.scoped_deletes += 1
+        else:
+            from repro.core.cc import connected_components
+            self.inc.tombstone_graph(batch)
+            res = connected_components(self.graph(), method=method)
+            self.inc.adopt(res.labels, work=res.work)
+            self.stats.rebuilds += 1
+        self.stats.deletes += 1
 
 
 class GraphRegistry:
@@ -199,6 +237,19 @@ class GraphRegistry:
         host-side merge check is needed here."""
         t = self.get(name)
         t.insert(edges)
+        return t.version_device
+
+    def delete(self, name: str, edges):
+        """Delete an edge batch (DeviceGraph or host array); returns
+        the tenant's label version as a DEVICE scalar (the delete path
+        never syncs). Cached query results are invalidated ONLY when
+        the batch actually SPLIT a component: the version tick happens
+        on device inside the delete program (a non-bridge deletion
+        reproduces the identical canonical partition), so the same
+        lazy version-stamped validation that keeps insert-path answers
+        stale-free extends across splits unchanged."""
+        t = self.get(name)
+        t.delete(edges)
         return t.version_device
 
     # -- queries (cached, on-device kernels) -------------------------------
@@ -266,11 +317,13 @@ class GraphRegistry:
         for name, t in self._tenants.items():
             version = t.version            # introspection path: sync OK
             out[name] = {**dataclasses.asdict(t.stats),
-                         # the version ticks exactly on merging inserts,
-                         # so it IS the merge count (tracked on device)
-                         "merges": version,
+                         # the version ticks exactly on merging inserts
+                         # and splitting deletes, so it IS the
+                         # partition-change count (tracked on device)
+                         "partition_changes": version,
                          "version": version,
                          "num_nodes": t.num_nodes,
                          "num_edges": t.num_edges,
+                         "num_edges_deleted": t.inc.num_edges_deleted,
                          "hook_ops": t.inc.work["hook_ops"]}
         return out

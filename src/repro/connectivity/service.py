@@ -14,16 +14,20 @@ Per tick:
     (DESIGN.md §8): the steady-state tick performs zero host transfers
     — no ``np.concatenate``, no host-side merge check — which the
     transfer-guard test pins down;
+  * **deletes coalesce per tenant** the same way (DESIGN.md §9) — one
+    tombstone + scoped-recompute program per tenant per tick, so k
+    simultaneous splits ride one stacked scan; the steady-state
+    tombstone tick is transfer-free under the same guard;
   * **queries microbatch per (tenant, kind)** — all admitted
     ``same_component`` pairs (resp. ``component_size`` vertices) for a
     tenant concatenate into one batch, padded to the power-of-two
     buckets of ``repro.core.batch``, so every same-shape batch across
     all tenants of one |V| routes through one jit cache entry.
 
-Consistency model: within a tick, inserts apply before queries, so a
-query observes every insert admitted in its tick (and all earlier
-ticks) — monotone read-fresh semantics. Connectivity under insert-only
-workloads is monotone, so answers never regress.
+Consistency model: within a tick, inserts apply first, then deletes,
+then queries — a query observes every mutation admitted in its tick
+(and all earlier ticks), and a delete admitted alongside an insert of
+the same edge wins (read-fresh, delete-after-insert semantics).
 
 Every query is served from the live label array — zero label
 recomputes. ``stats["recomputes_avoided"]`` counts the full CC runs a
@@ -44,7 +48,8 @@ from repro.graphs.device import DeviceGraph, validate_edge_bounds
 
 QUERY_KINDS = ("same_component", "component_size", "count_components",
                "component_histogram")
-KINDS = ("insert",) + QUERY_KINDS
+MUTATION_KINDS = ("insert", "delete")
+KINDS = MUTATION_KINDS + QUERY_KINDS
 
 
 @dataclasses.dataclass
@@ -52,8 +57,8 @@ class Request:
     uid: int
     tenant: str
     kind: str                       # one of KINDS
-    # np array for query kinds; a DeviceGraph for inserts (device-put
-    # at admission so the tick stays transfer-free)
+    # np array for query kinds; a DeviceGraph for inserts/deletes
+    # (device-put at admission so the tick stays transfer-free)
     payload: Optional[Any] = None
     result: Any = None
     done: bool = False
@@ -73,6 +78,8 @@ class ConnectivityService:
             "ticks": 0,
             "inserts_absorbed": 0,        # insert requests completed
             "insert_calls": 0,            # coalesced device-side inserts
+            "deletes_absorbed": 0,        # delete requests completed
+            "delete_calls": 0,            # coalesced device-side deletes
             "queries_served": 0,          # query requests completed
             "query_calls": 0,             # microbatched kernel dispatches
             "pairs_answered": 0,
@@ -85,8 +92,8 @@ class ConnectivityService:
     def submit(self, tenant: str, kind: str, payload=None) -> int:
         if kind not in KINDS:
             raise ValueError(f"unknown kind {kind!r}; choose from {KINDS}")
-        if kind == "insert":
-            payload = self._ingest_insert(tenant, payload)
+        if kind in MUTATION_KINDS:
+            payload = self._ingest_edges(tenant, kind, payload)
         elif kind in ("same_component", "component_size"):
             if payload is None:
                 raise ValueError(f"kind {kind!r} requires a payload")
@@ -99,12 +106,14 @@ class ConnectivityService:
         self.queue.append(Request(self._uid, tenant, kind, payload))
         return self._uid
 
-    def _ingest_insert(self, tenant: str, payload) -> DeviceGraph:
-        """Admission-time ingress: validate on host (while the data IS
-        host data), then explicit device_put — the tick itself then
-        touches device arrays only. DeviceGraph payloads pass through."""
+    def _ingest_edges(self, tenant: str, kind: str, payload
+                      ) -> DeviceGraph:
+        """Admission-time ingress (inserts AND deletes): validate on
+        host (while the data IS host data), then explicit device_put —
+        the tick itself then touches device arrays only. DeviceGraph
+        payloads pass through."""
         if payload is None:
-            raise ValueError("kind 'insert' requires a payload")
+            raise ValueError(f"kind {kind!r} requires a payload")
         if isinstance(payload, DeviceGraph):
             return payload
         num_nodes = self.registry.get(tenant).num_nodes \
@@ -131,6 +140,9 @@ class ConnectivityService:
     def submit_insert(self, tenant: str, edges) -> int:
         return self.submit(tenant, "insert", edges)
 
+    def submit_delete(self, tenant: str, edges) -> int:
+        return self.submit(tenant, "delete", edges)
+
     def submit_query(self, tenant: str, kind: str, payload=None) -> int:
         if kind not in QUERY_KINDS:
             raise ValueError(f"unknown query kind {kind!r}; "
@@ -153,35 +165,38 @@ class ConnectivityService:
         validate_edge_bounds(np.asarray(payload.edges), num_nodes)
         return DeviceGraph.from_edges(payload.edges, num_nodes)
 
-    def _run_inserts(self, inserts: list[Request]) -> None:
+    def _run_mutations(self, kind: str, reqs_in: list[Request]) -> None:
+        """Coalesced mutation phase for one kind ('insert'/'delete')."""
         by_tenant: dict[str, list[Request]] = {}
-        for r in inserts:
+        for r in reqs_in:
             by_tenant.setdefault(r.tenant, []).append(r)
+        registry_call = getattr(self.registry, kind)
         for tenant, reqs in by_tenant.items():
             try:
-                # device-side coalescing: one concat + ONE absorb per
-                # tenant per tick, zero host transfers. Only payloads
-                # submitted before the tenant existed (|V|=0 marker)
-                # re-bind to its |V| — with the bounds check they
-                # skipped at admission; a real |V| mismatch must fall
-                # through to the registry's error, not be papered over.
+                # device-side coalescing: one concat + ONE
+                # absorb/tombstone per tenant per tick, zero host
+                # transfers. Only payloads submitted before the tenant
+                # existed (|V|=0 marker) re-bind to its |V| — with the
+                # bounds check they skipped at admission; a real |V|
+                # mismatch must fall through to the registry's error,
+                # not be papered over.
                 n = self.registry.get(tenant).num_nodes
                 batch = DeviceGraph.concat(
                     [self._rebind(r.payload, n) if
                      r.payload.num_nodes == 0 and n != 0 else r.payload
                      for r in reqs])
-                version = self.registry.insert(tenant, batch)
+                version = registry_call(tenant, batch)
             except Exception as err:     # fail the group, not the tick
                 for r in reqs:
                     self._fail(r, err)
                 continue
-            self.stats["insert_calls"] += 1
+            self.stats[f"{kind}_calls"] += 1
             for r in reqs:
                 # the version rides as a device scalar; int(...) it to
                 # observe (the tick itself must not sync)
                 r.result = version
                 r.done = True
-                self.stats["inserts_absorbed"] += 1
+                self.stats[f"{kind}s_absorbed"] += 1
 
     def _run_query_group(self, tenant: str, kind: str,
                          reqs: list[Request]) -> None:
@@ -211,18 +226,21 @@ class ConnectivityService:
             self.stats["recomputes_avoided"] += 1
 
     def step(self) -> list[Request]:
-        """One tick: admit up to ``slots`` requests, coalesce inserts,
-        microbatch queries, retire. Returns the retired requests."""
+        """One tick: admit up to ``slots`` requests, coalesce inserts
+        then deletes, microbatch queries, retire. Returns the retired
+        requests."""
         admitted = self.queue[: self.slots]
         if not admitted:
             return []
         self.queue = self.queue[self.slots:]
         self.stats["ticks"] += 1
 
-        self._run_inserts([r for r in admitted if r.kind == "insert"])
+        for kind in MUTATION_KINDS:       # inserts apply before deletes
+            self._run_mutations(kind,
+                                [r for r in admitted if r.kind == kind])
         groups: dict[tuple[str, str], list[Request]] = {}
         for r in admitted:
-            if r.kind != "insert":
+            if r.kind not in MUTATION_KINDS:
                 groups.setdefault((r.tenant, r.kind), []).append(r)
         for (tenant, kind), reqs in groups.items():
             self._run_query_group(tenant, kind, reqs)

@@ -1,5 +1,8 @@
 """Incremental Connected Components: absorb edge insertions without a
-full recompute (DESIGN.md §6; Hong et al., arXiv 2008.11839).
+full recompute (DESIGN.md §6; Hong et al., arXiv 2008.11839) — and,
+via ``DynamicCC`` (DESIGN.md §9), edge DELETIONS through a
+device-resident tombstone log with scoped recompute and split-aware
+version ticks.
 
 ``IncrementalCC`` keeps the canonical label array as persistent state.
 An insertion batch is absorbed by running the shared cleanup loop
@@ -227,3 +230,208 @@ class IncrementalCC:
         ``np.unique`` round trip (``connectivity.queries``)."""
         from repro.connectivity.queries import count_components
         return int(count_components(self._pi))
+
+
+# ---------------------------------------------------------------------------
+# Fully-dynamic connectivity: + edge deletions (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("lift_steps", "num_segments",
+                                             "scan_method", "interpret"))
+def _delete_jit(edges, alive, pi, dels, d_true, version, deleted, *,
+                lift_steps, num_segments, scan_method, interpret):
+    """One delete tick, ONE device program: tombstone the delete batch
+    against the log, detect the affected components, and — only if the
+    batch actually retired an edge — run the scoped recompute over
+    their surviving edges (``rounds.scoped_rounds``). The version ticks
+    iff labels changed, which under a pure-delete batch means an
+    ACTUAL SPLIT: a non-bridge deletion reproduces the same canonical
+    partition bit-for-bit, so cached query answers stay warm. This is
+    the deletion-side mirror of the absorb jit's merge tick — no host
+    round trip anywhere on the path."""
+    from repro.graphs.device import tombstone_mask
+    from repro.core.segmentation import plan_segmentation
+
+    num_nodes = pi.shape[0]
+    alive2, killed = tombstone_mask(edges, alive, dels, d_true)
+    deleted = deleted + jnp.sum(killed).astype(deleted.dtype)
+    plan = plan_segmentation(edges.shape[0], num_nodes, num_segments)
+
+    def recompute(_):
+        # components touched by a retired edge: both endpoints of an
+        # alive edge share a label, so marking pi[u] covers pi[v]
+        aff = jnp.zeros((num_nodes,), jnp.bool_) \
+            .at[pi[edges[:, 0]]].max(killed)
+        in_aff = aff[pi]                       # vertex in affected comp?
+        edge_aff = alive2 & in_aff[edges[:, 0]]
+        n_aff_nodes = jnp.sum(in_aff).astype(jnp.int32)
+        if scan_method == "pallas_fused":
+            ops = rounds.fused_round_ops(lift_steps, interpret=interpret,
+                                         bill_nodes=n_aff_nodes)
+        else:
+            ops = rounds.jnp_round_ops(lift_steps,
+                                       bill_nodes=n_aff_nodes)
+        return rounds.scoped_rounds(pi, edges, edge_aff, in_aff, plan,
+                                    ops, WorkCounters.zeros())
+
+    def no_op(_):
+        # nothing retired (unknown edges / double deletes): zero hook
+        # rounds, zero sweeps — the delete-side analogue of the
+        # absorb's already-connected short circuit
+        return pi, WorkCounters.zeros()
+
+    pi1, work = jax.lax.cond(jnp.any(killed), recompute, no_op, None)
+    work = work.add(sync_rounds=1)             # one jit call per tick
+    version = version + jnp.any(pi1 != pi).astype(version.dtype)
+    return pi1, alive2, version, deleted, work
+
+
+class DynamicCC(IncrementalCC):
+    """Fully-dynamic connectivity: streaming edge insertions AND
+    deletions over one device-resident state (DESIGN.md §9; Hong,
+    Dhulipala & Shun, arXiv 2008.11839 motivate why insert-only
+    structures break under churn).
+
+    On top of ``IncrementalCC`` this keeps the accumulated edge set in
+    a ``graphs.device.EdgeLog`` (tombstone mask + pow2 capacity
+    buckets). Inserts append to the log and absorb as before; a delete
+    batch tombstones matching log rows and falls back to a *scoped
+    recompute* — re-running the Fig. 4 scan over only the components a
+    retired edge touched — instead of a full recompute. A deletion
+    that is not a bridge reproduces the identical canonical partition,
+    so the label version (query-cache invalidation) ticks only on
+    ACTUAL splits, exactly mirroring the insert path's merge tick.
+
+    Deletion semantics: a delete of undirected edge {u, v} is
+    orientation-blind and retires EVERY alive copy in the (multiset)
+    log; deleting an absent edge is a zero-cost no-op. After any
+    interleaved insert/delete script the labels are bit-identical to a
+    from-scratch run over the surviving edge set (oracle-tested).
+
+    ``scan_method`` picks the scoped-recompute backend: ``"jnp"``
+    (default) or ``"pallas_fused"`` (one kernel launch per scoped
+    scan) — the policy layer routes this via the delete-rate feature
+    (``connectivity.policy.select_for``).
+
+    >>> dyn = DynamicCC(num_nodes=4)
+    >>> dyn.insert([[0, 1], [1, 2]])
+    >>> dyn.delete([[1, 2]])
+    >>> dyn.connected(0, 1), dyn.connected(1, 2)
+    (True, False)
+    """
+
+    def __init__(self, num_nodes: int, *, lift_steps: int = 2,
+                 scan_method: str = "jnp"):
+        super().__init__(num_nodes, lift_steps=lift_steps)
+        from repro.graphs.device import EdgeLog
+        if scan_method not in ("jnp", "pallas_fused"):
+            raise ValueError(f"unknown scan_method {scan_method!r}; "
+                             "choose from ('jnp', 'pallas_fused')")
+        self.scan_method = scan_method
+        self.log = EdgeLog(num_nodes)
+        self.delete_batches = 0
+        # device-resident retired-edge count: how many log rows a
+        # delete batch matched is only known on device, and the
+        # steady-state delete tick must not sync to find out
+        self._deleted = jnp.zeros((), jnp.int32)
+
+    # -- inserts (log-keeping overrides) -----------------------------------
+
+    def insert(self, new_edges) -> jnp.ndarray:
+        """Absorb a host-array insert batch (validated, device_put,
+        logged)."""
+        from repro.graphs.device import DeviceGraph, validate_edge_bounds
+        arr = np.asarray(new_edges, np.int32).reshape(-1, 2)
+        validate_edge_bounds(arr, self.num_nodes)
+        return self.insert_graph(
+            DeviceGraph.from_edges(arr, self.num_nodes))
+
+    def insert_graph(self, delta) -> jnp.ndarray:
+        """Absorb a DeviceGraph insert batch; the delta's true rows are
+        appended to the device edge log first (static true count
+        required — same contract as ``DeviceGraph.concat``)."""
+        self.log.append(delta)          # validates |V| + static count
+        return super().insert_graph(delta)
+
+    def stage(self, delta) -> None:
+        """Append a delta to the log WITHOUT absorbing — the registry's
+        bulk-rebuild route, where a static engine recomputes over the
+        whole log view and ``adopt``s the result (which does the
+        version/work accounting)."""
+        self.log.append(delta)
+
+    # -- deletes ------------------------------------------------------------
+
+    def delete(self, edges) -> jnp.ndarray:
+        """Delete a host-array edge batch; returns the new labels."""
+        from repro.graphs.device import DeviceGraph, validate_edge_bounds
+        arr = np.asarray(edges, np.int32).reshape(-1, 2)
+        validate_edge_bounds(arr, self.num_nodes)
+        return self.delete_graph(
+            DeviceGraph.from_edges(arr, self.num_nodes))
+
+    def delete_graph(self, dels) -> jnp.ndarray:
+        """Delete a device-resident ``DeviceGraph`` batch — the
+        registry/service steady-state path. Tombstoning, bridge
+        detection (did the partition change?), the scoped recompute,
+        and the split-version tick all run in ONE device program with
+        zero host transfers (validated under
+        ``jax.transfer_guard("disallow")``)."""
+        if dels.num_nodes != self.num_nodes:
+            raise ValueError(f"dels num_nodes {dels.num_nodes} != "
+                             f"{self.num_nodes}")
+        self.delete_batches += 1
+        if self.num_nodes == 0 or dels.edges.shape[0] == 0 \
+                or self.log.rows == 0:
+            return self._pi
+        from repro.core.segmentation import adaptive_num_segments
+        from repro.kernels import default_interpret
+        padded = dels.pad_pow2(min_rows=_MIN_BATCH_PAD)
+        (self._pi, self.log.alive, self._version, self._deleted,
+         batch_work) = _delete_jit(
+            self.log.edges, self.log.alive, self._pi, padded.edges,
+            padded.true_edges_device(), self._version, self._deleted,
+            lift_steps=self.lift_steps,
+            num_segments=adaptive_num_segments(self.log.capacity,
+                                               self.num_nodes),
+            scan_method=self.scan_method,
+            interpret=default_interpret())
+        self._queue_work(batch_work)
+        return self._pi
+
+    def tombstone_graph(self, dels) -> None:
+        """Tombstone a delete batch WITHOUT the scoped recompute — the
+        bulk-delete route, where the policy decided a full static
+        rebuild over the remaining log beats scoping (the caller
+        rebuilds and ``adopt``s; adopt's device-side diff supplies the
+        split tick)."""
+        if dels.num_nodes != self.num_nodes:
+            raise ValueError(f"dels num_nodes {dels.num_nodes} != "
+                             f"{self.num_nodes}")
+        self.delete_batches += 1
+        if self.num_nodes == 0 or dels.edges.shape[0] == 0 \
+                or self.log.rows == 0:
+            return
+        padded = dels.pad_pow2(min_rows=_MIN_BATCH_PAD)
+        killed = self.log.delete(padded.edges,
+                                 padded.true_edges_device())
+        self._deleted = self._deleted + \
+            jnp.sum(killed).astype(self._deleted.dtype)
+
+    # -- views / introspection ----------------------------------------------
+
+    def graph(self):
+        """The surviving edge set as a compacted DeviceGraph (traced
+        true count) — what the bulk-rebuild path feeds to the static
+        engines."""
+        return self.log.view()
+
+    @property
+    def num_edges_deleted(self) -> int:
+        """Retired-edge count as a host int (syncs; introspection)."""
+        return int(self._deleted)
+
+    @property
+    def num_edges_alive(self) -> int:
+        """Surviving-edge count (syncs; introspection)."""
+        return self.log.num_alive

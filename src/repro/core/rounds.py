@@ -334,6 +334,44 @@ def cleanup_rounds(pi: jnp.ndarray, edges: jnp.ndarray, ops: RoundOps,
     return pi, work
 
 
+def scoped_rounds(pi: jnp.ndarray, edges: jnp.ndarray,
+                  edge_mask: jnp.ndarray, vertex_mask: jnp.ndarray,
+                  plan: SegmentationPlan, ops: RoundOps,
+                  work: WorkCounters,
+                  max_rounds: int = MAX_ROUNDS,
+                  ) -> tuple[jnp.ndarray, WorkCounters]:
+    """Scoped recompute (DESIGN.md §9): re-derive labels for ONLY the
+    vertices under ``vertex_mask`` from the edges under ``edge_mask``,
+    leaving every other label untouched — the deletion fallback of the
+    fully-dynamic engine, where ``vertex_mask`` marks the components a
+    tombstoned edge may have split and ``edge_mask`` their surviving
+    edges.
+
+    The masked edges are compacted to a (0, 0)-padded prefix on device
+    (one stable sort — same invariant restoration as
+    ``graphs.device.compact_alive``), then run through the ordinary
+    Fig. 4 pipeline: segment scan over ``plan`` + trailing cleanup.
+    Affected vertices restart as self-roots; unaffected vertices keep
+    their (canonical) labels, which hook can neither read nor write
+    because every scoped edge joins two affected vertices — k
+    simultaneous splits ride ONE stacked scan. Billing is scoped too:
+    ``hook_ops`` covers masked edges only (traced count), and callers
+    pass ``bill_nodes`` = affected-vertex count into ``ops`` so
+    ``jump_ops`` ignores the untouched remainder.
+    """
+    n_scoped = jnp.sum(edge_mask).astype(jnp.int32)
+    order = jnp.argsort(~edge_mask, stable=True)     # scoped rows first
+    packed = jnp.where(edge_mask[order][:, None], edges[order], 0)
+    pi0 = jnp.where(vertex_mask,
+                    jnp.arange(pi.shape[0], dtype=jnp.int32), pi)
+    segments = pad_and_segment(packed, plan)
+    counts = segment_true_counts(n_scoped, plan)
+    pi1, work = segment_scan(pi0, segments, ops, work, true_counts=counts)
+    pi1, work = cleanup_rounds(pi1, segments.reshape(-1, 2), ops, work,
+                               true_edges=n_scoped, max_rounds=max_rounds)
+    return pi1, work
+
+
 def adaptive_rounds(edges: jnp.ndarray, num_nodes: int,
                     plan: SegmentationPlan, *,
                     ops: RoundOps | None = None,

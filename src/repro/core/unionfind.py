@@ -60,3 +60,69 @@ def connected_components_oracle(edges: np.ndarray, num_nodes: int) -> np.ndarray
 
 def num_components(labels: np.ndarray) -> int:
     return int(np.unique(np.asarray(labels)).size)
+
+
+def connected_components_scipy(edges: np.ndarray, num_nodes: int
+                               ) -> np.ndarray | None:
+    """Independent second oracle via ``scipy.sparse.csgraph``,
+    canonicalized to the same min-vertex-id convention; returns None
+    when scipy is absent (the union-find oracle stands alone then).
+    Two disagreeing oracles would flag an oracle bug rather than an
+    engine bug — the conformance suite cross-checks them."""
+    try:
+        import scipy.sparse as sp
+        from scipy.sparse.csgraph import connected_components as cc
+    except ImportError:                                # pragma: no cover
+        return None
+    edges = np.asarray(edges, np.int64).reshape(-1, 2)
+    ok = ((edges >= 0) & (edges < num_nodes)).all(axis=1) \
+        if edges.size else np.zeros((0,), bool)
+    edges = edges[ok]
+    mat = sp.coo_matrix(
+        (np.ones(edges.shape[0]), (edges[:, 0], edges[:, 1])),
+        shape=(num_nodes, num_nodes))
+    _, comp = cc(mat, directed=False)
+    min_label = np.full(num_nodes, np.iinfo(np.int64).max, np.int64)
+    np.minimum.at(min_label, comp, np.arange(num_nodes, dtype=np.int64))
+    return min_label[comp].astype(np.int32)
+
+
+class DynamicConnectivityOracle:
+    """Host ground truth for interleaved insert/delete scripts
+    (DESIGN.md §9): a multiset edge log with the SAME deletion
+    semantics as ``repro.core.incremental.DynamicCC`` — a delete of
+    undirected edge {u, v} is orientation-blind and retires every
+    surviving copy; deleting an absent edge is a no-op. ``labels()``
+    recomputes from scratch over the survivors via union-find (and the
+    scipy cross-oracle when available), so the dynamic engines' scoped
+    shortcuts are checked against the most boring correct answer."""
+
+    def __init__(self, num_nodes: int):
+        self.num_nodes = int(num_nodes)
+        self.edges: list[tuple[int, int]] = []
+
+    @staticmethod
+    def _norm(e) -> tuple[int, int]:
+        u, v = int(e[0]), int(e[1])
+        return (u, v) if u <= v else (v, u)
+
+    def insert(self, edges) -> None:
+        for e in np.asarray(edges, np.int64).reshape(-1, 2):
+            self.edges.append((int(e[0]), int(e[1])))
+
+    def delete(self, edges) -> None:
+        kill = {self._norm(e)
+                for e in np.asarray(edges, np.int64).reshape(-1, 2)}
+        self.edges = [e for e in self.edges
+                      if self._norm(e) not in kill]
+
+    def alive(self) -> np.ndarray:
+        return np.asarray(self.edges, np.int64).reshape(-1, 2)
+
+    def labels(self) -> np.ndarray:
+        want = connected_components_oracle(self.alive(), self.num_nodes)
+        cross = connected_components_scipy(self.alive(), self.num_nodes)
+        if cross is not None and not np.array_equal(want, cross):
+            raise AssertionError(       # pragma: no cover - oracle bug
+                "union-find and scipy oracles disagree")
+        return want

@@ -1,3 +1,3 @@
 from repro.graphs.format import Graph, build_csr
-from repro.graphs.device import DeviceGraph, as_device_graph
+from repro.graphs.device import DeviceGraph, EdgeLog, as_device_graph
 from repro.graphs import generators

@@ -28,6 +28,13 @@ host transfer (eager ``jnp.zeros`` would materialize a host constant).
 Padding invariant: rows past ``true_edges`` are (0, 0) self loops —
 hook no-ops for every engine — and are never billed (see
 ``rounds.WorkCounters``).
+
+``EdgeLog`` (DESIGN.md §9) extends the substrate to fully-dynamic
+workloads: a device-resident append/tombstone log (alive mask, pow2
+capacity buckets, sort-based undirected delete matching) whose
+``compact_alive`` restores the prefix-padding invariant so the
+segmentation machinery and the fused kernel keep working over a log
+that has holes.
 """
 from __future__ import annotations
 
@@ -274,6 +281,190 @@ class DeviceGraph:
                 + (f", true={t}" if t is not None
                    and t != self.edges.shape[0] else "")
                 + f", s={self.plan.num_segments}, name={self.name!r})")
+
+
+# ---------------------------------------------------------------------------
+# EdgeLog — the fully-dynamic edge substrate (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def undirected_group_ids(pairs: jnp.ndarray) -> jnp.ndarray:
+    """int32 [N] group id per row of an int [N, 2] pair array; two rows
+    get the same id iff they denote the same UNDIRECTED edge ((u, v)
+    and (v, u) collapse). Pure int32 — a min*|V|+max key encoding would
+    overflow int32 at |V| > ~46k and this container has no x64 —
+    via a lexicographic two-pass stable sort + boundary cumsum."""
+    lo = jnp.minimum(pairs[:, 0], pairs[:, 1]).astype(jnp.int32)
+    hi = jnp.maximum(pairs[:, 0], pairs[:, 1]).astype(jnp.int32)
+    o1 = jnp.argsort(hi, stable=True)               # secondary key
+    o2 = jnp.argsort(lo[o1], stable=True)           # primary key (stable)
+    order = o1[o2]
+    slo, shi = lo[order], hi[order]
+    new_group = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32),
+         ((slo[1:] != slo[:-1]) | (shi[1:] != shi[:-1])).astype(jnp.int32)])
+    gid_sorted = jnp.cumsum(new_group).astype(jnp.int32)
+    return jnp.zeros(pairs.shape[0], jnp.int32).at[order].set(gid_sorted)
+
+
+def tombstone_mask(edges: jnp.ndarray, alive: jnp.ndarray,
+                   dels: jnp.ndarray, d_true: jnp.ndarray
+                   ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Apply a delete batch to an alive mask (pure jnp — composes into
+    the caller's jit). A delete of undirected edge {u, v} is
+    orientation-blind and kills EVERY alive copy (set semantics over a
+    multiset log; duplicates die together). Rows of ``dels`` at index
+    >= ``d_true`` are padding and match nothing. Returns
+    ``(new_alive, killed)`` where ``killed`` marks the log rows this
+    batch actually retired.
+
+    O((E + D) log(E + D)) sort-based matching, no [E, D] broadcast."""
+    e, d = edges.shape[0], dels.shape[0]
+    gid = undirected_group_ids(jnp.concatenate([edges, dels], axis=0))
+    real_del = jnp.arange(d) < d_true               # padding matches nothing
+    del_present = jnp.zeros((e + d,), jnp.bool_).at[gid[e:]].max(real_del)
+    killed = del_present[gid[:e]] & alive
+    return alive & ~killed, killed
+
+
+def compact_alive(edges: jnp.ndarray, alive: jnp.ndarray
+                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Gather alive rows to a (0, 0)-padded prefix (pure jnp). Restores
+    the prefix-padding invariant every engine relies on — per-segment
+    true-count billing and the fused kernel's edge masking both read
+    "first ``true`` rows are real". Returns ``(edges, true_count)``
+    with ``true_count`` a traced int32 scalar."""
+    order = jnp.argsort(~alive, stable=True)        # alive rows first
+    packed = jnp.where(alive[order][:, None], edges[order], 0)
+    return packed, jnp.sum(alive).astype(jnp.int32)
+
+
+@jax.jit
+def _log_delete_jit(edges, alive, dels, d_true):
+    return tombstone_mask(edges, alive, dels, d_true)
+
+
+@jax.jit
+def _append_jit(edges, alive, block, true_count, rows):
+    """Write a pow2-padded ``block`` at row offset ``rows``, marking
+    its first ``true_count`` rows alive and scrubbing the rest to
+    (0, 0). BOTH the offset and the true count are TRACED device
+    scalars — a static offset would recompile once per append cursor
+    value, a static count once per batch size; this way a long-lived
+    stream hits one entry per (capacity, block) pow2 shape pair."""
+    p = block.shape[0]
+    mask = jnp.arange(p, dtype=jnp.int32) < true_count
+    block = jnp.where(mask[:, None], block, 0)
+    zero = jnp.zeros((), jnp.int32)
+    edges = jax.lax.dynamic_update_slice(edges, block, (rows, zero))
+    alive = jax.lax.dynamic_update_slice(alive, mask, (rows,))
+    return edges, alive
+
+
+@functools.partial(jax.jit, static_argnames=("target",))
+def _grow_jit(edges, alive, *, target):
+    pad = target - edges.shape[0]
+    edges = jnp.concatenate([edges, jnp.zeros((pad, 2), edges.dtype)])
+    alive = jnp.concatenate([alive, jnp.zeros((pad,), jnp.bool_)])
+    return edges, alive
+
+
+class EdgeLog:
+    """Device-resident append/tombstone edge log — the substrate of
+    fully-dynamic connectivity (DESIGN.md §9).
+
+    * ``edges`` [cap, 2] int32 on device; rows beyond the append cursor
+      are (0, 0) and dead;
+    * ``alive`` [cap] bool on device — the tombstone mask. Inserts set
+      it, deletes clear it; how many rows a delete batch actually
+      killed is known only on device (the steady-state tick never
+      syncs it);
+    * capacity grows by the power-of-two bucket rule of
+      ``repro.core.batch`` (``next_pow2``), so a stream of appends hits
+      a handful of jit cache entries — the same shape-bucket discipline
+      the batched engine and the service's query microbatcher use.
+
+    The log deliberately does NOT compact on delete: tombstoning is
+    O(E log D) with zero allocation churn, and every consumer masks by
+    ``alive`` anyway. ``compact()`` (sort-to-prefix + (0, 0) scrub via
+    ``compact_alive``) restores the prefix invariant on demand — the
+    bulk-rebuild path and ``view()`` use it so the segmentation plan
+    and the fused kernel see well-formed prefix padding.
+    """
+
+    def __init__(self, num_nodes: int, *, capacity: int = 64):
+        self.num_nodes = int(num_nodes)
+        cap = next_pow2(max(capacity, 8))
+        self.edges = jnp.zeros((cap, 2), jnp.int32)
+        self.alive = jnp.zeros((cap,), jnp.bool_)
+        self.rows = 0                   # host append cursor (static sizes)
+
+    @property
+    def capacity(self) -> int:
+        return int(self.edges.shape[0])
+
+    def num_alive_device(self) -> jnp.ndarray:
+        """Alive edge count as a device scalar (no sync)."""
+        return jnp.sum(self.alive).astype(jnp.int32)
+
+    @property
+    def num_alive(self) -> int:
+        """Alive edge count (syncs; introspection only)."""
+        return int(self.num_alive_device())
+
+    def append(self, delta: "DeviceGraph") -> None:
+        """Append a delta's TRUE rows (device-side; needs a static true
+        count, like ``DeviceGraph.concat``). The write lands as a
+        pow2-padded block whose tail is scrubbed dead in-jit, so
+        ragged batch sizes share compile entries; capacity grows by
+        pow2 buckets and leaves headroom for the padded block (the
+        cursor still advances by the TRUE count — the next append
+        overwrites the dead tail)."""
+        t = delta.true_edges_static
+        if t is None:
+            raise ValueError("EdgeLog.append needs a static true_edges "
+                             "(prefix-padding invariant)")
+        if delta.num_nodes != self.num_nodes:
+            raise ValueError(f"delta num_nodes {delta.num_nodes} != "
+                             f"{self.num_nodes}")
+        if t == 0:
+            return
+        p = next_pow2(max(t, _MIN_PAD_ROWS))
+        if self.rows + p > self.capacity:     # headroom for the block
+            self.edges, self.alive = _grow_jit(
+                self.edges, self.alive, target=next_pow2(self.rows + p))
+        stored = int(delta.edges.shape[0])
+        block = delta.edges[:p] if stored >= p \
+            else _pad_rows_jit(delta.edges, rows=p - stored)
+        # explicit device_puts: legal under
+        # jax.transfer_guard("disallow"), unlike implicit host-scalar
+        # jit arguments
+        self.edges, self.alive = _append_jit(
+            self.edges, self.alive, block,
+            jax.device_put(np.int32(t)),
+            jax.device_put(np.int32(self.rows)))
+        self.rows += t
+
+    def delete(self, dels: jnp.ndarray, d_true) -> jnp.ndarray:
+        """Standalone tombstone application (the registry's bulk-rebuild
+        delete route — the scoped-recompute route fuses
+        ``tombstone_mask`` into the DynamicCC delete jit instead).
+        Returns the killed mask (device; never synced here)."""
+        self.alive, killed = _log_delete_jit(
+            self.edges, self.alive, jnp.asarray(dels, jnp.int32),
+            jnp.asarray(d_true, jnp.int32))
+        return killed
+
+    def view(self) -> "DeviceGraph":
+        """The alive edge set as a compacted DeviceGraph (traced true
+        count; prefix invariant restored on device). This is what the
+        bulk-rebuild path feeds to the static engines."""
+        packed, true = compact_alive(self.edges, self.alive)
+        plan = _plan_for(self.capacity, self.num_nodes, true, None)
+        return DeviceGraph(packed, self.num_nodes, true, plan, name="log")
+
+    def __repr__(self) -> str:
+        return (f"EdgeLog(|V|={self.num_nodes}, cap={self.capacity}, "
+                f"rows={self.rows})")
 
 
 def _plan_for(e_stored: int, num_nodes: int, true_edges,

@@ -1,0 +1,176 @@
+"""Shared property-based graph strategies + the deterministic named
+corpus, for every test module in the suite.
+
+Before this module, ``test_cc``, ``test_batch_incremental``, and
+``test_connectivity`` each rolled their own inline ``st.integers(...)
+.flatmap(...)`` edge-list generators — three slightly different
+distributions, none covering the named degenerate families. Everything
+here is built ONLY on the strategy surface ``tests/_propcheck.py``
+guarantees (``integers / lists / tuples / just`` + ``map`` /
+``flatmap``), so one definition works under real hypothesis and under
+the deterministic fallback alike.
+
+Two layers:
+
+* **``corpus()``** — deterministic named cases (ER, star, chain,
+  forest, two-cliques-one-bridge, empty, self-loop, duplicate-edge,
+  power-of-two padding boundaries). The conformance matrix iterates
+  this exhaustively; property tests fuzz AROUND it.
+* **strategies** — ``edge_lists`` (the shared (n, edges) case),
+  ``edge_list_batches`` (batched engines), ``graph_with_query_pairs``
+  (query kernels), ``insert_batch_cases`` (registry streams), and
+  ``dynamic_scripts`` (interleaved insert/delete scripts for the
+  fully-dynamic engine — vertex ranges are kept small so drawn deletes
+  actually hit live edges).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from _propcheck import st
+
+
+def edges_array(edges) -> np.ndarray:
+    """Canonical int32 [E, 2] spelling of a drawn edge list."""
+    return np.asarray(edges, np.int32).reshape(-1, 2)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic named corpus
+# ---------------------------------------------------------------------------
+
+def _chain(n):
+    return [[i, i + 1] for i in range(n - 1)]
+
+
+def _star(n):
+    return [[0, i] for i in range(1, n)]
+
+
+def _forest(n, arity, seed):
+    """Random forest: every vertex > 0 either roots a new tree or hangs
+    off an earlier vertex — no cycles, so EVERY edge is a bridge (the
+    deletion worst case)."""
+    rng = np.random.default_rng(seed)
+    edges = []
+    for v in range(1, n):
+        if rng.random() < 1.0 / arity:
+            continue                    # v roots its own tree
+        edges.append([int(rng.integers(0, v)), v])
+    return edges
+
+
+def _clique(vertices):
+    return [[u, v] for i, u in enumerate(vertices)
+            for v in vertices[i + 1:]]
+
+
+def two_cliques_one_bridge(k1: int, k2: int):
+    """Two cliques joined by a single bridge — the canonical split
+    scenario: deleting any clique edge keeps the partition, deleting
+    the bridge splits it. Returns (num_nodes, edges, bridge)."""
+    a = list(range(k1))
+    b = list(range(k1, k1 + k2))
+    bridge = [a[-1], b[0]]
+    return k1 + k2, _clique(a) + [bridge] + _clique(b), bridge
+
+
+def _er(n, e, seed):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, n, (e, 2)).tolist()
+
+
+def corpus():
+    """The deterministic named cases: ``(name, num_nodes, edges)`` with
+    ``edges`` an int32 [E, 2] array. Covers every generator family the
+    ISSUE names plus the power-of-two padding boundaries (|E| exactly
+    at / one off a bucket edge, where prefix-padding bugs live)."""
+    n2, e2, _ = two_cliques_one_bridge(5, 4)
+    cases = [
+        ("empty-0v", 0, []),
+        ("empty-6v", 6, []),
+        ("single-vertex", 1, []),
+        ("self-loop", 4, [[1, 1], [3, 3], [0, 2]]),
+        ("duplicate-edge", 5, [[0, 1], [0, 1], [1, 0], [2, 3], [2, 3]]),
+        ("chain-17", 17, _chain(17)),
+        ("star-13", 13, _star(13)),
+        ("forest-19", 19, _forest(19, 3, seed=7)),
+        ("two-cliques-bridge", n2, e2),
+        ("er-sparse", 30, _er(30, 18, seed=11)),
+        ("er-mid", 24, _er(24, 60, seed=12)),
+        ("er-dense", 10, _er(10, 70, seed=13)),
+        # pow2 padding boundaries: E at a bucket edge and one past it,
+        # V exactly at / one past a pow2 (bucket height boundaries)
+        ("pow2-E8", 12, _er(12, 8, seed=21)),
+        ("pow2-E9", 12, _er(12, 9, seed=22)),
+        ("pow2-E16", 16, _er(16, 16, seed=23)),
+        ("pow2-E17", 16, _er(16, 17, seed=24)),
+        ("pow2-V8", 8, _er(8, 12, seed=25)),
+        ("pow2-V9", 9, _er(9, 12, seed=26)),
+    ]
+    return [(name, n, edges_array(e)) for name, n, e in cases]
+
+
+# ---------------------------------------------------------------------------
+# Strategies (fallback-compatible surface only)
+# ---------------------------------------------------------------------------
+
+def _edge(n):
+    return st.tuples(st.integers(0, n - 1), st.integers(0, n - 1))
+
+
+def edge_cases(min_n: int = 2, max_n: int = 40, max_edges: int = 120,
+               min_edges: int = 0):
+    """The suite's shared random-graph case: draws ``(n, edges)`` with
+    uniform (ER-style) endpoints — self loops and duplicates included
+    by construction."""
+    return st.integers(min_n, max_n).flatmap(
+        lambda n: st.tuples(
+            st.just(n),
+            st.lists(_edge(n), min_size=min_edges, max_size=max_edges)))
+
+
+# the exact shape test_cc historically used, now shared
+edge_lists = edge_cases(2, 40, 120)
+
+# batched engines: several (n, edges) cases per draw
+edge_list_batches = st.lists(edge_cases(2, 24, 40), min_size=1,
+                             max_size=6)
+
+
+def graph_with_query_pairs(max_n: int = 30, max_edges: int = 50,
+                           max_pairs: int = 20):
+    """(n, edges, query_pairs) for the query-kernel properties."""
+    return st.integers(1, max_n).flatmap(
+        lambda n: st.tuples(
+            st.just(n),
+            st.lists(_edge(n), min_size=0, max_size=max_edges),
+            st.lists(_edge(n), min_size=1, max_size=max_pairs)))
+
+
+def insert_batch_cases(min_n: int = 8, max_n: int = 28,
+                       max_batch: int = 12, max_batches: int = 6):
+    """(n, [batch, ...]) insert streams for the registry properties."""
+    return st.integers(min_n, max_n).flatmap(
+        lambda n: st.tuples(
+            st.just(n),
+            st.lists(st.lists(_edge(n), min_size=0, max_size=max_batch),
+                     min_size=1, max_size=max_batches)))
+
+
+def dynamic_scripts(max_n: int = 12, max_ops: int = 8,
+                    max_batch: int = 8):
+    """Interleaved insert/delete scripts for the fully-dynamic engine:
+    ``(n, [(op, edges), ...])`` with ``op`` 0 = insert, 1 = delete.
+    The vertex range is deliberately small so drawn deletes collide
+    with live edges often (bridges, duplicate retirement, and absent
+    no-ops all get exercised); both-endpoint draws also produce
+    self-loop deletes."""
+    return st.integers(3, max_n).flatmap(
+        lambda n: st.tuples(
+            st.just(n),
+            st.lists(
+                st.tuples(st.integers(0, 1),
+                          st.lists(_edge(n), min_size=0,
+                                   max_size=max_batch)),
+                min_size=1, max_size=max_ops)))

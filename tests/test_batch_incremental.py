@@ -4,15 +4,17 @@ streaming insertions, and true-edge work billing."""
 import numpy as np
 import pytest
 
+from _graphgen import dynamic_scripts, edge_list_batches, edges_array
 from _propcheck import given, settings, st
 from repro.core import rounds
 from repro.core.batch import (bucket_shape, bucketize,
                               connected_components_batched)
 from repro.core.cc import (connected_components,
                            connected_components_hostloop, num_components)
-from repro.core.incremental import IncrementalCC
+from repro.core.incremental import DynamicCC, IncrementalCC
 from repro.core.segmentation import plan_segmentation
-from repro.core.unionfind import connected_components_oracle
+from repro.core.unionfind import (DynamicConnectivityOracle,
+                                  connected_components_oracle)
 from repro.graphs import generators as G
 
 
@@ -84,17 +86,9 @@ def test_batched_work_bills_true_edges_only():
 
 
 @settings(max_examples=8, deadline=None)
-@given(st.lists(
-    st.integers(2, 24).flatmap(
-        lambda n: st.tuples(
-            st.just(n),
-            st.lists(st.tuples(st.integers(0, n - 1),
-                               st.integers(0, n - 1)),
-                     min_size=0, max_size=40))),
-    min_size=1, max_size=6))
+@given(edge_list_batches)
 def test_batched_matches_oracle_property(cases):
-    pairs = [(np.asarray(e, np.int32).reshape(-1, 2), n)
-             for n, e in cases]
+    pairs = [(edges_array(e), n) for n, e in cases]
     out = connected_components_batched(pairs)
     for (edges, n), res in zip(pairs, out):
         want = connected_components_oracle(edges, n)
@@ -167,6 +161,143 @@ def test_incremental_empty_graph():
     inc = IncrementalCC(0)
     inc.insert(np.zeros((0, 2), np.int32))
     assert inc.labels.shape == (0,)
+
+
+# --------------------------------------------------------------------------
+# Fully-dynamic engine (DESIGN.md §9): deletions
+# --------------------------------------------------------------------------
+
+def run_script(dyn: DynamicCC, script, n: int,
+               check_every_step: bool = True):
+    """Drive a dynamic engine and the host oracle through one
+    interleaved insert/delete script, asserting label agreement."""
+    oracle = DynamicConnectivityOracle(n)
+    for op, batch in script:
+        edges = edges_array(batch)
+        if op == 0:
+            dyn.insert(edges)
+            oracle.insert(edges)
+        else:
+            dyn.delete(edges)
+            oracle.delete(edges)
+        if check_every_step:
+            np.testing.assert_array_equal(np.asarray(dyn.labels),
+                                          oracle.labels(),
+                                          err_msg=str(script))
+    return oracle
+
+
+@settings(max_examples=10, deadline=None)
+@given(dynamic_scripts())
+def test_dynamic_matches_oracle_over_scripts(case):
+    """Acceptance: after EVERY step of any interleaved insert/delete
+    script, DynamicCC's labels equal a from-scratch union-find (and
+    scipy) recompute over the surviving edge multiset."""
+    n, script = case
+    run_script(DynamicCC(n), script, n)
+
+
+def test_dynamic_bridge_delete_splits_nonbridge_does_not():
+    """The split detector: deleting a cycle edge keeps the partition
+    (version unchanged, zero stale risk), deleting the bridge splits
+    it (version ticks)."""
+    from _graphgen import two_cliques_one_bridge
+    n, edges, bridge = two_cliques_one_bridge(5, 4)
+    dyn = DynamicCC(n)
+    dyn.insert(edges)
+    v0 = dyn.version
+    dyn.delete([edges[0]])              # clique-internal: not a bridge
+    assert dyn.version == v0
+    assert dyn.num_components() == 1
+    dyn.delete([bridge])                # the bridge: an actual split
+    assert dyn.version == v0 + 1
+    assert dyn.num_components() == 2
+    assert not dyn.connected(0, n - 1)
+    np.testing.assert_array_equal(
+        np.asarray(dyn.labels),
+        connected_components_oracle(
+            edges_array([e for e in edges
+                         if e not in (edges[0], bridge)]), n))
+
+
+def test_dynamic_absent_delete_is_free_and_silent():
+    """Deleting absent edges (or double-deleting) retires nothing:
+    zero hook rounds, zero sweeps, no version tick."""
+    dyn = DynamicCC(10)
+    dyn.insert([[0, 1], [1, 2], [3, 4]])
+    dyn.delete([[3, 4]])
+    v0, before = dyn.version, dict(dyn.work)
+    dyn.delete([[5, 6], [3, 4], [7, 7]])     # absent + double + loop
+    after = dyn.work
+    assert dyn.version == v0
+    assert after["hook_rounds"] == before["hook_rounds"]
+    assert after["jump_sweeps"] == before["jump_sweeps"]
+    assert after["hook_ops"] == before["hook_ops"]
+    assert dyn.num_edges_deleted == 1
+
+
+def test_dynamic_delete_retires_every_copy_orientation_blind():
+    dyn = DynamicCC(6)
+    dyn.insert([[0, 1], [1, 0], [0, 1], [2, 3]])
+    dyn.delete([[1, 0]])                # kills all three copies
+    assert dyn.num_edges_deleted == 3
+    assert dyn.num_edges_alive == 1
+    assert not dyn.connected(0, 1)
+
+
+def test_dynamic_scoped_recompute_cheaper_than_full():
+    """The paper's currency: a bridge deletion inside ONE of many
+    components re-hooks only that component's survivors — hook_ops
+    must undercut a from-scratch recompute of the whole graph."""
+    g = G.disjoint_cliques(6, 8, seed=0)      # 6 components, 28 edges each
+    edges = np.asarray(g.edges, np.int32)
+    dyn = DynamicCC(g.num_nodes)
+    dyn.insert(edges)
+    base = dyn.work["hook_ops"]
+    dyn.delete([edges[0]])                    # one clique-internal edge
+    scoped_ops = dyn.work["hook_ops"] - base
+    oracle = DynamicConnectivityOracle(g.num_nodes)
+    oracle.insert(edges)
+    oracle.delete([edges[0]])
+    full = connected_components(edges_array(oracle.alive()),
+                                g.num_nodes, method="adaptive")
+    np.testing.assert_array_equal(np.asarray(dyn.labels), oracle.labels())
+    assert 0 < scoped_ops < int(full.work.hook_ops), \
+        (scoped_ops, int(full.work.hook_ops))
+
+
+def test_dynamic_fused_scan_bit_identical():
+    """scan_method='pallas_fused' runs the scoped recompute through the
+    fused kernel: labels AND work counters bit-identical to jnp."""
+    rng = np.random.default_rng(5)
+    n = 48
+    edges = rng.integers(0, n, (70, 2))
+    kills = edges[rng.integers(0, 70, 15)]
+    a = DynamicCC(n)
+    b = DynamicCC(n, scan_method="pallas_fused")
+    for dyn in (a, b):
+        dyn.insert(edges)
+        dyn.delete(kills)
+    np.testing.assert_array_equal(np.asarray(a.labels),
+                                  np.asarray(b.labels))
+    assert a.work == b.work
+
+
+def test_dynamic_validation_and_degenerate():
+    dyn = DynamicCC(4)
+    with pytest.raises(ValueError):
+        dyn.delete([[0, 4]])
+    with pytest.raises(ValueError):
+        dyn.delete([[-1, 0]])
+    with pytest.raises(ValueError):
+        DynamicCC(4, scan_method="nope")
+    dyn.delete(np.zeros((0, 2), np.int32))   # empty batch: no-op
+    dyn.delete([[0, 1]])                     # delete before any insert
+    assert dyn.num_edges_deleted == 0
+    empty = DynamicCC(0)
+    empty.insert(np.zeros((0, 2)))
+    empty.delete(np.zeros((0, 2)))
+    assert empty.labels.shape == (0,)
 
 
 # --------------------------------------------------------------------------

@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _graphgen import edge_lists
 from _propcheck import given, settings, st
 
 from repro.core.cc import (METHODS, WorkCounters, connected_components,
@@ -62,15 +63,9 @@ def test_labels_are_canonical_minima(rng):
 
 
 # --------------------------------------------------------------------------
-# Property tests (hypothesis)
+# Property tests (hypothesis) — cases drawn from the shared _graphgen
+# strategies so every suite fuzzes one distribution
 # --------------------------------------------------------------------------
-
-edge_lists = st.integers(2, 40).flatmap(
-    lambda n: st.tuples(
-        st.just(n),
-        st.lists(st.tuples(st.integers(0, n - 1),
-                           st.integers(0, n - 1)),
-                 min_size=0, max_size=120)))
 
 
 @settings(max_examples=30, deadline=None)

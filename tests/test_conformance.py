@@ -1,0 +1,266 @@
+"""Cross-mode differential conformance matrix (ISSUE 4).
+
+Every execution mode of the stack must produce CANONICAL-LABEL-IDENTICAL
+results over the shared ``_graphgen`` corpus:
+
+  * the jnp single-graph variants (``soman | multijump | atomic_hook |
+    adaptive | labelprop``),
+  * the per-round Pallas backend (``connected_components_pallas``),
+  * the fused Pallas backend (``method="pallas_fused"``),
+  * the shape-bucketed batched engine,
+  * an incremental (chunked insert) replay,
+  * a fully-dynamic (insert + delete + re-insert) replay,
+  * the 8-host-device distributed engine (subprocess — the main
+    process must keep its single-device view),
+
+all cross-checked against TWO independent host oracles (union-find and
+scipy.sparse.csgraph) so an oracle bug cannot silently bless an engine
+bug. Where bit-exactness of the WORK COUNTERS is claimed — the fused
+backend against the jnp adaptive composition — the counters are
+asserted equal field by field over the whole corpus, not just labels.
+
+Also home of the ISSUE's counter-soundness property: accumulated
+``WorkCounters`` totals are monotone non-decreasing across long
+insert+delete sequences and never wrap int32 (pinning the PR-3 lazy
+host-fold design: per-batch int32 device counters fold into host
+arbitrary-precision ints).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+
+from _graphgen import corpus, dynamic_scripts, edges_array
+from _propcheck import given, settings, st
+from repro.core.batch import connected_components_batched
+from repro.core.cc import (METHODS, connected_components,
+                           connected_components_pallas)
+from repro.core.incremental import DynamicCC, IncrementalCC
+from repro.core.rounds import WorkCounters
+from repro.core.unionfind import (DynamicConnectivityOracle,
+                                  connected_components_oracle,
+                                  connected_components_scipy)
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+ALL_SINGLE_METHODS = METHODS + ("pallas_fused",)
+
+
+def oracle_labels(n, edges):
+    """Union-find labels, cross-checked against the independent scipy
+    oracle when available."""
+    want = connected_components_oracle(edges, n)
+    cross = connected_components_scipy(edges, n)
+    if cross is not None:
+        np.testing.assert_array_equal(want, cross,
+                                      err_msg="oracles disagree")
+    return want
+
+
+# ---------------------------------------------------------------------------
+# Static matrix: every single-graph mode, every corpus case
+# ---------------------------------------------------------------------------
+
+def test_conformance_single_graph_modes():
+    for name, n, edges in corpus():
+        want = oracle_labels(n, edges)
+        for method in ALL_SINGLE_METHODS:
+            got = connected_components(edges, n, method=method)
+            np.testing.assert_array_equal(
+                np.asarray(got.labels), want,
+                err_msg=f"{name} method={method}")
+        if n and len(edges):
+            got = connected_components_pallas(edges, n, interpret=True)
+            np.testing.assert_array_equal(np.asarray(got), want,
+                                          err_msg=f"{name} pallas")
+
+
+def test_conformance_batched_bit_identical():
+    """ONE batched run over the whole corpus == per-graph adaptive,
+    bit for bit, mixed shapes bucketed freely."""
+    cases = [(name, n, e) for name, n, e in corpus() if n > 0]
+    out = connected_components_batched([(e, n) for _, n, e in cases])
+    for (name, n, edges), res in zip(cases, out):
+        single = connected_components(edges, n, method="adaptive")
+        np.testing.assert_array_equal(np.asarray(res.labels),
+                                      np.asarray(single.labels),
+                                      err_msg=name)
+
+
+def test_conformance_incremental_replay():
+    """Chunked insert replay lands on the same canonical fixed point
+    as every static mode."""
+    for name, n, edges in corpus():
+        inc = IncrementalCC(n)
+        for chunk in np.array_split(edges, 3) if len(edges) else [edges]:
+            inc.insert(chunk)
+        np.testing.assert_array_equal(np.asarray(inc.labels),
+                                      oracle_labels(n, edges),
+                                      err_msg=name)
+
+
+def test_conformance_dynamic_replay():
+    """Insert everything, delete half, re-insert the deleted half: the
+    dynamic engine must land back on the static fixed point — deletion
+    plus re-insertion is an identity on the partition (not on the work
+    done). Both scoped-scan backends."""
+    for scan_method in ("jnp", "pallas_fused"):
+        for name, n, edges in corpus():
+            if n == 0:
+                continue
+            dyn = DynamicCC(n, scan_method=scan_method)
+            oracle = DynamicConnectivityOracle(n)
+            dyn.insert(edges)
+            oracle.insert(edges)
+            half = edges[: len(edges) // 2]
+            dyn.delete(half)        # retires every copy, both orders
+            oracle.delete(half)
+            np.testing.assert_array_equal(
+                np.asarray(dyn.labels), oracle.labels(),
+                err_msg=f"{name} after delete ({scan_method})")
+            dyn.insert(half)
+            oracle.insert(half)
+            np.testing.assert_array_equal(
+                np.asarray(dyn.labels), oracle.labels(),
+                err_msg=f"{name} after re-insert ({scan_method})")
+            # ...and re-insertion restores the original partition
+            np.testing.assert_array_equal(
+                np.unique(np.asarray(dyn.labels)),
+                np.unique(oracle_labels(n, edges)),
+                err_msg=f"{name} partition ({scan_method})")
+
+
+def test_conformance_work_counters_where_bit_exact_claimed():
+    """The fused Pallas backend claims WorkCounters bit-compatibility
+    with the jnp adaptive composition — hold it to that over the whole
+    corpus, field by field."""
+    for name, n, edges in corpus():
+        a = connected_components(edges, n, method="adaptive")
+        b = connected_components(edges, n, method="pallas_fused")
+        np.testing.assert_array_equal(np.asarray(a.labels),
+                                      np.asarray(b.labels), err_msg=name)
+        for field, x, y in zip(WorkCounters._fields, a.work, b.work):
+            assert int(x) == int(y), (name, field, int(x), int(y))
+
+
+# ---------------------------------------------------------------------------
+# Delete path vs oracle under interleaved scripts, differentially
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(dynamic_scripts(max_n=14, max_ops=6))
+def test_conformance_dynamic_scripts_cross_mode(case):
+    """After ANY interleaved insert/delete script: the dynamic engine,
+    a from-scratch run of every static mode over the survivors, and
+    the union-find/scipy oracles all agree on the labels."""
+    n, script = case
+    dyn = DynamicCC(n)
+    oracle = DynamicConnectivityOracle(n)
+    for op, batch in script:
+        edges = edges_array(batch)
+        (dyn.insert if op == 0 else dyn.delete)(edges)
+        (oracle.insert if op == 0 else oracle.delete)(edges)
+    want = oracle.labels()
+    np.testing.assert_array_equal(np.asarray(dyn.labels), want,
+                                  err_msg=str(script))
+    survivors = edges_array(oracle.alive())
+    for method in ("adaptive", "atomic_hook", "pallas_fused"):
+        got = connected_components(survivors, n, method=method)
+        np.testing.assert_array_equal(np.asarray(got.labels), want,
+                                      err_msg=f"{method} {script}")
+
+
+# ---------------------------------------------------------------------------
+# 8-host-device distributed engine (subprocess keeps main single-device)
+# ---------------------------------------------------------------------------
+
+def test_conformance_distributed_8dev():
+    """The sharded engine joins the matrix: same canonical labels as
+    the oracle over the non-degenerate corpus, on 8 forced host
+    devices, including edge counts that do not divide into 8."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count=8"
+        import jax
+        import numpy as np
+        from _graphgen import corpus
+        from repro.core.distributed import make_distributed_cc
+        from repro.core.unionfind import connected_components_oracle
+        from repro.graphs.device import DeviceGraph
+        assert len(jax.devices()) == 8
+        mesh = jax.sharding.Mesh(np.array(jax.devices()), ("data",))
+        ran = 0
+        for name, n, edges in corpus():
+            if n == 0 or len(edges) < 8:
+                continue
+            dg = DeviceGraph.from_edges(edges, n).shard(mesh, ("data",))
+            fn = make_distributed_cc(dg, mesh, ("data",))
+            got = np.asarray(fn(dg))
+            want = connected_components_oracle(edges, n)
+            np.testing.assert_array_equal(got, want, err_msg=name)
+            ran += 1
+        assert ran >= 8, ran
+        print("DIST_CONFORMANCE_OK", ran)
+    """)
+    # inherit the parent env (a stripped env stalls XLA's CPU client;
+    # see test_distributed.run_sub) + put tests/ on the path for
+    # _graphgen
+    env = {**os.environ,
+           "PYTHONPATH": "src" + os.pathsep + "tests"}
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True,
+                         env=env, cwd=_REPO_ROOT, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "DIST_CONFORMANCE_OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# WorkCounters soundness (ISSUE 4 satellite): monotone, no int32 wrap
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(dynamic_scripts(max_n=10, max_ops=8))
+def test_work_counters_monotone_over_dynamic_sequences(case):
+    """Accumulated totals never decrease across a long interleaved
+    insert+delete sequence — every counter is a cost, and costs only
+    accrue."""
+    n, script = case
+    dyn = DynamicCC(n)
+    prev = dict(dyn.work)
+    for op, batch in script:
+        (dyn.insert if op == 0 else dyn.delete)(edges_array(batch))
+        now = dyn.work
+        for field in WorkCounters._fields:
+            assert now[field] >= prev[field], (field, prev, now)
+        assert all(v >= 0 for v in now.values()), now
+        prev = now
+
+
+def test_work_counters_never_wrap_int32():
+    """Pin the PR-3 lazy host-fold design: per-batch counters are int32
+    DEVICE scalars (cheap, unsynced), but they fold into host
+    arbitrary-precision ints — so accumulated totals sail past
+    2**31 - 1 without wrapping, including through the amortized
+    auto-drain every ``_DRAIN_EVERY`` pending batches."""
+    import jax.numpy as jnp
+    from repro.core import incremental as inc_mod
+
+    inc = IncrementalCC(4)
+    big = 1 << 30                           # fits int32; 4x overflows it
+    batch = WorkCounters(*(jnp.full((), big, jnp.int32)
+                           for _ in WorkCounters._fields))
+    n_batches = inc_mod._DRAIN_EVERY + 10   # forces >= 1 amortized drain
+    for _ in range(n_batches):
+        inc._queue_work(batch)
+    # the amortized drain fired mid-stream (lazy fold, not unbounded
+    # device-counter accumulation)
+    assert len(inc._work_pending) == 10
+    totals = inc.work
+    want = big * n_batches
+    assert want > 2**31 - 1                 # the wrap hazard is real
+    for field, value in totals.items():
+        assert value == want, (field, value, want)

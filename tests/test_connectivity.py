@@ -8,6 +8,9 @@ import json
 import numpy as np
 import pytest
 
+from _graphgen import (dynamic_scripts, edges_array,
+                       graph_with_query_pairs, insert_batch_cases,
+                       two_cliques_one_bridge)
 from _propcheck import given, settings, st
 from repro.connectivity import policy, queries
 from repro.connectivity.registry import GraphRegistry
@@ -79,20 +82,14 @@ def test_query_kernels_match_numpy_oracle_across_families():
 
 
 @settings(max_examples=10, deadline=None)
-@given(st.integers(1, 30).flatmap(
-    lambda n: st.tuples(
-        st.just(n),
-        st.lists(st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
-                 min_size=0, max_size=50),
-        st.lists(st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
-                 min_size=1, max_size=20))))
+@given(graph_with_query_pairs())
 def test_query_kernels_property(case):
     """Any random (graph, query batch): kernels == NumPy on the oracle
     labels, and padding to the shared pow2 buckets never changes the
     sliced answers."""
     n, edges, qpairs = case
-    edges = np.asarray(edges, np.int32).reshape(-1, 2)
-    qpairs = np.asarray(qpairs, np.int32).reshape(-1, 2)
+    edges = edges_array(edges)
+    qpairs = edges_array(qpairs)
     labels = connected_components_oracle(edges, n)
     got = np.asarray(queries.same_component(labels, qpairs))
     want = labels[qpairs[:, 0]] == labels[qpairs[:, 1]]
@@ -240,13 +237,7 @@ def test_registry_version_ticks_only_on_merge():
 
 
 @settings(max_examples=6, deadline=None)
-@given(st.integers(8, 28).flatmap(
-    lambda n: st.tuples(
-        st.just(n),
-        st.lists(st.lists(st.tuples(st.integers(0, n - 1),
-                                    st.integers(0, n - 1)),
-                          min_size=0, max_size=12),
-                 min_size=1, max_size=6))))
+@given(insert_batch_cases())
 def test_registry_never_serves_stale_answers_property(case):
     """The invalidation property from the ISSUE: across any insert-batch
     sequence, a cached ``same_component`` answer is never stale — every
@@ -271,6 +262,77 @@ def test_registry_never_serves_stale_answers_property(case):
         # and the full label state stays at the oracle fixed point
         np.testing.assert_array_equal(np.asarray(reg.get("t").labels),
                                       labels)
+
+
+@settings(max_examples=8, deadline=None)
+@given(dynamic_scripts())
+def test_registry_stale_free_across_splits_property(case):
+    """Acceptance (ISSUE 4): across any interleaved insert/delete
+    script, cached answers are never stale — every ``same_component`` /
+    ``component_size`` / ``count_components`` response equals the
+    union-find oracle over the surviving edges, the SAME query batch is
+    re-asked after every mutation to maximize cache pressure, and the
+    version (= invalidation) ticks EXACTLY when the canonical
+    partition changed (merge or split) — never for a batch that left
+    connectivity alone."""
+    from repro.core.unionfind import DynamicConnectivityOracle
+    n, script = case
+    reg = GraphRegistry()
+    reg.create("t", n)
+    oracle = DynamicConnectivityOracle(n)
+    rng = np.random.default_rng(n)
+    fixed_pairs = rng.integers(0, n, (7, 2))
+    prev_labels = connected_components_oracle(
+        np.zeros((0, 2), np.int32), n)
+    for op, batch in script:
+        edges = edges_array(batch)
+        v_before = reg.version("t")
+        if op == 0:
+            reg.insert("t", edges)
+            oracle.insert(edges)
+        else:
+            reg.delete("t", edges)
+            oracle.delete(edges)
+        labels = oracle.labels()
+        changed = not np.array_equal(labels, prev_labels)
+        # invalidation precision: the version moved iff the partition
+        # did (insert merges and delete splits both count; anything
+        # else keeps every cached answer warm)
+        assert reg.version("t") - v_before == int(changed), str(script)
+        got = np.asarray(reg.same_component("t", fixed_pairs))
+        want = labels[fixed_pairs[:, 0]] == labels[fixed_pairs[:, 1]]
+        np.testing.assert_array_equal(got, want, err_msg=str(script))
+        assert reg.count_components("t") == np.unique(labels).size
+        sizes = np.asarray(
+            reg.component_size("t", fixed_pairs[:, 0]))
+        want_sizes = np.asarray(
+            [np.sum(labels == labels[v]) for v in fixed_pairs[:, 0]])
+        np.testing.assert_array_equal(sizes, want_sizes)
+        np.testing.assert_array_equal(np.asarray(reg.get("t").labels),
+                                      labels, err_msg=str(script))
+        prev_labels = labels
+
+
+def test_registry_version_ticks_only_on_actual_split():
+    """The delete-side mirror of the merge-tick test: a non-bridge
+    delete keeps every cached answer warm; a bridge delete invalidates
+    exactly once."""
+    n, edges, bridge = two_cliques_one_bridge(4, 4)
+    reg = GraphRegistry()
+    reg.create("g", n)
+    reg.insert("g", edges)
+    v0 = reg.version("g")
+    assert bool(reg.same_component("g", [[0, n - 1]])[0])
+    reg.delete("g", [edges[0]])          # cycle edge: partition intact
+    assert reg.version("g") == v0
+    t = reg.get("g")
+    hits = t.stats.cache_hits
+    assert bool(reg.same_component("g", [[0, n - 1]])[0])
+    assert t.stats.cache_hits == hits + 1      # cache stayed warm
+    reg.delete("g", [bridge])            # split: one tick, cache cold
+    assert reg.version("g") == v0 + 1
+    assert not bool(reg.same_component("g", [[0, n - 1]])[0])
+    assert t.stats.scoped_deletes == 2
 
 
 def test_registry_policy_routes_bulk_then_absorb():
@@ -364,14 +426,17 @@ def test_service_errors_do_not_poison_the_tick():
 
 
 def test_service_steady_state_has_no_host_transfers():
-    """Acceptance (ISSUE 3): the steady-state service insert path —
-    device-side coalescing, policy feature extraction from DeviceGraph
-    metadata, and the on-device registry version tick — performs ZERO
-    implicit host transfers. ``jax.transfer_guard("disallow")`` turns
-    any ``bool(device_scalar)``, ``np.concatenate`` fallback, or
+    """Acceptance (ISSUE 3 + 4): the steady-state service mutation
+    paths — device-side coalescing, policy feature extraction from
+    DeviceGraph metadata, the on-device merge tick (insert), AND the
+    tombstone + scoped-recompute + split tick (delete) — perform ZERO
+    implicit host transfers, including a mixed insert+delete tick.
+    ``jax.transfer_guard("disallow")`` turns any
+    ``bool(device_scalar)``, ``np.concatenate`` fallback, or
     host-scalar jit argument into a hard error."""
     import jax
     from repro.connectivity.service import ConnectivityService
+    from repro.core.unionfind import DynamicConnectivityOracle
     from repro.graphs.device import DeviceGraph
 
     g = G.grid_road(8, extra_prob=0.0, seed=0)
@@ -386,28 +451,99 @@ def test_service_steady_state_has_no_host_transfers():
     svc.submit_insert("t", edges[-40:-30])
     svc.submit_insert("t", edges[-30:-20])
     svc.run()
-    assert reg.get("t").last_method == policy.INCREMENTAL_ABSORB
+    svc.submit_delete("t", edges[:5])
+    svc.submit_delete("t", edges[5:10])
+    svc.run()
+    assert reg.get("t").last_method in policy.DELETE_METHODS
 
     # steady state: same shapes again. Admission (submit) is ingress
     # and may sync for validation; the TICK — coalescing, policy
-    # features, absorb, version tick — must not transfer at all.
+    # features, absorb, tombstone, scoped recompute, version ticks —
+    # must not transfer at all.
     svc.submit_insert("t", DeviceGraph.from_edges(edges[-20:-10], n))
     svc.submit_insert("t", DeviceGraph.from_edges(edges[-10:], n))
     with jax.transfer_guard("disallow"):
         finished = svc.run()
     assert [r.error for r in finished] == [None, None]
+
+    # steady-state DELETE tick (same coalesced shape as the warm one)
+    svc.submit_delete("t", DeviceGraph.from_edges(edges[10:15], n))
+    svc.submit_delete("t", DeviceGraph.from_edges(edges[15:20], n))
+    with jax.transfer_guard("disallow"):
+        finished = svc.run()
+    assert [r.error for r in finished] == [None, None]
+
+    # MIXED insert+delete tick: re-insert edges deleted above and
+    # delete others, one tick, still transfer-free
+    svc.submit_insert("t", DeviceGraph.from_edges(edges[:5], n))
+    svc.submit_insert("t", DeviceGraph.from_edges(edges[5:10], n))
+    svc.submit_delete("t", DeviceGraph.from_edges(edges[20:25], n))
+    svc.submit_delete("t", DeviceGraph.from_edges(edges[25:30], n))
+    with jax.transfer_guard("disallow"):
+        finished = svc.run()
+    assert [r.error for r in finished] == [None] * 4
     assert all(r.done for r in finished)
-    assert reg.get("t").last_method == policy.INCREMENTAL_ABSORB
     # results ride as device scalars (the tick never synced them)
     assert all(isinstance(r.result, jax.Array) for r in finished)
 
-    # the guarded inserts really landed: answers match the oracle
-    labels = connected_components_oracle(edges, n)
+    # the guarded mutations really landed: answers match the dynamic
+    # oracle replaying the exact mutation sequence
+    oracle = DynamicConnectivityOracle(n)
+    oracle.insert(edges[:-20])
+    oracle.delete(edges[:10])
+    oracle.insert(edges[-20:])
+    oracle.delete(edges[10:20])
+    oracle.insert(edges[:10])
+    oracle.delete(edges[20:30])
+    labels = oracle.labels()
     pairs = np.stack([np.arange(n, dtype=np.int32),
                       np.zeros(n, np.int32)], axis=1)
     got = np.asarray(reg.same_component("t", pairs))
     np.testing.assert_array_equal(got, labels == labels[0])
     np.testing.assert_array_equal(np.asarray(reg.get("t").labels), labels)
+
+
+def test_service_interleaved_insert_delete_matches_oracle():
+    """Mixed insert/delete/query traffic through the slot engine: every
+    answer equals the dynamic oracle over the surviving edges; deletes
+    coalesce per tenant per tick (one device call for k requests)."""
+    from repro.core.unionfind import DynamicConnectivityOracle
+    g = G.rmat(5, 5, seed=9)
+    n = g.num_nodes
+    edges = np.asarray(g.edges, np.int32)
+    reg = GraphRegistry()
+    svc = ConnectivityService(reg, slots=64)
+    reg.create("t", n)
+    oracle = DynamicConnectivityOracle(n)
+    rng = np.random.default_rng(1)
+    third = edges.shape[0] // 3
+    chunks = (edges[:third], edges[third:2 * third], edges[2 * third:])
+    for rnd, chunk in enumerate(chunks):
+        svc.submit_insert("t", chunk)
+        oracle.insert(chunk)
+        if rnd:
+            # delete a few live edges (sampled) + one absent edge,
+            # split across requests to exercise coalescing
+            live = oracle.alive()
+            kills = live[rng.integers(0, live.shape[0], 4)]
+            svc.submit_delete("t", kills[:2])
+            svc.submit_delete("t", kills[2:])
+            svc.submit_delete("t", [[0, n - 1]])
+            oracle.delete(np.concatenate([kills, [[0, n - 1]]]))
+        pairs = rng.integers(0, n, (9, 2))
+        uid = svc.submit_query("t", "same_component", pairs)
+        delete_calls = svc.stats["delete_calls"]
+        finished = {r.uid: r for r in svc.run()}
+        if rnd:       # 3 delete requests -> ONE coalesced device call
+            assert svc.stats["delete_calls"] == delete_calls + 1
+        labels = oracle.labels()
+        np.testing.assert_array_equal(
+            np.asarray(finished[uid].result),
+            labels[pairs[:, 0]] == labels[pairs[:, 1]])
+        np.testing.assert_array_equal(np.asarray(reg.get("t").labels),
+                                      labels)
+    assert svc.stats["errors"] == 0
+    assert svc.stats["deletes_absorbed"] == 6
 
 
 def test_registry_insert_accepts_device_graph_and_stays_fresh():
