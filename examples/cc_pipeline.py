@@ -1,9 +1,12 @@
 """CC as a first-class graph-pipeline feature + the distributed form.
 
+Everything through the ``repro.Solver`` facade (DESIGN.md §10):
+
 1. Generate a multi-component graph; label components with adaptive CC.
 2. Use the labels the way the GNN pipeline does: keep the largest
    component, verify a molecule batch stays block-diagonal.
-3. Run the Pallas-kernel backend (interpret mode on CPU; TPU target).
+3. Run the per-round Pallas kernel backend (``backend="pallas"``;
+   interpret mode on CPU, TPU target).
 4. Run DISTRIBUTED CC over a device mesh (spatial segmentation — the
    paper's segments across chips; single-device mesh here, the 512-chip
    version is exercised by ``python -m repro.launch.dryrun --arch
@@ -15,8 +18,7 @@ import numpy as np
 
 import jax
 
-from repro.core.cc import connected_components, connected_components_pallas
-from repro.core.distributed import distributed_connected_components
+from repro import Solver, solve
 from repro.core.unionfind import connected_components_oracle
 from repro.graphs.generators import disjoint_cliques, molecule_batch
 
@@ -24,8 +26,8 @@ from repro.graphs.generators import disjoint_cliques, molecule_batch
 def main() -> None:
     # 1: component labeling
     g = disjoint_cliques(num_cliques=6, clique_size=50)
-    labels = np.asarray(
-        connected_components(g.edges, g.num_nodes).labels)
+    solver = Solver.open(g)
+    labels = np.asarray(solver.solve().labels)
     sizes = {int(c): int((labels == c).sum()) for c in np.unique(labels)}
     print(f"6-clique graph -> {len(sizes)} components, sizes "
           f"{sorted(sizes.values())}")
@@ -38,23 +40,24 @@ def main() -> None:
 
     mols = molecule_batch(num_graphs=8, nodes_per_graph=10,
                           edges_per_graph=14)
-    mol_labels = np.asarray(
-        connected_components(mols.edges, mols.num_nodes).labels)
+    mol_labels = np.asarray(solve(mols.edges, mols.num_nodes).labels)
     blocks = mol_labels // 10
     node_blocks = np.arange(mols.num_nodes) // 10
     assert (blocks == node_blocks).all(), \
         "component labels crossed molecule boundaries!"
     print("molecule batch verified block-diagonal via CC ✓")
 
-    # 3: Pallas kernel backend
-    got = np.asarray(connected_components_pallas(g.edges, g.num_nodes))
+    # 3: per-round Pallas kernel backend, same facade door
+    got = np.asarray(solver.solve(backend="pallas").labels)
     assert np.array_equal(got, labels)
     print("Pallas hook/multi_jump kernel backend matches ✓")
 
     # 4: distributed CC (mesh of whatever devices exist)
     mesh = jax.sharding.Mesh(np.array(jax.devices()), ("data",))
-    dist = np.asarray(distributed_connected_components(
-        g, mesh, axis_names=("data",)))
+    dist_solver = Solver.open(g, mesh=mesh)
+    plan = dist_solver.plan()
+    assert plan.backend == "distributed" and plan.reason == "sharded"
+    dist = np.asarray(dist_solver.solve().labels)
     assert np.array_equal(
         dist, connected_components_oracle(g.edges, g.num_nodes))
     print(f"distributed CC over {mesh.devices.size} device(s) matches ✓")

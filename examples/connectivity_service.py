@@ -1,6 +1,11 @@
 """Connectivity-as-a-service: multi-tenant live graphs under mixed
 insert/delete/query traffic (DESIGN.md §7, §9).
 
+Every tenant is a ``repro.Solver`` session under the hood (DESIGN.md
+§10): the registry adds naming, stats, and version-stamped query
+caching on top of the facade's policy routing — so the service stack
+and a hand-held ``Solver`` behave identically by construction.
+
 Two tenants share one registry — a power-law "social" graph (R-MAT)
 and a high-diameter "road" grid. A stream of interleaved edge-insert,
 edge-delete, and connectivity-query requests flows through the

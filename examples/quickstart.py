@@ -1,36 +1,51 @@
-"""Quickstart: the paper's adaptive Connected Components in 30 lines.
+"""Quickstart: the paper's adaptive Connected Components in 10 lines.
 
-Runs all four Hook–Compress variants on a scaled road network + a
-power-law graph, validates against the union-find oracle, and prints the
-work counters that explain the paper's speedups.
+One front door — ``repro.Solver`` — routes every call through the
+adaptive policy (the paper's 2|E|/|V| rule + a measured autotune
+cache) and a pluggable backend registry, and the decision is
+inspectable via ``plan().explain()`` BEFORE anything runs.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core.cc import METHODS, connected_components, num_components
+from repro import Solver
 from repro.core.unionfind import connected_components_oracle
 from repro.graphs.generators import table1_scaled
 
+# --- the 10-line intro ---------------------------------------------------
+g = table1_scaled("usa-osm", scale=1 / 512, seed=0)
+solver = Solver.open(g)                       # a session
+print(solver.plan().explain())                # the adaptive decision
+result = solver.solve()                       # CCResult(labels, work)
+print(f"components: {solver.num_components():,} "
+      f"(hook_ops={int(result.work.hook_ops):,})")
+solver.insert([[0, g.num_nodes - 1]])         # streaming mutation
+print(f"connected(0, |V|-1) after insert: "
+      f"{solver.connected(0, g.num_nodes - 1)}")
+# -------------------------------------------------------------------------
 
-def main() -> None:
+
+def method_sweep() -> None:
+    """The Fig. 5 ladder through the same facade: force each backend,
+    validate against the union-find oracle, compare work counters."""
     for name in ("usa-osm", "kron-logn21"):
-        g = table1_scaled(name, scale=1 / 512, seed=0)
-        print(f"\n=== {name}-scaled: |V|={g.num_nodes:,} "
-              f"|E|={g.num_edges:,} avg_deg={g.avg_degree:.2f} ===")
-        oracle = connected_components_oracle(g.edges, g.num_nodes)
-        print(f"components: {num_components(oracle):,}")
-        print(f"{'method':<12} {'sync_rounds':>11} {'hook_ops':>12} "
+        gr = table1_scaled(name, scale=1 / 512, seed=0)
+        s = Solver.open(gr)
+        oracle = connected_components_oracle(gr.edges, gr.num_nodes)
+        print(f"\n=== {name}-scaled: |V|={gr.num_nodes:,} "
+              f"|E|={gr.num_edges:,} avg_deg={gr.avg_degree:.2f} "
+              f"auto->{s.plan().backend} ===")
+        print(f"{'backend':<12} {'sync_rounds':>11} {'hook_ops':>12} "
               f"{'jump_sweeps':>11}")
-        for method in METHODS:
-            res = connected_components(g.edges, g.num_nodes,
-                                       method=method)
-            assert np.array_equal(np.asarray(res.labels), oracle), method
+        for backend in ("soman", "multijump", "atomic_hook", "adaptive"):
+            res = s.solve(backend=backend)
+            assert np.array_equal(np.asarray(res.labels), oracle), backend
             w = res.work
-            print(f"{method:<12} {int(w.sync_rounds):>11} "
+            print(f"{backend:<12} {int(w.sync_rounds):>11} "
                   f"{int(w.hook_ops):>12} {int(w.jump_sweeps):>11}")
-        print("all variants match the union-find oracle ✓")
+        print("all backends match the union-find oracle ✓")
 
 
 if __name__ == "__main__":
-    main()
+    method_sweep()

@@ -1,22 +1,23 @@
-"""Streaming connectivity: absorb edge insertions without recomputing.
+"""Streaming connectivity through the facade: absorb edge insertions
+without recomputing.
 
 A stream of edge batches (think: new friendships, new road segments)
-arrives against a fixed vertex set. ``IncrementalCC`` (DESIGN.md §6;
-Hong et al.) hooks ONLY the new edges into the existing canonical label
-array and re-compresses — a batch that lands inside existing components
-costs zero hook rounds — while staying bit-identical to a from-scratch
-run on the accumulated edge set.
+arrives against a fixed vertex set. A ``repro.Solver`` session routes
+every batch through the adaptive policy (DESIGN.md §6, §10; Hong et
+al.): small deltas are absorbed incrementally — a batch that lands
+inside existing components costs zero hook rounds — while staying
+bit-identical to a from-scratch run on the accumulated edge set.
 
-Also shows the batched engine: the same shared adaptive core, vmapped
-over a fleet of small graphs in one device program (DESIGN.md §4).
+Also shows the batched backend: the same shared adaptive core, vmapped
+over a fleet of small graphs in one device program per shape bucket
+(``Solver.solve_batch``; DESIGN.md §4).
 
     PYTHONPATH=src python examples/streaming_cc.py
 """
 import numpy as np
 
-from repro.core.batch import connected_components_batched
-from repro.core.cc import connected_components, num_components
-from repro.core.incremental import IncrementalCC
+from repro import Solver, solve
+from repro.connectivity import count_components
 from repro.core.unionfind import connected_components_oracle
 from repro.graphs.generators import grid_road, rmat
 
@@ -28,42 +29,41 @@ def main() -> None:
     rng = np.random.default_rng(0)
     batches = np.array_split(rng.permutation(edges.shape[0]), 6)
 
-    inc = IncrementalCC(g.num_nodes)
+    s = Solver.open(num_nodes=g.num_nodes)
     acc = np.zeros((0, 2), np.int32)
     full_hook_ops = 0
     for i, sel in enumerate(batches):
-        inc.insert(edges[sel])
+        s.insert(edges[sel])
         acc = np.concatenate([acc, edges[sel]], axis=0)
-        full = connected_components(acc, g.num_nodes, method="adaptive")
+        full = solve(acc, g.num_nodes, method="adaptive")
         full_hook_ops += int(full.work.hook_ops)
-        assert np.array_equal(np.asarray(inc.labels),
+        assert np.array_equal(np.asarray(s.labels),
                               np.asarray(full.labels))
         print(f"batch {i}: +{sel.size:4d} edges -> "
-              f"{inc.num_components():4d} components "
+              f"{s.num_components():4d} components via {s.last_method} "
               f"(incremental == full recompute ✓)")
 
     want = connected_components_oracle(edges, g.num_nodes)
-    assert np.array_equal(np.asarray(inc.labels), want)
-    saved = full_hook_ops / max(inc.work["hook_ops"], 1)
-    print(f"hook_ops: incremental {inc.work['hook_ops']} vs "
+    assert np.array_equal(np.asarray(s.labels), want)
+    saved = full_hook_ops / max(s.work["hook_ops"], 1)
+    print(f"hook_ops: facade stream {s.work['hook_ops']} vs "
           f"{full_hook_ops} for per-batch full recompute "
           f"({saved:.1f}x less hook work)")
 
     # 2: a no-op batch (already-connected edges) is nearly free
-    before = inc.work["hook_rounds"]
-    inc.insert(edges[:64])               # duplicates of absorbed edges
+    before = s.work["hook_rounds"]
+    s.insert(edges[:64])                 # duplicates of absorbed edges
     print(f"re-inserting 64 known edges cost "
-          f"{inc.work['hook_rounds'] - before} hook rounds")
+          f"{s.work['hook_rounds'] - before} hook rounds")
 
-    # 3: batched engine — a fleet of small graphs, one device program
-    fleet = [rmat(5, 3, seed=s) for s in range(32)]
-    results = connected_components_batched(fleet)
-    comps = [num_components(r.labels) for r in results]
+    # 3: batched backend — a fleet of small graphs, one device program
+    fleet = [rmat(5, 3, seed=sd) for sd in range(32)]
+    results = Solver.solve_batch(fleet)
+    comps = [int(count_components(r.labels)) for r in results]
     for gr, r in zip(fleet, results):
         assert np.array_equal(
             np.asarray(r.labels),
-            np.asarray(connected_components(gr.edges,
-                                            gr.num_nodes).labels))
+            np.asarray(solve(gr.edges, gr.num_nodes).labels))
     print(f"batched CC over {len(fleet)} graphs (bit-identical to "
           f"per-graph runs ✓); component counts: "
           f"min={min(comps)} max={max(comps)}")

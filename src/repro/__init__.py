@@ -1,0 +1,39 @@
+"""repro — adaptive work-efficient Connected Components on TPU (JAX).
+
+The public surface is the ``repro.api`` facade, re-exported here::
+
+    from repro import Solver, solve
+
+    res = solve(edges, num_nodes)            # one-shot, method="auto"
+    s = Solver.open(edges, num_nodes)        # a session
+    print(s.plan().explain())                # the adaptive decision
+
+Engine subpackages (``repro.core``, ``repro.connectivity``,
+``repro.graphs``, ``repro.kernels``) stay importable for power users,
+but new code should come through the front door — everything routed
+through ``Solver``/``BACKENDS`` gets policy selection, autotuning, and
+inspectable plans for free.
+"""
+from repro.api import (BACKENDS, Backend, Capabilities, CCResult,
+                       DeviceGraph, ExecutionPlan, Solver, WorkCounters,
+                       available_backends, capability_matrix, get_backend,
+                       register_backend, solve)
+
+__version__ = "0.5.0"
+
+__all__ = [
+    "__version__",
+    "Solver",
+    "solve",
+    "ExecutionPlan",
+    "Backend",
+    "Capabilities",
+    "BACKENDS",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+    "capability_matrix",
+    "CCResult",
+    "WorkCounters",
+    "DeviceGraph",
+]

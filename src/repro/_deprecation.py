@@ -1,0 +1,28 @@
+"""Warn-once deprecation plumbing for the legacy entrypoints.
+
+Every pre-facade entrypoint (``connected_components`` and friends) now
+forwards into ``repro.api`` and emits a ``DeprecationWarning`` exactly
+once per process per entrypoint — loud enough to migrate callers,
+quiet enough not to spam a hot loop. ``reset()`` exists for tests that
+pin the exactly-once contract.
+"""
+from __future__ import annotations
+
+import warnings
+
+_WARNED: set[str] = set()
+
+
+def warn_once(legacy: str, replacement: str) -> None:
+    """Emit one ``DeprecationWarning`` per process for ``legacy``."""
+    if legacy in _WARNED:
+        return
+    _WARNED.add(legacy)
+    warnings.warn(
+        f"{legacy} is deprecated; use {replacement} (the repro.api "
+        "facade) instead", DeprecationWarning, stacklevel=3)
+
+
+def reset() -> None:
+    """Forget which entrypoints warned (test hook)."""
+    _WARNED.clear()

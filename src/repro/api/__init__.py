@@ -1,0 +1,47 @@
+"""repro.api — the unified public API (DESIGN.md §10).
+
+One front door to the paper's adaptivity: the ``Solver`` facade routes
+every workload shape (one-shot, batched, streaming insert/delete,
+sharded) through the adaptive policy and a pluggable ``BACKENDS``
+registry, and reifies each decision as an inspectable
+``ExecutionPlan``::
+
+    from repro import Solver
+
+    s = Solver.open(edges, num_nodes=n)      # a session
+    print(s.plan().explain())                # the adaptive decision
+    res = s.solve()                          # CCResult(labels, work)
+    s.insert(more_edges); s.delete(dead_edges)
+    s.connected(u, v); s.num_components()
+
+Backends register with one decorator (``register_backend``); the
+capability matrix (``capability_matrix()``) and this module's
+``__all__`` are snapshot-tested so the public surface cannot drift
+silently. Legacy entrypoints (``connected_components`` et al.) forward
+here behind one-shot ``DeprecationWarning``s.
+"""
+from repro.api.registry import (BACKENDS, Backend, Capabilities,
+                                available_backends, capability_matrix,
+                                get_backend, register_backend)
+from repro.api.plan import ExecutionPlan
+from repro.api import backends as _backends          # registers built-ins
+from repro.api.solver import Solver, solve
+from repro.core.cc import CCResult
+from repro.core.rounds import WorkCounters
+from repro.graphs.device import DeviceGraph
+
+__all__ = [
+    "Solver",
+    "solve",
+    "ExecutionPlan",
+    "Backend",
+    "Capabilities",
+    "BACKENDS",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+    "capability_matrix",
+    "CCResult",
+    "WorkCounters",
+    "DeviceGraph",
+]

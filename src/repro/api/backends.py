@@ -1,0 +1,174 @@
+"""The built-in backends — every execution mode, one decorator each.
+
+This module is the whole wiring between the facade and the engines:
+each backend is a ``@register_backend`` declaration plus a few lines
+delegating to the engine entry in ``repro.core``. Adding an execution
+mode to the stack = adding one block here (see DESIGN.md §10 for the
+generated capability matrix).
+
+Counter semantics: backends with ``bit_exact_counters=True`` return
+exact true-work ``WorkCounters`` (padding never billed); the fused
+Pallas backend's are additionally bit-identical to the jnp adaptive
+composition (the conformance matrix holds it to that). The per-round
+Pallas, hostloop, and distributed backends return labels with
+zero/partial counters — their value is wall-clock/launch-count
+comparison, not work billing.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.plan import ExecutionPlan
+from repro.api.registry import Capabilities, register_backend
+from repro.core import batch as batch_mod
+from repro.core import cc as cc_mod
+from repro.core import distributed as dist_mod
+from repro.core.cc import CCResult
+from repro.core.incremental import DynamicCC, IncrementalCC
+from repro.core.rounds import WorkCounters
+
+__all__ = []            # nothing public; importing registers everything
+
+
+# ---------------------------------------------------------------------------
+# Single-graph jnp variants (the paper's Fig. 5 ladder)
+# ---------------------------------------------------------------------------
+
+def _register_jnp_variant(method: str) -> None:
+    @register_backend(method, Capabilities(static=True,
+                                           bit_exact_counters=True))
+    def _run(plan: ExecutionPlan, _method=method) -> CCResult:
+        return cc_mod.solve_static(plan.graph, method=_method,
+                                   num_segments=plan.num_segments,
+                                   lift_steps=plan.lift_steps)
+
+
+for _m in cc_mod.METHODS:       # soman multijump atomic_hook adaptive labelprop
+    _register_jnp_variant(_m)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel backends
+# ---------------------------------------------------------------------------
+
+@register_backend("pallas_fused",
+                  Capabilities(static=True, bit_exact_counters=True))
+def _pallas_fused(plan: ExecutionPlan) -> CCResult:
+    """The whole Fig. 4 segment scan in ONE pallas_call (DESIGN.md §8);
+    labels AND counters bit-identical to the jnp adaptive composition."""
+    return cc_mod.solve_static(plan.graph, method=cc_mod.FUSED_METHOD,
+                               num_segments=plan.num_segments,
+                               lift_steps=plan.lift_steps)
+
+
+@register_backend("pallas", Capabilities(static=True,
+                                         bit_exact_counters=False))
+def _pallas_per_round(plan: ExecutionPlan) -> CCResult:
+    """Per-round Pallas kernels (one launch per segment hook / compress
+    sweep). Labels only — counters are zeros by contract."""
+    labels = cc_mod.solve_pallas(plan.graph,
+                                 num_segments=plan.num_segments,
+                                 lift_steps=plan.lift_steps,
+                                 interpret=plan.opts.get("interpret"))
+    return CCResult(labels, WorkCounters.zeros())
+
+
+# ---------------------------------------------------------------------------
+# Host-driven baseline loop (benchmarking: the GPU baseline's syncs)
+# ---------------------------------------------------------------------------
+
+@register_backend("hostloop", Capabilities(static=True, device_loop=False,
+                                           bit_exact_counters=False))
+def _hostloop(plan: ExecutionPlan) -> CCResult:
+    """Soman/multijump under HOST control flow — one device round trip
+    per convergence check. The raw loop stats land in
+    ``plan.artifacts["hostloop_stats"]``."""
+    g = plan.graph
+    t = g.true_edges_static
+    edges = np.asarray(g.edges)
+    if t is not None:
+        edges = edges[:t]
+    labels, stats = cc_mod.solve_hostloop(
+        edges, g.num_nodes,
+        method=plan.opts.get("hostloop_method", "soman"))
+    plan.artifacts["hostloop_stats"] = stats
+    work = WorkCounters.zeros().add(
+        hook_rounds=stats["hook_rounds"], jump_sweeps=stats["jump_sweeps"],
+        sync_rounds=stats["sync_rounds"])
+    return CCResult(jnp.asarray(labels), work)
+
+
+# ---------------------------------------------------------------------------
+# Batched engine (many graphs, one device program per shape bucket)
+# ---------------------------------------------------------------------------
+
+@register_backend("batched", Capabilities(static=True, batched=True,
+                                          bit_exact_counters=True))
+def _batched(plan: ExecutionPlan) -> list[CCResult]:
+    """Shape-bucketed vmapped engine; one ``CCResult`` per input graph,
+    bit-identical to per-graph adaptive runs."""
+    return batch_mod.solve_batched(plan.graphs,
+                                   num_segments=plan.num_segments,
+                                   lift_steps=plan.lift_steps)
+
+
+# ---------------------------------------------------------------------------
+# Streaming engines (live state via make_state)
+# ---------------------------------------------------------------------------
+
+@register_backend("incremental",
+                  Capabilities(static=True, streaming=True,
+                               bit_exact_counters=True))
+class _Incremental:
+    """Insert-only streaming engine (Hong et al.; DESIGN.md §6)."""
+
+    def make_state(self, num_nodes: int, *, lift_steps: int = 2,
+                   scan_method: str | None = None) -> IncrementalCC:
+        return IncrementalCC(num_nodes, lift_steps=lift_steps)
+
+    def run(self, plan: ExecutionPlan) -> CCResult:
+        state = self.make_state(plan.num_nodes,
+                                lift_steps=plan.lift_steps)
+        state.insert_graph(plan.graph)
+        return CCResult(state.labels, WorkCounters(**state.work))
+
+
+@register_backend("dynamic",
+                  Capabilities(static=True, streaming=True, deletions=True,
+                               bit_exact_counters=True))
+class _Dynamic:
+    """Fully-dynamic engine: tombstone log + scoped recompute
+    (DESIGN.md §9). ``Solver`` sessions get their live state here."""
+
+    def make_state(self, num_nodes: int, *, lift_steps: int = 2,
+                   scan_method: str | None = None) -> DynamicCC:
+        return DynamicCC(num_nodes, lift_steps=lift_steps,
+                         scan_method=scan_method or "jnp")
+
+    def run(self, plan: ExecutionPlan) -> CCResult:
+        state = self.make_state(plan.num_nodes,
+                                lift_steps=plan.lift_steps)
+        state.insert_graph(plan.graph)
+        return CCResult(state.labels, WorkCounters(**state.work))
+
+
+# ---------------------------------------------------------------------------
+# Distributed engine (spatial segmentation across a mesh)
+# ---------------------------------------------------------------------------
+
+@register_backend("distributed",
+                  Capabilities(static=True, sharded=True,
+                               bit_exact_counters=False))
+def _distributed(plan: ExecutionPlan) -> CCResult:
+    """shard_map engine over the plan's mesh (DESIGN.md §5). Labels
+    only — per-chip counters are not folded globally."""
+    mesh = plan.opts.get("mesh")
+    if mesh is None:
+        raise ValueError("the distributed backend needs a mesh "
+                         "(Solver.open(graph, mesh=...))")
+    labels = dist_mod.solve_distributed(
+        plan.graph, mesh,
+        axis_names=plan.opts.get("axis_names", ("data",)),
+        lift_steps=plan.lift_steps)
+    return CCResult(labels, WorkCounters.zeros())

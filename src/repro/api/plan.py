@@ -1,0 +1,81 @@
+"""ExecutionPlan — the adaptive decision as an inspectable object.
+
+The paper's contribution is picking the right CC schedule per input;
+before this module that decision vanished inside ``method="auto"``
+string plumbing. ``Solver.plan()`` reifies it: which backend runs,
+why (forced override / measured autotune winner / the paper's
+heuristic), which power-of-two shape bucket the graph lands in (the
+jit-cache and autotune key), the segmentation plan (s = 2|E|/|V|),
+and the predicted per-round work. ``plan.explain()`` renders it for
+humans; ``plan.run()`` executes it through the ``BACKENDS`` registry.
+
+A plan is cheap host metadata and performs no host<->device transfers,
+so the steady-state mutation paths can plan under
+``jax.transfer_guard("disallow")``. On a static, device-resident
+session planning touches the device not at all; on a live streaming
+session the plan captures the log's compacted alive view, which lazily
+enqueues one on-device compaction program (still transfer-free).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+from repro.core.segmentation import SegmentationPlan
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    """One routed execution: backend choice + everything that drove it."""
+
+    backend: str                   # BACKENDS key that will run
+    reason: str                    # forced | autotune | heuristic | policy | sharded
+    num_nodes: int
+    num_edges: int                 # true edges when statically known
+    bucket: tuple                  # pow2 (V_pad, E_pad) — jit/autotune key
+    segmentation: Optional[SegmentationPlan]
+    lift_steps: int = 2
+    num_segments: Optional[int] = None      # caller override (None = heuristic)
+    graph: Any = dataclasses.field(default=None, repr=False)
+    graphs: Any = dataclasses.field(default=None, repr=False)   # batched plans
+    opts: dict = dataclasses.field(default_factory=dict, repr=False)
+    predicted: dict = dataclasses.field(default_factory=dict)
+    artifacts: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    @property
+    def bucket_key(self) -> str:
+        """The autotune-cache spelling of the shape bucket."""
+        return f"v{self.bucket[0]}_e{self.bucket[1]}"
+
+    def run(self):
+        """Execute through the registered backend; returns its
+        ``CCResult`` (a list of them for batched plans). Extra outputs
+        land in ``self.artifacts``."""
+        from repro.api.registry import get_backend
+        return get_backend(self.backend).run(self)
+
+    def explain(self) -> str:
+        """Human-readable account of the adaptive decision."""
+        from repro.api.registry import BACKENDS
+        lines = [f"plan: backend={self.backend} ({self.reason})"]
+        if self.graphs is not None:
+            lines.append(f"  batch: {len(self.graphs)} graphs, "
+                         f"total |E|={self.num_edges}")
+        density = 2.0 * self.num_edges / max(self.num_nodes, 1)
+        lines.append(f"  graph: |V|={self.num_nodes} |E|={self.num_edges} "
+                     f"density={density:.2f} bucket={self.bucket_key}")
+        s = self.segmentation
+        if s is not None:
+            src = "override" if self.num_segments is not None \
+                else "s=2|E|/|V| heuristic"
+            lines.append(f"  segmentation: {s.num_segments} segment(s) x "
+                         f"{s.segment_size} edges (padded {s.padded_edges}"
+                         f"; {src})")
+        if self.predicted:
+            lines.append("  predicted: " + " ".join(
+                f"{k}={v}" for k, v in sorted(self.predicted.items())))
+        backend = BACKENDS.get(self.backend)
+        if backend is not None:
+            lines.append(f"  capabilities: "
+                         f"{backend.capabilities.describe()}")
+        return "\n".join(lines)

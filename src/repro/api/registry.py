@@ -1,0 +1,138 @@
+"""Backend protocol + the pluggable ``BACKENDS`` registry (DESIGN.md §10).
+
+Every execution mode of the stack — the five jnp single-graph variants,
+the per-round and fused Pallas kernel backends, the host-driven
+baseline loop, the shape-bucketed batched engine, the incremental and
+fully-dynamic streaming engines, and the sharded distributed engine —
+registers here under a uniform contract:
+
+  * a ``Capabilities`` descriptor saying what workloads the backend can
+    take (static / batched / streaming / deletions / sharded) and
+    whether its ``WorkCounters`` are bit-exact against the jnp adaptive
+    composition (the repo's counter ground truth);
+  * a ``run(plan) -> CCResult`` entry point consuming an
+    ``ExecutionPlan`` (``repro.api.plan``);
+  * optionally a ``make_state(num_nodes, ...)`` factory for streaming
+    backends — the ``Solver`` session asks the registry for its live
+    state instead of hard-coding an engine class.
+
+Adding a backend is a one-file, one-decorator change::
+
+    @register_backend("my-engine", Capabilities(static=True))
+    def _run(plan):
+        return my_engine(plan.graph, lift_steps=plan.lift_steps)
+
+The ``Solver`` facade and the adaptive policy then route to it by name;
+nothing else in the stack needs to know it exists.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Protocol, runtime_checkable
+
+
+@dataclasses.dataclass(frozen=True)
+class Capabilities:
+    """What a backend can run, as data (the capability matrix in
+    DESIGN.md §10 is generated from these)."""
+
+    static: bool = True            # one-shot solve over a fixed edge set
+    batched: bool = False          # many graphs, one device program
+    streaming: bool = False        # absorbs edge insertions into live state
+    deletions: bool = False        # absorbs edge deletions (tombstone log)
+    sharded: bool = False          # runs over a multi-device mesh
+    device_loop: bool = True       # control flow on device (no host syncs)
+    # exact true-work WorkCounters (padding never billed; trustworthy
+    # for cross-mode comparison — pallas_fused's are additionally
+    # bit-identical to the jnp adaptive composition, asserted in tests)
+    bit_exact_counters: bool = False
+
+    def describe(self) -> str:
+        flag = lambda b: "y" if b else "n"          # noqa: E731
+        return (f"static={flag(self.static)} batched={flag(self.batched)} "
+                f"streaming={flag(self.streaming)} "
+                f"deletions={flag(self.deletions)} "
+                f"sharded={flag(self.sharded)} "
+                f"device_loop={flag(self.device_loop)} "
+                f"bit_exact_counters={flag(self.bit_exact_counters)}")
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """The uniform backend contract the Solver dispatches against."""
+
+    name: str
+    capabilities: Capabilities
+
+    def run(self, plan: Any) -> Any:                 # -> CCResult (or list)
+        ...
+
+
+class _FunctionBackend:
+    """Adapter: a plain ``run(plan)`` function as a Backend."""
+
+    def __init__(self, name: str, capabilities: Capabilities,
+                 fn: Callable[[Any], Any],
+                 make_state: Optional[Callable[..., Any]] = None):
+        self.name = name
+        self.capabilities = capabilities
+        self._fn = fn
+        self._make_state = make_state
+
+    def run(self, plan):
+        return self._fn(plan)
+
+    def make_state(self, num_nodes: int, **kw):
+        if self._make_state is None:
+            raise TypeError(f"backend {self.name!r} is not a streaming "
+                            "backend (no make_state)")
+        return self._make_state(num_nodes, **kw)
+
+    def __repr__(self) -> str:
+        return f"<Backend {self.name!r} {self.capabilities.describe()}>"
+
+
+BACKENDS: Dict[str, Backend] = {}
+
+
+def register_backend(name: str, capabilities: Capabilities,
+                     make_state: Optional[Callable[..., Any]] = None):
+    """Class/function decorator registering an execution backend.
+
+    Decorate either a class exposing ``run(self, plan)`` (instantiated
+    once, ``name``/``capabilities`` attached) or a bare ``run(plan)``
+    function (wrapped). ``make_state`` (or a ``make_state`` method on
+    the class) marks a streaming backend whose live session state the
+    ``Solver`` obtains through the registry.
+    """
+    def deco(obj):
+        if name in BACKENDS:
+            raise ValueError(f"backend {name!r} already registered")
+        if isinstance(obj, type):
+            backend = obj()
+            backend.name = name
+            backend.capabilities = capabilities
+        else:
+            backend = _FunctionBackend(name, capabilities, obj,
+                                       make_state=make_state)
+        BACKENDS[name] = backend
+        return obj
+    return deco
+
+
+def get_backend(name: str) -> Backend:
+    if name not in BACKENDS:
+        raise KeyError(f"unknown backend {name!r}; registered backends: "
+                       f"{sorted(BACKENDS)}")
+    return BACKENDS[name]
+
+
+def available_backends() -> list[str]:
+    return sorted(BACKENDS)
+
+
+def capability_matrix() -> dict[str, dict]:
+    """``{backend: {capability: bool}}`` — the registry's contents as
+    data (snapshot-tested so the public surface cannot drift silently)."""
+    return {name: dataclasses.asdict(b.capabilities)
+            for name, b in sorted(BACKENDS.items())}

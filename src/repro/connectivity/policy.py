@@ -233,8 +233,11 @@ class AutotuneCache:
         drains in-flight async work with ``block_until_ready`` BEFORE
         starting its timer — otherwise asynchronously dispatched work
         from the previous candidate flatters whichever method is
-        measured next."""
-        from repro.core.cc import connected_components
+        measured next. Candidates run THROUGH the facade
+        (``repro.api.solve``) so the measurement prices exactly what a
+        production ``method="auto"`` call will pay — backend dispatch
+        included."""
+        from repro.api import solve
         if methods is None:
             from repro.kernels import default_interpret
             methods = STATIC_METHODS if default_interpret() \
@@ -242,14 +245,13 @@ class AutotuneCache:
         edges = np.asarray(edges, np.int32).reshape(-1, 2)
         best_method, best_ms = None, float("inf")
         for method in methods:
-            warm = connected_components(edges, num_nodes, method=method)
+            warm = solve(edges, num_nodes, method=method)
             warm.labels.block_until_ready()
             ts = []
             for _ in range(reps):
                 warm.labels.block_until_ready()   # quiesce before t0
                 t0 = time.perf_counter()
-                warm = connected_components(edges, num_nodes,
-                                            method=method)
+                warm = solve(edges, num_nodes, method=method)
                 warm.labels.block_until_ready()
                 ts.append(time.perf_counter() - t0)
             ms = float(np.median(ts)) * 1e3
@@ -285,6 +287,23 @@ def default_cache() -> AutotuneCache:
 # The selection entry point
 # ---------------------------------------------------------------------------
 
+def select_static_explained(num_nodes: int, num_edges: int, *,
+                            cache: AutotuneCache | None = None
+                            ) -> tuple[str, str]:
+    """Static-solve selection WITH its provenance: ``(method, reason)``
+    where reason is ``"autotune"`` (measured cache hit for the shape
+    bucket) or ``"heuristic"`` (the paper's density rule). This is what
+    ``repro.api`` plans report via ``ExecutionPlan.explain()`` —
+    ``select_method`` routes through it so the facade's account of the
+    decision can never drift from the decision itself."""
+    f = extract_features(num_nodes, num_edges)
+    cache = default_cache() if cache is None else cache
+    hit = cache.lookup(f.num_nodes, f.total_edges)
+    if hit is not None:
+        return hit, "autotune"
+    return heuristic_method(f), "heuristic"
+
+
 def select_method(num_nodes: int, num_edges: int, *,
                   delta_edges: int | None = None,
                   delta_deletes: int | None = None,
@@ -302,6 +321,11 @@ def select_method(num_nodes: int, num_edges: int, *,
     static engine). Autotuned winners override the heuristic for the
     static choice.
     """
+    if delta_edges is None and delta_deletes is None:
+        # static call: one shared path with the facade's plan(), so
+        # ExecutionPlan.explain() can never drift from the selection
+        return select_static_explained(num_nodes, num_edges,
+                                       cache=cache)[0]
     f = extract_features(num_nodes, num_edges, delta_edges, delta_deletes)
     choice = heuristic_method(f)
     if choice == INCREMENTAL_ABSORB:

@@ -2,11 +2,13 @@
 query-result caching with partition-precise invalidation.
 
 Each tenant is a named vertex set with a live canonical label array
-backed by the fully-dynamic ``DynamicCC`` (labels + device-resident
-tombstone edge log). Inserts are routed by the adaptive policy
-(``policy.select_method``): a small delta is absorbed incrementally
+backed by a ``repro.api.Solver`` session (DESIGN.md §10) — the facade
+owns the policy routing and the fully-dynamic state (labels +
+device-resident tombstone edge log), the tenant layer adds naming,
+stats, and query caching. Inserts are routed by the adaptive policy
+(``policy.select_for``): a small delta is absorbed incrementally
 (hook only the new edges), a bulk load is rebuilt through the chosen
-static engine and adopted. Deletes are routed by the delete-rate twin
+static backend and adopted. Deletes are routed by the delete-rate twin
 (DESIGN.md §9): a small batch tombstones + scoped-recomputes only the
 affected components, a bulk drop rebuilds the survivors statically.
 Queries run through the on-device kernels (``queries``), with query
@@ -42,10 +44,8 @@ import hashlib
 
 import numpy as np
 
-from repro.connectivity import policy, queries
-from repro.core.batch import pad_rows_pow2
-from repro.core.incremental import DynamicCC
-from repro.graphs.device import DeviceGraph, validate_edge_bounds
+from repro.connectivity import policy
+from repro.graphs.device import DeviceGraph
 
 _MAX_CACHED_RESULTS = 1024      # per tenant; FIFO-evicted
 
@@ -66,31 +66,44 @@ class TenantStats:
 
 
 class TenantGraph:
-    """One live graph: fully-dynamic ``DynamicCC`` state (labels +
-    device-resident tombstone edge log)."""
+    """One live graph: a ``repro.api.Solver`` session (the facade owns
+    the policy routing, the dynamic state, and the transfer-free
+    steady-state contract; the tenant layer adds naming + stats)."""
 
     def __init__(self, name: str, num_nodes: int, *, lift_steps: int = 2,
                  policy_cache: policy.AutotuneCache | None = None):
+        from repro.api import Solver       # lazy: the api chain imports us
         self.name = name
         self.num_nodes = num_nodes
-        self.inc = DynamicCC(num_nodes, lift_steps=lift_steps)
+        self.solver = Solver.open(num_nodes=num_nodes,
+                                  lift_steps=lift_steps,
+                                  policy_cache=policy_cache, name=name)
         self.policy_cache = policy_cache
         self.stats = TenantStats()
-        self.last_method = None                  # last policy decision
+
+    @property
+    def inc(self):
+        """The live dynamic engine (``DynamicCC``) behind the facade."""
+        return self.solver.state
+
+    @property
+    def last_method(self):
+        """Last policy decision (the facade records it)."""
+        return self.solver.last_method
 
     @property
     def version(self) -> int:
         """Label version as a host int (syncs; query-path use)."""
-        return self.inc.version
+        return self.solver.version
 
     @property
     def version_device(self):
         """Label version as a device scalar (no sync; insert-path use)."""
-        return self.inc.version_device
+        return self.solver.version_device
 
     @property
     def labels(self):
-        return self.inc.labels
+        return self.solver.labels
 
     @property
     def num_edges(self) -> int:
@@ -98,16 +111,12 @@ class TenantGraph:
         size feature. Under churn this is an upper bound on the alive
         count (the exact count lives on device; syncing it per
         mutation would defeat the transfer-free tick)."""
-        return self.inc.num_edges_inserted
+        return self.solver.num_edges
 
     def graph(self) -> DeviceGraph:
         """The SURVIVING edge set as ONE compacted DeviceGraph (the
         tombstone log's alive view — no host ``np.concatenate``)."""
-        if self.inc.log.rows == 0:
-            return DeviceGraph.from_edges(
-                np.zeros((0, 2), np.int32), self.num_nodes,
-                name=self.name)
-        return self.inc.graph()
+        return self.solver.graph()
 
     def edges(self) -> np.ndarray:
         """Host view of the surviving edges (syncs; introspection)."""
@@ -116,71 +125,35 @@ class TenantGraph:
         return np.asarray(g.edges)[: int(g.true_edges) if t is None
                                    else t]
 
-    def _coerce(self, new_edges) -> DeviceGraph:
-        """Host arrays are validated + device_put; DeviceGraphs pass
-        through untouched (no sync — the caller owns bounds there)."""
-        if isinstance(new_edges, DeviceGraph):
-            if new_edges.num_nodes != self.num_nodes:
-                raise ValueError(
-                    f"delta num_nodes {new_edges.num_nodes} != "
-                    f"{self.num_nodes}")
-            return new_edges
-        arr = np.asarray(new_edges, np.int32).reshape(-1, 2)
-        validate_edge_bounds(arr, self.num_nodes)
-        return DeviceGraph.from_edges(arr, self.num_nodes,
-                                      name=self.name)
+    def _routed(self, call, arg) -> None:
+        """Run a facade mutation and fold the solver's OWN route
+        counters (taken at the decision point) into the tenant stats —
+        no re-derivation from ``last_method`` strings that could drift
+        from the solver's actual classification."""
+        before = dict(self.solver.stats)
+        call(arg)
+        after = self.solver.stats
+        for field in ("inserts", "deletes", "absorbs", "scoped_deletes",
+                      "rebuilds"):
+            setattr(self.stats, field,
+                    getattr(self.stats, field)
+                    + after[field] - before[field])
 
     def insert(self, new_edges) -> None:
-        """Insert an edge batch (DeviceGraph or host array). The merge
-        decision (version tick) happens ON DEVICE inside the absorb —
-        this path never syncs; read ``version``/``version_device`` to
-        observe it."""
-        delta = self._coerce(new_edges)
-        method = policy.select_for(self.num_nodes, self.num_edges,
-                                   delta, cache=self.policy_cache)
-        self.last_method = method
-        if method == policy.INCREMENTAL_ABSORB:
-            self.inc.insert_graph(delta)     # logs + absorbs
-            self.stats.absorbs += 1
-        else:
-            # bulk load: the accumulated set is mostly this batch — the
-            # chosen static engine (segmentation and all) beats hooking
-            # a huge unsegmented delta through the absorb loop
-            from repro.core.cc import connected_components
-            self.inc.stage(delta)            # log only; adopt accounts
-            res = connected_components(self.graph(), method=method)
-            self.inc.adopt(res.labels, work=res.work,
-                           num_edges=delta.num_edges)
-            self.stats.rebuilds += 1
-        self.stats.inserts += 1
+        """Insert an edge batch (DeviceGraph or host array) through the
+        facade. The merge decision (version tick) happens ON DEVICE
+        inside the absorb — this path never syncs; read
+        ``version``/``version_device`` to observe it."""
+        self._routed(self.solver.insert, new_edges)
 
     def delete(self, dels) -> None:
         """Delete an edge batch (DeviceGraph or host array; each row
         retires every alive copy of that undirected edge, absent rows
-        are no-ops). Routed by the delete-rate policy: a small batch
-        tombstones + scoped-recomputes in ONE device program
-        (``DynamicCC.delete_graph`` — the version ticks iff a
-        component actually split, mirroring the insert path's merge
-        tick); a bulk drop tombstones and rebuilds the survivors
-        through a static engine. Never syncs."""
-        batch = self._coerce(dels)
-        method = policy.select_for(self.num_nodes, self.num_edges,
-                                   batch, delete=True,
-                                   cache=self.policy_cache)
-        self.last_method = method
-        if method in policy.DELETE_METHODS:
-            self.inc.scan_method = \
-                "pallas_fused" if method == policy.DYNAMIC_DELETE_FUSED \
-                else "jnp"
-            self.inc.delete_graph(batch)
-            self.stats.scoped_deletes += 1
-        else:
-            from repro.core.cc import connected_components
-            self.inc.tombstone_graph(batch)
-            res = connected_components(self.graph(), method=method)
-            self.inc.adopt(res.labels, work=res.work)
-            self.stats.rebuilds += 1
-        self.stats.deletes += 1
+        are no-ops) through the facade: small batch → tombstone +
+        scoped recompute (version ticks iff a component actually
+        split), bulk drop → static rebuild over survivors. Never
+        syncs."""
+        self._routed(self.solver.delete, dels)
 
 
 class GraphRegistry:
@@ -270,23 +243,17 @@ class GraphRegistry:
 
     def _batched_query(self, name: str, kind: str, batch: np.ndarray,
                        shape: tuple) -> np.ndarray:
-        """Shared validate/pad/cache path for vertex-batch queries:
-        bounds-check, pad to the power-of-two buckets (so every
-        same-shape batch — across all tenants of one |V| — hits one jit
-        cache entry), run the kernel, slice off the padding; cached by
-        content + label version."""
+        """Version-stamped cache over the facade's batch-query path —
+        the ONE validate/pad/slice implementation lives on ``Solver``
+        (bounds check, pow2 bucket padding so every same-shape batch
+        across all tenants of one |V| hits one jit cache entry); this
+        layer only adds content-digest caching."""
         batch = np.asarray(batch, np.int32).reshape(shape)
-        t = self.get(name)
-        if batch.size and (batch.min() < 0 or batch.max() >= t.num_nodes):
-            raise ValueError(f"vertex out of range [0, {t.num_nodes})")
-        q = batch.shape[0]
-        kernel = getattr(queries, kind)
         # digest, not raw bytes: keys stay O(1) even for huge batches
         digest = hashlib.blake2b(batch.tobytes(), digest_size=16).digest()
         return self._cached(
             name, (kind, batch.shape, digest),
-            lambda t: np.asarray(kernel(t.labels,
-                                        pad_rows_pow2(batch)))[:q])
+            lambda t: getattr(t.solver, kind)(batch))
 
     def same_component(self, name: str, pairs) -> np.ndarray:
         """bool [Q] for an int [Q, 2] pair batch."""
@@ -300,12 +267,12 @@ class GraphRegistry:
     def count_components(self, name: str) -> int:
         return int(self._cached(
             name, ("count_components",),
-            lambda t: queries.count_components(t.labels)))
+            lambda t: t.solver.num_components()))
 
     def component_histogram(self, name: str) -> np.ndarray:
         return np.asarray(self._cached(
             name, ("component_histogram",),
-            lambda t: queries.component_histogram(t.labels)))
+            lambda t: t.solver.component_histogram()))
 
     # -- introspection -----------------------------------------------------
 

@@ -1,6 +1,10 @@
 """Slot-based connectivity query engine: microbatched interleaved
 insert/query traffic over the multi-tenant registry.
 
+Every tenant behind the registry is a ``repro.api.Solver`` session
+(DESIGN.md §10), so the service inherits the facade's policy routing
+and transfer-free steady-state mutation contract by construction.
+
 Mirrors the admit/step/retire idiom of ``repro.serving.engine``: a
 bounded number of request slots per tick; each tick admits queued
 requests, executes them in two phases, and retires them with results.

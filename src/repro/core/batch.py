@@ -154,13 +154,14 @@ def bucketize(graphs: Sequence[tuple[np.ndarray, int]]
     return out
 
 
-def connected_components_batched(
+def solve_batched(
     graphs: Sequence, *,
     num_segments: int | None = None,
     lift_steps: int = 2,
 ) -> list[CCResult]:
     """Adaptive CC over a batch of graphs, one device program per shape
-    bucket.
+    bucket (engine entry for the facade's ``batched`` backend; callers
+    should go through ``repro.api.Solver.solve_batch``).
 
     Args:
       graphs: sequence of ``repro.graphs.format.Graph`` objects or
@@ -210,3 +211,18 @@ def connected_components_batched(
                 labels=labels[row, :n],
                 work=WorkCounters(*(c[row] for c in work)))
     return results  # type: ignore[return-value]
+
+
+def connected_components_batched(
+    graphs: Sequence, *,
+    num_segments: int | None = None,
+    lift_steps: int = 2,
+) -> list[CCResult]:
+    """DEPRECATED legacy entrypoint — forwards through the facade's
+    ``batched`` backend, bit-identical results."""
+    from repro._deprecation import warn_once
+    from repro.api import Solver
+    warn_once("repro.core.batch.connected_components_batched",
+              "repro.api.Solver.solve_batch")
+    return Solver.solve_batch(graphs, num_segments=num_segments,
+                              lift_steps=lift_steps)

@@ -27,7 +27,10 @@ The round primitives (hook, compress, segment scan, cleanup loop) live
 in ``repro.core.rounds`` and are shared with the batched
 (``repro.core.batch``), incremental (``repro.core.incremental``), and
 distributed (``repro.core.distributed``) engines; this module keeps the
-single-graph variants and the public API. Work accounting (the paper's
+single-graph variants and their engine entries (``solve_static`` /
+``solve_pallas`` / ``solve_hostloop``) — the PUBLIC door is the
+``repro.api`` facade, which the deprecated ``connected_components*``
+shims forward into. Work accounting (the paper's
 currency) bills *true* edge counts — padding is free; see
 ``rounds.WorkCounters`` for the counter glossary.
 """
@@ -206,7 +209,7 @@ def _cc_fused_jit(edges, true_edges, *, num_nodes, num_segments,
     return CCResult(pi, work.add(sync_rounds=1))
 
 
-def connected_components(
+def solve_static(
     graph,
     num_nodes: int | None = None,
     method: str = "adaptive",
@@ -214,7 +217,10 @@ def connected_components(
     num_segments: int | None = None,
     lift_steps: int = 2,
 ) -> CCResult:
-    """Compute connected components.
+    """Compute connected components (the engine entry the ``repro.api``
+    backends dispatch to; callers should go through the facade —
+    ``repro.api.solve`` / ``Solver`` — which adds policy routing and
+    inspectable plans).
 
     Args:
       graph: a ``repro.graphs.device.DeviceGraph`` (the native input),
@@ -266,6 +272,25 @@ def connected_components(
                    lift_steps=lift_steps)
 
 
+def connected_components(
+    graph,
+    num_nodes: int | None = None,
+    method: str = "adaptive",
+    *,
+    num_segments: int | None = None,
+    lift_steps: int = 2,
+) -> CCResult:
+    """DEPRECATED legacy entrypoint — forwards through the
+    ``repro.api`` facade (``Solver``/``BACKENDS``), bit-identical to
+    calling it directly. Use ``repro.api.solve`` (one-shot) or
+    ``repro.api.Solver`` (sessions) instead."""
+    from repro._deprecation import warn_once
+    from repro.api import solve
+    warn_once("repro.core.cc.connected_components", "repro.api.solve")
+    return solve(graph, num_nodes, method,
+                 num_segments=num_segments, lift_steps=lift_steps)
+
+
 # ---------------------------------------------------------------------------
 # Pallas-kernel backend (TPU target; interpret-mode on CPU)
 # ---------------------------------------------------------------------------
@@ -286,14 +311,15 @@ def _cc_adaptive_pallas(edges, *, num_nodes, num_segments, lift_steps,
     return pi
 
 
-def connected_components_pallas(graph, num_nodes: int | None = None, *,
-                                num_segments: int | None = None,
-                                lift_steps: int = 2,
-                                interpret: bool | None = None) -> jnp.ndarray:
+def solve_pallas(graph, num_nodes: int | None = None, *,
+                 num_segments: int | None = None,
+                 lift_steps: int = 2,
+                 interpret: bool | None = None) -> jnp.ndarray:
     """Adaptive CC on the per-round Pallas kernel backend (hook +
     multi_jump kernels; DESIGN.md §2) — one launch per segment hook and
-    per compress sweep. Prefer ``method="pallas_fused"`` for the
-    single-launch fused pipeline. Returns canonical min-id labels."""
+    per compress sweep. Prefer ``backend="pallas_fused"`` for the
+    single-launch fused pipeline. Returns canonical min-id labels.
+    (Engine entry for the ``pallas`` backend; go through the facade.)"""
     from repro.graphs.device import as_device_graph
     from repro.kernels import default_interpret
     interpret = default_interpret() if interpret is None else interpret
@@ -305,6 +331,23 @@ def connected_components_pallas(graph, num_nodes: int | None = None, *,
     return _cc_adaptive_pallas(g.edges, num_nodes=g.num_nodes,
                                num_segments=g.plan.num_segments,
                                lift_steps=lift_steps, interpret=interpret)
+
+
+def connected_components_pallas(graph, num_nodes: int | None = None, *,
+                                num_segments: int | None = None,
+                                lift_steps: int = 2,
+                                interpret: bool | None = None
+                                ) -> jnp.ndarray:
+    """DEPRECATED legacy entrypoint — forwards through the facade's
+    ``pallas`` backend; returns labels only, as before."""
+    from repro._deprecation import warn_once
+    from repro.api import Solver
+    warn_once("repro.core.cc.connected_components_pallas",
+              'repro.api.solve(..., backend="pallas")')
+    res = Solver.open(graph, num_nodes, num_segments=num_segments,
+                      lift_steps=lift_steps).solve(
+        backend="pallas", interpret=interpret)
+    return res.labels
 
 
 # ---------------------------------------------------------------------------
@@ -329,13 +372,14 @@ def _host_compress(pi):
     return pi, w.jump_sweeps
 
 
-def connected_components_hostloop(
+def solve_hostloop(
     edges, num_nodes: int, method: str = "soman",
 ) -> tuple[np.ndarray, dict]:
     """Run the Soman baseline (or +multijump) with *host-side* control
     flow — one ``device_get`` per convergence check, faithful to the GPU
-    baseline's CPU-GPU round trips. Used by the benchmarks to expose the
-    cost the paper's device-centric design removes.
+    baseline's CPU-GPU round trips. Used by the benchmarks (through the
+    facade's ``hostloop`` backend) to expose the cost the paper's
+    device-centric design removes.
     """
     if method not in HOSTLOOP_METHODS:
         raise ValueError(f"unknown method {method!r}; choose from "
@@ -363,6 +407,21 @@ def connected_components_hostloop(
             break
     stats["sync_rounds"] = syncs
     return np.asarray(pi), stats
+
+
+def connected_components_hostloop(
+    edges, num_nodes: int, method: str = "soman",
+) -> tuple[np.ndarray, dict]:
+    """DEPRECATED legacy entrypoint — forwards through the facade's
+    ``hostloop`` backend; returns ``(labels, stats)`` as before."""
+    from repro._deprecation import warn_once
+    from repro.api import Solver
+    warn_once("repro.core.cc.connected_components_hostloop",
+              'Solver.plan(backend="hostloop")')
+    plan = Solver.open(edges, num_nodes).plan(backend="hostloop",
+                                              hostloop_method=method)
+    res = plan.run()
+    return np.asarray(res.labels), plan.artifacts["hostloop_stats"]
 
 
 def num_components(labels) -> int:

@@ -43,11 +43,13 @@ from repro.core.segmentation import plan_segmentation
 _MAX_ROUNDS = 8
 
 
-def make_distributed_cc(graph, mesh: Mesh,
-                        axis_names: tuple[str, ...] = ("data",),
-                        lift_steps: int = 2,
-                        local_segments: int | None = None):
-    """Build a jitted distributed-CC callable for a sharded DeviceGraph.
+def build_distributed_cc(graph, mesh: Mesh,
+                         axis_names: tuple[str, ...] = ("data",),
+                         lift_steps: int = 2,
+                         local_segments: int | None = None):
+    """Build a jitted distributed-CC callable for a sharded DeviceGraph
+    (engine entry for the facade's ``distributed`` backend; callers
+    should go through ``repro.api.Solver.open(graph, mesh=mesh)``).
 
     Args:
       graph: a ``DeviceGraph`` already sharded over ``mesh`` via
@@ -131,13 +133,41 @@ def make_distributed_cc(graph, mesh: Mesh,
     return call
 
 
+def solve_distributed(graph, mesh: Mesh, axis_names=("data",),
+                      lift_steps: int = 2):
+    """Shard a graph (host ``Graph``, raw arrays, or an unsharded
+    ``DeviceGraph``) over ``mesh`` and run (engine entry for the
+    facade's ``distributed`` backend)."""
+    from repro.graphs.device import as_device_graph
+    dg = as_device_graph(graph).shard(mesh, axis_names)
+    fn = build_distributed_cc(dg, mesh, axis_names=axis_names,
+                              lift_steps=lift_steps)
+    return fn(dg)
+
+
+def make_distributed_cc(graph, mesh: Mesh,
+                        axis_names: tuple[str, ...] = ("data",),
+                        lift_steps: int = 2,
+                        local_segments: int | None = None):
+    """DEPRECATED legacy entrypoint — forwards to the engine builder
+    the facade's ``distributed`` backend uses."""
+    from repro._deprecation import warn_once
+    warn_once("repro.core.distributed.make_distributed_cc",
+              "repro.api.Solver.open(graph, mesh=mesh)")
+    return build_distributed_cc(graph, mesh, axis_names=axis_names,
+                                lift_steps=lift_steps,
+                                local_segments=local_segments)
+
+
 def distributed_connected_components(graph, mesh: Mesh,
                                      axis_names=("data",),
                                      lift_steps: int = 2):
-    """Convenience wrapper: shard a graph (host ``Graph``, raw arrays,
-    or an unsharded ``DeviceGraph``) over ``mesh`` and run."""
-    from repro.graphs.device import as_device_graph
-    dg = as_device_graph(graph).shard(mesh, axis_names)
-    fn = make_distributed_cc(dg, mesh, axis_names=axis_names,
-                             lift_steps=lift_steps)
-    return fn(dg)
+    """DEPRECATED legacy entrypoint — forwards through the facade's
+    ``distributed`` backend, bit-identical results."""
+    from repro._deprecation import warn_once
+    from repro.api import Solver
+    warn_once("repro.core.distributed.distributed_connected_components",
+              "repro.api.Solver.open(graph, mesh=mesh).solve()")
+    res = Solver.open(graph, mesh=mesh, axis_names=axis_names,
+                      lift_steps=lift_steps).solve()
+    return res.labels

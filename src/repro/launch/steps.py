@@ -341,7 +341,7 @@ def _build_recsys(arch_id, shape, mesh, fsdp) -> Cell:
 def _build_cc(shape, mesh, multi_pod) -> Cell:
     """The paper's distributed CC on a Table I graph (full size)."""
     from repro.configs import cc_graphs
-    from repro.core.distributed import make_distributed_cc
+    from repro.core.distributed import build_distributed_cc
     import numpy as np
 
     from repro.core.segmentation import plan_segmentation
@@ -357,7 +357,7 @@ def _build_cc(shape, mesh, multi_pod) -> Cell:
     dg = DeviceGraph(padded, specs["num_nodes"], e,
                      plan_segmentation(per * n_shards,
                                        specs["num_nodes"]))
-    fn = make_distributed_cc(dg, mesh, axis_names=axes)
+    fn = build_distributed_cc(dg, mesh, axis_names=axes)
     # lower the raw edges-level entry point over the ShapeDtypeStruct
     return Cell("cc-adaptive", shape, "cc", fn.on_edges, args=(padded,),
                 in_shardings=(NamedSharding(mesh, P(axes, None)),))

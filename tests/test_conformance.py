@@ -1,16 +1,21 @@
-"""Cross-mode differential conformance matrix (ISSUE 4).
+"""Cross-mode differential conformance matrix (ISSUE 4 + ISSUE 5).
 
 Every execution mode of the stack must produce CANONICAL-LABEL-IDENTICAL
-results over the shared ``_graphgen`` corpus:
+results over the shared ``_graphgen`` corpus — and, since ISSUE 5,
+every mode is invoked THROUGH the public facade
+(``repro.api.Solver`` / the ``BACKENDS`` registry), so the matrix
+pins the whole dispatch path, not just the engines:
 
-  * the jnp single-graph variants (``soman | multijump | atomic_hook |
+  * the jnp single-graph backends (``soman | multijump | atomic_hook |
     adaptive | labelprop``),
-  * the per-round Pallas backend (``connected_components_pallas``),
-  * the fused Pallas backend (``method="pallas_fused"``),
-  * the shape-bucketed batched engine,
-  * an incremental (chunked insert) replay,
-  * a fully-dynamic (insert + delete + re-insert) replay,
-  * the 8-host-device distributed engine (subprocess — the main
+  * the per-round Pallas backend (``backend="pallas"``),
+  * the fused Pallas backend (``backend="pallas_fused"``),
+  * the shape-bucketed batched backend (``Solver.solve_batch``),
+  * an incremental (chunked insert) replay through a ``Solver``
+    streaming session,
+  * a fully-dynamic (insert + delete + re-insert) replay through the
+    same session API, both scoped-scan backends,
+  * the 8-host-device distributed backend (subprocess — the main
     process must keep its single-device view),
 
 all cross-checked against TWO independent host oracles (union-find and
@@ -19,25 +24,27 @@ bug. Where bit-exactness of the WORK COUNTERS is claimed — the fused
 backend against the jnp adaptive composition — the counters are
 asserted equal field by field over the whole corpus, not just labels.
 
-Also home of the ISSUE's counter-soundness property: accumulated
-``WorkCounters`` totals are monotone non-decreasing across long
-insert+delete sequences and never wrap int32 (pinning the PR-3 lazy
-host-fold design: per-batch int32 device counters fold into host
-arbitrary-precision ints).
+Also home of:
+  * the SHIM column (ISSUE 5): every deprecated legacy entrypoint
+    emits a ``DeprecationWarning`` exactly once per process and returns
+    results bit-identical to its facade route;
+  * the counter-soundness properties: accumulated ``WorkCounters``
+    totals are monotone non-decreasing across long insert+delete
+    sequences and never wrap int32 (the PR-3 lazy host-fold design).
 """
 import os
 import subprocess
 import sys
 import textwrap
+import warnings
 
 import numpy as np
 
 from _graphgen import corpus, dynamic_scripts, edges_array
 from _propcheck import given, settings, st
-from repro.core.batch import connected_components_batched
-from repro.core.cc import (METHODS, connected_components,
-                           connected_components_pallas)
-from repro.core.incremental import DynamicCC, IncrementalCC
+from repro import _deprecation
+from repro.api import BACKENDS, Solver, solve
+from repro.core.cc import METHODS
 from repro.core.rounds import WorkCounters
 from repro.core.unionfind import (DynamicConnectivityOracle,
                                   connected_components_oracle,
@@ -45,7 +52,7 @@ from repro.core.unionfind import (DynamicConnectivityOracle,
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-ALL_SINGLE_METHODS = METHODS + ("pallas_fused",)
+ALL_SINGLE_BACKENDS = METHODS + ("pallas_fused",)
 
 
 def oracle_labels(n, edges):
@@ -60,74 +67,89 @@ def oracle_labels(n, edges):
 
 
 # ---------------------------------------------------------------------------
-# Static matrix: every single-graph mode, every corpus case
+# Static matrix: every single-graph backend, every corpus case, via Solver
 # ---------------------------------------------------------------------------
 
-def test_conformance_single_graph_modes():
+def test_conformance_single_graph_backends_via_solver():
     for name, n, edges in corpus():
         want = oracle_labels(n, edges)
-        for method in ALL_SINGLE_METHODS:
-            got = connected_components(edges, n, method=method)
+        solver = Solver.open(edges, n)
+        for backend in ALL_SINGLE_BACKENDS:
+            assert backend in BACKENDS, backend
+            got = solver.solve(backend=backend)
             np.testing.assert_array_equal(
                 np.asarray(got.labels), want,
-                err_msg=f"{name} method={method}")
+                err_msg=f"{name} backend={backend}")
         if n and len(edges):
-            got = connected_components_pallas(edges, n, interpret=True)
-            np.testing.assert_array_equal(np.asarray(got), want,
+            got = solver.solve(backend="pallas", interpret=True)
+            np.testing.assert_array_equal(np.asarray(got.labels), want,
                                           err_msg=f"{name} pallas")
 
 
+def test_conformance_auto_routes_to_a_registered_backend():
+    """method="auto" must land on a registry entry and agree with the
+    oracle — whatever the policy picks."""
+    for name, n, edges in corpus():
+        solver = Solver.open(edges, n)
+        plan = solver.plan()
+        assert plan.backend in BACKENDS, (name, plan.backend)
+        got = solver.solve()
+        np.testing.assert_array_equal(np.asarray(got.labels),
+                                      oracle_labels(n, edges),
+                                      err_msg=f"{name} auto={plan.backend}")
+
+
 def test_conformance_batched_bit_identical():
-    """ONE batched run over the whole corpus == per-graph adaptive,
-    bit for bit, mixed shapes bucketed freely."""
+    """ONE Solver.solve_batch over the whole corpus == per-graph
+    adaptive solves, bit for bit, mixed shapes bucketed freely."""
     cases = [(name, n, e) for name, n, e in corpus() if n > 0]
-    out = connected_components_batched([(e, n) for _, n, e in cases])
+    out = Solver.solve_batch([(e, n) for _, n, e in cases])
     for (name, n, edges), res in zip(cases, out):
-        single = connected_components(edges, n, method="adaptive")
+        single = solve(edges, n, method="adaptive")
         np.testing.assert_array_equal(np.asarray(res.labels),
                                       np.asarray(single.labels),
                                       err_msg=name)
 
 
-def test_conformance_incremental_replay():
-    """Chunked insert replay lands on the same canonical fixed point
-    as every static mode."""
+def test_conformance_incremental_replay_via_solver():
+    """Chunked insert replay through a facade streaming session lands
+    on the same canonical fixed point as every static mode."""
     for name, n, edges in corpus():
-        inc = IncrementalCC(n)
+        s = Solver.open(num_nodes=n)
         for chunk in np.array_split(edges, 3) if len(edges) else [edges]:
-            inc.insert(chunk)
-        np.testing.assert_array_equal(np.asarray(inc.labels),
+            s.insert(chunk)
+        np.testing.assert_array_equal(np.asarray(s.labels),
                                       oracle_labels(n, edges),
                                       err_msg=name)
 
 
-def test_conformance_dynamic_replay():
+def test_conformance_dynamic_replay_via_solver():
     """Insert everything, delete half, re-insert the deleted half: the
-    dynamic engine must land back on the static fixed point — deletion
+    facade session must land back on the static fixed point — deletion
     plus re-insertion is an identity on the partition (not on the work
-    done). Both scoped-scan backends."""
+    done). Both scoped-scan backends, forced via ``scan_method``."""
     for scan_method in ("jnp", "pallas_fused"):
         for name, n, edges in corpus():
             if n == 0:
                 continue
-            dyn = DynamicCC(n, scan_method=scan_method)
+            s = Solver.open(num_nodes=n, scan_method=scan_method)
             oracle = DynamicConnectivityOracle(n)
-            dyn.insert(edges)
+            s.insert(edges)
             oracle.insert(edges)
             half = edges[: len(edges) // 2]
-            dyn.delete(half)        # retires every copy, both orders
+            s.delete(half)          # retires every copy, both orders
             oracle.delete(half)
             np.testing.assert_array_equal(
-                np.asarray(dyn.labels), oracle.labels(),
+                np.asarray(s.labels), oracle.labels(),
                 err_msg=f"{name} after delete ({scan_method})")
-            dyn.insert(half)
+            s.insert(half)
             oracle.insert(half)
             np.testing.assert_array_equal(
-                np.asarray(dyn.labels), oracle.labels(),
+                np.asarray(s.labels), oracle.labels(),
                 err_msg=f"{name} after re-insert ({scan_method})")
             # ...and re-insertion restores the original partition
             np.testing.assert_array_equal(
-                np.unique(np.asarray(dyn.labels)),
+                np.unique(np.asarray(s.labels)),
                 np.unique(oracle_labels(n, edges)),
                 err_msg=f"{name} partition ({scan_method})")
 
@@ -135,14 +157,129 @@ def test_conformance_dynamic_replay():
 def test_conformance_work_counters_where_bit_exact_claimed():
     """The fused Pallas backend claims WorkCounters bit-compatibility
     with the jnp adaptive composition — hold it to that over the whole
-    corpus, field by field."""
+    corpus, field by field, through the facade."""
+    assert BACKENDS["pallas_fused"].capabilities.bit_exact_counters
     for name, n, edges in corpus():
-        a = connected_components(edges, n, method="adaptive")
-        b = connected_components(edges, n, method="pallas_fused")
+        a = solve(edges, n, backend="adaptive")
+        b = solve(edges, n, backend="pallas_fused")
         np.testing.assert_array_equal(np.asarray(a.labels),
                                       np.asarray(b.labels), err_msg=name)
         for field, x, y in zip(WorkCounters._fields, a.work, b.work):
             assert int(x) == int(y), (name, field, int(x), int(y))
+
+
+# ---------------------------------------------------------------------------
+# Shim column (ISSUE 5): legacy entrypoints == facade, warn exactly once
+# ---------------------------------------------------------------------------
+
+def _deprecation_count(record):
+    return sum(1 for w in record
+               if issubclass(w.category, DeprecationWarning))
+
+
+def test_shims_bit_identical_and_warn_exactly_once():
+    """Every legacy entrypoint forwards into the facade: results are
+    bit-identical to the facade route, and each emits exactly ONE
+    ``DeprecationWarning`` per process (first call warns, repeat calls
+    stay silent)."""
+    from repro.core.batch import connected_components_batched
+    from repro.core.cc import (connected_components,
+                               connected_components_hostloop,
+                               connected_components_pallas)
+
+    cases = [(name, n, e) for name, n, e in corpus()
+             if n > 0 and len(e) > 0][:4]
+    _deprecation.reset()
+
+    for name, n, edges in cases:
+        facade = solve(edges, n, method="adaptive")
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            legacy = connected_components(edges, n, method="adaptive")
+        np.testing.assert_array_equal(np.asarray(legacy.labels),
+                                      np.asarray(facade.labels),
+                                      err_msg=name)
+        for f, x, y in zip(WorkCounters._fields, legacy.work,
+                           facade.work):
+            assert int(x) == int(y), (name, f)
+
+        fp = Solver.open(edges, n).solve(backend="pallas",
+                                         interpret=True)
+        with warnings.catch_warnings(record=True):
+            warnings.simplefilter("always")
+            lp = connected_components_pallas(edges, n, interpret=True)
+        np.testing.assert_array_equal(np.asarray(lp),
+                                      np.asarray(fp.labels),
+                                      err_msg=name)
+
+    # warn-exactly-once, per entrypoint: the calls above already warmed
+    # the warn registry; fresh calls must be silent now
+    name, n, edges = cases[0]
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        connected_components(edges, n)
+        connected_components_pallas(edges, n, interpret=True)
+    assert _deprecation_count(rec) == 0, [str(w.message) for w in rec]
+
+    # ...and after a reset, each warns once (and only once) again
+    _deprecation.reset()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        connected_components(edges, n)
+        connected_components(edges, n)
+    assert _deprecation_count(rec) == 1, [str(w.message) for w in rec]
+
+    # hostloop shim: labels + stats identical to the facade plan route
+    _deprecation.reset()
+    plan = Solver.open(edges, n).plan(backend="hostloop",
+                                      hostloop_method="soman")
+    fres = plan.run()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        labels, stats = connected_components_hostloop(edges, n,
+                                                      method="soman")
+        connected_components_hostloop(edges, n, method="soman")
+    assert _deprecation_count(rec) == 1
+    np.testing.assert_array_equal(labels, np.asarray(fres.labels))
+    assert stats == plan.artifacts["hostloop_stats"]
+
+    # batched shim
+    _deprecation.reset()
+    fbatch = Solver.solve_batch([(e, n) for _, n, e in cases])
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        lbatch = connected_components_batched(
+            [(e, n) for _, n, e in cases])
+        connected_components_batched([(e, n) for _, n, e in cases])
+    assert _deprecation_count(rec) == 1
+    for f, l in zip(fbatch, lbatch):
+        np.testing.assert_array_equal(np.asarray(l.labels),
+                                      np.asarray(f.labels))
+
+
+def test_shim_distributed_single_device():
+    """The distributed legacy entrypoints forward through the facade's
+    ``distributed`` backend (single-device mesh in-process; the 8-device
+    form is covered by the subprocess matrix row)."""
+    import jax
+    from repro.core.distributed import distributed_connected_components
+    from repro.graphs.device import DeviceGraph
+
+    name, n, edges = next((c for c in corpus() if c[1] > 0 and
+                           len(c[2]) >= 8))
+    dg = DeviceGraph.from_edges(edges, n)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+    facade = Solver.open(dg, mesh=mesh).solve()
+    _deprecation.reset()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        legacy = distributed_connected_components(dg, mesh)
+        distributed_connected_components(dg, mesh)
+    assert _deprecation_count(rec) == 1
+    np.testing.assert_array_equal(np.asarray(legacy),
+                                  np.asarray(facade.labels))
+    np.testing.assert_array_equal(np.asarray(legacy),
+                                  oracle_labels(n, edges))
 
 
 # ---------------------------------------------------------------------------
@@ -152,34 +289,36 @@ def test_conformance_work_counters_where_bit_exact_claimed():
 @settings(max_examples=8, deadline=None)
 @given(dynamic_scripts(max_n=14, max_ops=6))
 def test_conformance_dynamic_scripts_cross_mode(case):
-    """After ANY interleaved insert/delete script: the dynamic engine,
-    a from-scratch run of every static mode over the survivors, and
-    the union-find/scipy oracles all agree on the labels."""
+    """After ANY interleaved insert/delete script through the facade
+    session: the dynamic state, a from-scratch facade solve of every
+    static mode over the survivors, and the union-find/scipy oracles
+    all agree on the labels."""
     n, script = case
-    dyn = DynamicCC(n)
+    s = Solver.open(num_nodes=n)
     oracle = DynamicConnectivityOracle(n)
     for op, batch in script:
         edges = edges_array(batch)
-        (dyn.insert if op == 0 else dyn.delete)(edges)
+        (s.insert if op == 0 else s.delete)(edges)
         (oracle.insert if op == 0 else oracle.delete)(edges)
     want = oracle.labels()
-    np.testing.assert_array_equal(np.asarray(dyn.labels), want,
+    np.testing.assert_array_equal(np.asarray(s.labels), want,
                                   err_msg=str(script))
     survivors = edges_array(oracle.alive())
-    for method in ("adaptive", "atomic_hook", "pallas_fused"):
-        got = connected_components(survivors, n, method=method)
+    for backend in ("adaptive", "atomic_hook", "pallas_fused"):
+        got = solve(survivors, n, backend=backend)
         np.testing.assert_array_equal(np.asarray(got.labels), want,
-                                      err_msg=f"{method} {script}")
+                                      err_msg=f"{backend} {script}")
 
 
 # ---------------------------------------------------------------------------
-# 8-host-device distributed engine (subprocess keeps main single-device)
+# 8-host-device distributed backend (subprocess keeps main single-device)
 # ---------------------------------------------------------------------------
 
 def test_conformance_distributed_8dev():
-    """The sharded engine joins the matrix: same canonical labels as
-    the oracle over the non-degenerate corpus, on 8 forced host
-    devices, including edge counts that do not divide into 8."""
+    """The sharded backend joins the matrix THROUGH the facade: same
+    canonical labels as the oracle over the non-degenerate corpus, on 8
+    forced host devices, including edge counts that do not divide into
+    8."""
     code = textwrap.dedent("""
         import os
         os.environ["XLA_FLAGS"] = \
@@ -187,18 +326,19 @@ def test_conformance_distributed_8dev():
         import jax
         import numpy as np
         from _graphgen import corpus
-        from repro.core.distributed import make_distributed_cc
+        from repro.api import Solver
         from repro.core.unionfind import connected_components_oracle
-        from repro.graphs.device import DeviceGraph
         assert len(jax.devices()) == 8
         mesh = jax.sharding.Mesh(np.array(jax.devices()), ("data",))
         ran = 0
         for name, n, edges in corpus():
             if n == 0 or len(edges) < 8:
                 continue
-            dg = DeviceGraph.from_edges(edges, n).shard(mesh, ("data",))
-            fn = make_distributed_cc(dg, mesh, ("data",))
-            got = np.asarray(fn(dg))
+            solver = Solver.open(edges, n, mesh=mesh)
+            plan = solver.plan()
+            assert plan.backend == "distributed", plan.backend
+            assert plan.reason == "sharded", plan.reason
+            got = np.asarray(solver.solve().labels)
             want = connected_components_oracle(edges, n)
             np.testing.assert_array_equal(got, want, err_msg=name)
             ran += 1
@@ -226,14 +366,14 @@ def test_conformance_distributed_8dev():
 @given(dynamic_scripts(max_n=10, max_ops=8))
 def test_work_counters_monotone_over_dynamic_sequences(case):
     """Accumulated totals never decrease across a long interleaved
-    insert+delete sequence — every counter is a cost, and costs only
-    accrue."""
+    insert+delete sequence through the facade — every counter is a
+    cost, and costs only accrue."""
     n, script = case
-    dyn = DynamicCC(n)
-    prev = dict(dyn.work)
+    s = Solver.open(num_nodes=n)
+    prev = dict(s.work)                      # zeroed pre-mutation
     for op, batch in script:
-        (dyn.insert if op == 0 else dyn.delete)(edges_array(batch))
-        now = dyn.work
+        (s.insert if op == 0 else s.delete)(edges_array(batch))
+        now = s.work
         for field in WorkCounters._fields:
             assert now[field] >= prev[field], (field, prev, now)
         assert all(v >= 0 for v in now.values()), now
@@ -248,6 +388,7 @@ def test_work_counters_never_wrap_int32():
     auto-drain every ``_DRAIN_EVERY`` pending batches."""
     import jax.numpy as jnp
     from repro.core import incremental as inc_mod
+    from repro.core.incremental import IncrementalCC
 
     inc = IncrementalCC(4)
     big = 1 << 30                           # fits int32; 4x overflows it
