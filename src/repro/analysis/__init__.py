@@ -1,0 +1,16 @@
+"""repro.analysis — static invariant checking over traced backends.
+
+Every registered backend (plus the service tick and the query kernels)
+is closed to a jaxpr at symbolic shape buckets and held to the repo's
+contracts *at trace time*: transfer-freedom on tick paths, int32 range
+safety at scale-tier shapes, pow2 bucket hygiene, and the §8
+padding-mask discipline — plus an AST-level lint for the Pallas
+kernels and facade boundaries. DESIGN.md §11 documents the pass
+architecture; ``python -m repro.analysis`` is the CI gate.
+"""
+from repro.analysis.findings import (PASS_IDS, Finding, Report,
+                                     load_baseline, write_baseline)
+from repro.analysis.runner import BUCKETS, analyze, selftest
+
+__all__ = ["PASS_IDS", "Finding", "Report", "load_baseline",
+           "write_baseline", "BUCKETS", "analyze", "selftest"]

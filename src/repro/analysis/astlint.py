@@ -1,0 +1,150 @@
+"""Pass ``pallas-ast`` — source-level companion lint.
+
+The jaxpr passes treat ``pallas_call`` bodies as opaque (Mosaic
+lowering, not XLA, owns their semantics), so kernel hygiene is checked
+where it lives — in the source:
+
+* **static grid bounds** — every ``pl.pallas_call(...)`` must pass an
+  explicit ``grid=`` / ``grid_spec=``; an implicit whole-array launch
+  compiles, then silently serializes (error);
+* **ref/ops parity** — every kernel package under ``repro.kernels``
+  ships the triple ``<name>.py`` (the pallas kernel) + ``ops.py``
+  (jit'd public wrapper) + ``ref.py`` (pure oracle, ``ref_*``
+  functions). The conformance tests diff kernel vs oracle; a package
+  missing either half has nothing holding it to its semantics (error);
+* **no 64-bit dtypes in kernels** — the stack runs x64-disabled;
+  a ``jnp.int64``/``float64`` in a kernel file either silently
+  downcasts or diverges from the int32 range analysis (error);
+* **no facade bypass** — engine entry points (``solve_*``,
+  ``IncrementalCC``, ``DynamicCC``) are imported only by
+  ``repro.core``/``repro.api``/``repro.analysis``; anything else in
+  ``src/`` importing them dodges the plan/registry layer the Solver
+  contracts are enforced through (error).
+
+Pure ``ast`` — no imports of the linted modules, so a broken module
+still gets linted. Findings anchor to real lines, so the standard
+``# analysis: ok[pallas-ast]`` pragma applies.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from repro.analysis.findings import Finding
+
+PASS_ID = "pallas-ast"
+
+_X64_NAMES = {"int64", "uint64", "float64"}
+_ENGINE_ENTRIES = {
+    "solve_static", "solve_pallas", "solve_hostloop", "solve_batched",
+    "solve_distributed", "build_distributed_cc",
+    "IncrementalCC", "DynamicCC",
+}
+_ENGINE_MODULES = ("repro.core.cc", "repro.core.batch",
+                   "repro.core.incremental", "repro.core.distributed",
+                   "repro.core")
+# packages allowed to touch engine entries directly
+_ENGINE_CLIENTS = ("src/repro/core/", "src/repro/api/",
+                   "src/repro/analysis/")
+
+
+def _rel(path: Path, root: Path) -> str:
+    return path.relative_to(root).as_posix()
+
+
+def _parse(path: Path):
+    try:
+        return ast.parse(path.read_text())
+    except (OSError, SyntaxError):
+        return None
+
+
+def _lint_pallas_file(path: Path, rel: str) -> list[Finding]:
+    tree = _parse(path)
+    if tree is None:
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            fname = (node.func.attr if isinstance(node.func, ast.Attribute)
+                     else getattr(node.func, "id", ""))
+            if fname == "pallas_call":
+                kws = {kw.arg for kw in node.keywords}
+                if not ({"grid", "grid_spec"} & kws):
+                    out.append(Finding(
+                        PASS_ID, rel, "error", "pallas-no-static-grid",
+                        "pl.pallas_call without an explicit grid= / "
+                        "grid_spec= — the implicit whole-array launch "
+                        "serializes; derive the grid from static tile "
+                        "counts",
+                        rel, node.lineno))
+        if isinstance(node, ast.Attribute) and node.attr in _X64_NAMES:
+            out.append(Finding(
+                PASS_ID, rel, "error", f"kernel-{node.attr}",
+                f"64-bit dtype `{node.attr}` in a kernel file — the "
+                "stack is x64-disabled; this silently downcasts and "
+                "escapes the int32 range analysis",
+                rel, node.lineno))
+    return out
+
+
+def _lint_kernel_package(pkg: Path, root: Path) -> list[Finding]:
+    out = []
+    rel = _rel(pkg, root)
+    ops, ref = pkg / "ops.py", pkg / "ref.py"
+    for part, req in (("ops.py", ops), ("ref.py", ref)):
+        tree = _parse(req) if req.exists() else None
+        has_pub = tree is not None and any(
+            isinstance(n, ast.FunctionDef) and not n.name.startswith("_")
+            for n in tree.body)
+        if not has_pub:
+            out.append(Finding(
+                PASS_ID, rel, "error",
+                f"kernel-missing-{part.split('.')[0]}",
+                f"kernel package has no public function in {part} — "
+                "the kernel/oracle conformance contract (DESIGN.md §8) "
+                "requires the ops+ref pair",
+                f"{rel}/{part}", 1))
+    return out
+
+
+def _lint_facade_bypass(path: Path, rel: str) -> list[Finding]:
+    if rel.startswith(_ENGINE_CLIENTS) or not rel.endswith(".py"):
+        return []
+    tree = _parse(path)
+    if tree is None:
+        return []
+    out = []
+    for node in ast.walk(tree):
+        names: set = set()
+        if isinstance(node, ast.ImportFrom) and node.module \
+                and node.module.startswith(_ENGINE_MODULES):
+            names = {a.name for a in node.names} & _ENGINE_ENTRIES
+        if names:
+            out.append(Finding(
+                PASS_ID, rel, "error", "facade-bypass",
+                f"imports engine entry {sorted(names)} from "
+                f"`{node.module}` outside repro.core/api — go through "
+                "`repro.api` (Solver / BACKENDS) so plans, counters, "
+                "and contracts apply",
+                rel, node.lineno))
+    return out
+
+
+def run(src_root: Path) -> list[Finding]:
+    """Lint ``src/repro`` under ``src_root`` (the repo root)."""
+    repro = src_root / "src" / "repro"
+    findings: list[Finding] = []
+    kernels = repro / "kernels"
+    if kernels.is_dir():
+        for pkg in sorted(p for p in kernels.iterdir() if p.is_dir()):
+            if not any(pkg.glob("*.py")):
+                continue
+            findings.extend(_lint_kernel_package(pkg, src_root))
+    for path in sorted(repro.rglob("*.py")):
+        rel = _rel(path, src_root)
+        text = path.read_text()
+        if "pallas_call" in text and "/analysis/" not in rel:
+            findings.extend(_lint_pallas_file(path, rel))
+        findings.extend(_lint_facade_bypass(path, rel))
+    return findings

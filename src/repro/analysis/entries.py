@@ -1,0 +1,149 @@
+"""Non-backend traceable entries + the entry collector.
+
+``repro.api.backends`` registers one trace spec per execution backend;
+this module adds the two surfaces the serving layer runs that are NOT
+a backend's own program:
+
+* **the service tick** — what ``ConnectivityService._run_mutations``
+  stages per tenant per tick: coalesce payload graphs with
+  ``DeviceGraph.concat``, bucket with ``pad_pow2``, absorb through
+  ``_absorb_jit`` (inserts) or tombstone through ``_delete_jit``
+  (deletes). The tick is the hottest transfer-free contract in the
+  repo — a host sync here blocks every tenant in the slot;
+* **the query kernels** — ``repro.connectivity.queries``; all four are
+  contracted transfer-free (results are materialized only through the
+  audited ``to_host`` sink, *after* the kernel).
+
+``all_entries()`` is the one discovery point the runner and the tests
+use: it imports the spec-bearing modules for their registration side
+effects and returns every ``TraceEntry`` in name order.
+"""
+from __future__ import annotations
+
+from repro.api.registry import (TraceEntry, VarInfo, register_trace_spec,
+                                trace_entries)
+
+_TF = frozenset({"transfer_free", "bucketed"})
+
+
+@register_trace_spec("service")
+def _service_specs():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import incremental as inc_mod
+    from repro.core.segmentation import adaptive_num_segments
+    from repro.graphs.device import DeviceGraph
+
+    def build_insert_tick(v, e):
+        half = max(e // 2, 8)
+
+        def fn(pi, edges_a, edges_b, version):
+            # two coalesced payloads, as _run_mutations stages them
+            batch = DeviceGraph.concat([
+                DeviceGraph.from_edges(edges_a, v),
+                DeviceGraph.from_edges(edges_b, v),
+            ]).pad_pow2()
+            return inc_mod._absorb_jit(
+                pi, batch.edges, batch.true_edges_device(), version,
+                lift_steps=2)
+        return (fn,
+                (jax.ShapeDtypeStruct((v,), jnp.int32),
+                 jax.ShapeDtypeStruct((half, 2), jnp.int32),
+                 jax.ShapeDtypeStruct((half, 2), jnp.int32),
+                 jax.ShapeDtypeStruct((), jnp.int32)),
+                [VarInfo(range=(0, v - 1)),
+                 VarInfo(range=(0, v - 1)),
+                 VarInfo(range=(0, v - 1)),
+                 VarInfo()])
+
+    def build_delete_tick(v, e):
+        d = max(e // 8, 8)
+
+        def fn(edges, alive, pi, dels_a, dels_b, version, deleted):
+            batch = DeviceGraph.concat([
+                DeviceGraph.from_edges(dels_a, v),
+                DeviceGraph.from_edges(dels_b, v),
+            ]).pad_pow2()
+            return inc_mod._delete_jit(
+                edges, alive, pi, batch.edges,
+                batch.true_edges_device(), version, deleted,
+                lift_steps=2, num_segments=adaptive_num_segments(e, v),
+                scan_method="jnp", interpret=True)
+        return (fn,
+                (jax.ShapeDtypeStruct((e, 2), jnp.int32),
+                 jax.ShapeDtypeStruct((e,), jnp.bool_),
+                 jax.ShapeDtypeStruct((v,), jnp.int32),
+                 jax.ShapeDtypeStruct((d, 2), jnp.int32),
+                 jax.ShapeDtypeStruct((d, 2), jnp.int32),
+                 jax.ShapeDtypeStruct((), jnp.int32),
+                 jax.ShapeDtypeStruct((), jnp.int32)),
+                [VarInfo(range=(0, v - 1), padded=True),
+                 VarInfo(mask=True),
+                 VarInfo(range=(0, v - 1)),
+                 VarInfo(range=(0, v - 1)),
+                 VarInfo(range=(0, v - 1)),
+                 VarInfo(),
+                 VarInfo()])
+
+    return [TraceEntry("service.tick.insert", build_insert_tick, _TF),
+            TraceEntry("service.tick.delete", build_delete_tick, _TF)]
+
+
+@register_trace_spec("queries")
+def _query_specs():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.connectivity import queries as q
+
+    def labels_arg(v):
+        return (jax.ShapeDtypeStruct((v,), jnp.int32),
+                VarInfo(range=(0, v - 1)))
+
+    def build_same_component(v, e):
+        la, li = labels_arg(v)
+        nq = max(e // 16, 8)
+
+        def fn(labels, pairs):
+            return q.same_component(labels, pairs)
+        return (fn, (la, jax.ShapeDtypeStruct((nq, 2), jnp.int32)),
+                [li, VarInfo(range=(0, v - 1), padded=True)])
+
+    def build_component_size(v, e):
+        la, li = labels_arg(v)
+        nq = max(e // 16, 8)
+
+        def fn(labels, vertices):
+            return q.component_size(labels, vertices)
+        return (fn, (la, jax.ShapeDtypeStruct((nq,), jnp.int32)),
+                [li, VarInfo(range=(0, v - 1), padded=True)])
+
+    def build_count_components(v, e):
+        la, li = labels_arg(v)
+
+        def fn(labels):
+            return q.count_components(labels)
+        return fn, (la,), [li]
+
+    def build_component_histogram(v, e):
+        la, li = labels_arg(v)
+
+        def fn(labels):
+            return q.component_histogram(labels)
+        return fn, (la,), [li]
+
+    return [
+        TraceEntry("queries.same_component", build_same_component, _TF),
+        TraceEntry("queries.component_size", build_component_size, _TF),
+        TraceEntry("queries.count_components", build_count_components, _TF),
+        TraceEntry("queries.component_histogram",
+                   build_component_histogram, _TF),
+    ]
+
+
+def all_entries() -> list:
+    """Every registered ``TraceEntry`` (backends + service + queries),
+    importing the spec-bearing modules for their side effects."""
+    import repro.api.backends  # noqa: F401  — registers backend specs
+    return trace_entries()

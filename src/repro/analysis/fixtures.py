@@ -1,0 +1,150 @@
+"""Seeded-bug fixtures — the analyzer's own regression suite.
+
+Each fixture is a ``TraceEntry`` reproducing a *real* bug class from
+this repo's history (or its known-good twin), kept OUT of the
+production registry so the tree stays clean. ``--selftest`` (and
+``tests/test_analysis.py``) trace them through the full pass stack and
+assert the analyzer still catches every one — the checker is only a
+gate while it demonstrably flags the bugs it was built from:
+
+* ``fixture.int32_edge_key`` — the PR-4 incremental-engine bug: edges
+  keyed as ``min*V + max`` in int32. Exact until ``|V| ~ 46341``,
+  silent wraparound after; must flag at the scale bucket and stay
+  quiet at the small bucket (the "CI-sized shapes miss it" story);
+* ``fixture.int32_edge_key_fixed`` — the shipped fix (lexicographic
+  two-key sort, no packed product); must be clean at every bucket;
+* ``fixture.host_sync`` — a Python branch on a traced value inside a
+  contracted-transfer-free program (the classic ``if count > 0:``);
+  staging fails, which IS the finding;
+* ``fixture.host_callback`` — a ``jax.pure_callback`` smuggled onto a
+  tick path: one host round trip per invocation;
+* ``fixture.unmasked_padded_sum`` — billing over a padded edge array
+  with no dominating mask (the §8 violation WorkCounters tests chase
+  at runtime); its twin ``fixture.masked_padded_sum`` applies the
+  prefix mask and must be clean;
+* ``fixture.retrace_nonpow2`` — a non-pow2 input shape plus a leaked
+  weak-typed Python scalar on a bucketed entry (one compiled program
+  per distinct size in serving).
+"""
+from __future__ import annotations
+
+from repro.api.registry import TraceEntry, VarInfo
+
+_TF = frozenset({"transfer_free", "bucketed"})
+
+
+def _sds(shape, dtype="int32"):
+    import jax
+    import jax.numpy as jnp
+    return jax.ShapeDtypeStruct(shape, getattr(jnp, dtype))
+
+
+def _build_edge_key(v, e):
+    import jax.numpy as jnp
+
+    def fn(edges):
+        u, w = edges[:, 0], edges[:, 1]
+        lo = jnp.minimum(u, w)
+        hi = jnp.maximum(u, w)
+        key = lo * v + hi              # pre-PR-4 packed key: wraps at scale
+        return jnp.sort(key)
+    return fn, (_sds((e, 2)),), [VarInfo(range=(0, v - 1))]
+
+
+def _build_edge_key_fixed(v, e):
+    import jax.numpy as jnp
+    from jax import lax
+
+    def fn(edges):
+        u, w = edges[:, 0], edges[:, 1]
+        lo = jnp.minimum(u, w)
+        hi = jnp.maximum(u, w)
+        # the fix: two-key lexicographic sort, nothing packed
+        lo_s, hi_s = lax.sort((lo, hi), num_keys=2)
+        return lo_s, hi_s
+    return fn, (_sds((e, 2)),), [VarInfo(range=(0, v - 1))]
+
+
+def _build_host_sync(v, e):
+    import jax.numpy as jnp
+
+    def fn(edges):
+        total = jnp.sum(edges >= 0)
+        if total > 0:                  # Python branch on a traced value
+            return total
+        return jnp.zeros((), jnp.int32)
+    return fn, (_sds((e, 2)),), [VarInfo(range=(0, v - 1))]
+
+
+def _build_host_callback(v, e):
+    import jax
+    import jax.numpy as jnp
+
+    def fn(pi):
+        # a host hop dressed up as a pure function
+        return jax.pure_callback(
+            lambda x: x, jax.ShapeDtypeStruct(pi.shape, jnp.int32), pi)
+    return fn, (_sds((v,)),), [VarInfo(range=(0, v - 1))]
+
+
+def _build_unmasked_sum(v, e):
+    import jax.numpy as jnp
+
+    def fn(edges, true_edges):
+        hops = edges[:, 0] - edges[:, 1]
+        return jnp.sum(jnp.abs(hops))  # bills the padding rows
+    return (fn, (_sds((e, 2)), _sds(())),
+            [VarInfo(range=(0, v - 1), padded=True),
+             VarInfo(range=(0, e), mask=True)])
+
+
+def _build_masked_sum(v, e):
+    import jax.numpy as jnp
+
+    def fn(edges, true_edges):
+        hops = jnp.abs(edges[:, 0] - edges[:, 1])
+        alive = jnp.arange(e, dtype=jnp.int32) < true_edges
+        return jnp.sum(jnp.where(alive, hops, 0))   # the §8 discipline
+    return (fn, (_sds((e, 2)), _sds(())),
+            [VarInfo(range=(0, v - 1), padded=True),
+             VarInfo(range=(0, e), mask=True)])
+
+
+def _build_retrace_nonpow2(v, e):
+    import jax.numpy as jnp
+
+    def fn(pi, shift):
+        return pi + shift
+    # non-pow2 leading dim + a raw Python int (leaks a weak-typed aval)
+    return (fn, (_sds((e - 3,)), 7),
+            [VarInfo(range=(0, v - 1)), VarInfo()])
+
+
+def fixture_entries() -> list:
+    return [
+        TraceEntry("fixture.int32_edge_key", _build_edge_key, _TF),
+        TraceEntry("fixture.int32_edge_key_fixed", _build_edge_key_fixed,
+                   _TF),
+        TraceEntry("fixture.host_sync", _build_host_sync, _TF),
+        TraceEntry("fixture.host_callback", _build_host_callback, _TF),
+        TraceEntry("fixture.unmasked_padded_sum", _build_unmasked_sum,
+                   _TF),
+        TraceEntry("fixture.masked_padded_sum", _build_masked_sum, _TF),
+        TraceEntry("fixture.retrace_nonpow2", _build_retrace_nonpow2,
+                   _TF),
+    ]
+
+
+# entry -> (pass_id, finding code, bucket it must fire at) — "scale"
+# means the small bucket must stay QUIET (that asymmetry is the point)
+EXPECTED = {
+    "fixture.int32_edge_key": ("int32", "mul-overflow", "scale"),
+    "fixture.host_sync": ("transfer", "trace-host-sync", "any"),
+    "fixture.host_callback": ("transfer", "callback-pure_callback", "any"),
+    "fixture.unmasked_padded_sum": ("padmask", "unmasked-padded-sum",
+                                    "any"),
+    "fixture.retrace_nonpow2": ("retrace", "non-pow2-shape-arg0", "any"),
+}
+
+# entries that must produce ZERO findings (the fixed twins)
+CLEAN = {"fixture.int32_edge_key_fixed", "fixture.masked_padded_sum"}

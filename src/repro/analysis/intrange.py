@@ -1,0 +1,209 @@
+"""Pass ``int32`` — interval analysis for index arithmetic.
+
+The whole stack runs with x64 disabled, so every id, index, and edge
+key is int32. That makes index *arithmetic* the one place where a
+perfectly clean-looking program silently corrupts at scale: the PR-4
+incremental engine keyed undirected edges as ``min*V + max``, which is
+exact math until ``|V|`` crosses ~46341 (2**31 / |V| < |V|) and then
+wraps negative — CI-sized graphs never see it, the paper's scale
+graphs always do. This pass re-derives that class of bug statically:
+
+* every traced input gets an inclusive value interval from its
+  ``VarInfo`` (vertex ids in [0, |V|-1], counts in [0, |E|], unknown =
+  TOP) and intervals are propagated through the jaxpr with exact
+  Python-int arithmetic (no wrapping);
+* an ``add`` / ``sub`` / ``mul`` / ``convert_element_type`` whose
+  *exact* result interval escapes [-2**31, 2**31-1] while its output
+  dtype is a 32-bit-or-narrower int is an error — the runtime value
+  has wrapped;
+* TOP never flags, and loop-carried values that fail to reach a join
+  fixed point are widened to TOP — unbounded work counters
+  accumulating across rounds can not produce phantom findings. The
+  cost is known: a genuine overflow *proved only by loop iteration
+  count* is out of scope (documented in DESIGN.md §11).
+
+Entries are traced at two buckets; the overflow only fires at the
+scale bucket (V=2**20), which is exactly the point: the checker sees
+what small-shape CI cannot.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.analysis.findings import Finding
+from repro.analysis.jaxpr_utils import AbstractInterpreter, eqn_site
+
+PASS_ID = "int32"
+
+INT32_MIN, INT32_MAX = -(2 ** 31), 2 ** 31 - 1
+TOP = None                                   # unknown interval
+_FLAG_PRIMS = {"add", "sub", "mul", "convert_element_type"}
+_CONST_SCAN_MAX = 1 << 22                    # min/max scan cap for consts
+
+Interval = Optional[tuple]                   # (lo, hi) exact Python ints
+
+
+def _is_small_int(dtype) -> bool:
+    try:
+        return (np.issubdtype(dtype, np.integer)
+                and np.dtype(dtype).itemsize <= 4)
+    except TypeError:
+        return False
+
+
+def _corners(a: Interval, b: Interval, op) -> Interval:
+    if a is TOP or b is TOP:
+        return TOP
+    vals = [op(x, y) for x in a for y in b]
+    return (min(vals), max(vals))
+
+
+class _IntRange(AbstractInterpreter):
+    def __init__(self, traced):
+        self.traced = traced
+        self.findings: list[Finding] = []
+
+    # -- lattice -----------------------------------------------------------
+
+    def top(self):
+        return TOP
+
+    def join(self, a: Interval, b: Interval) -> Interval:
+        if a is TOP or b is TOP:
+            return TOP
+        return (min(a[0], b[0]), max(a[1], b[1]))
+
+    def from_literal(self, val, aval) -> Interval:
+        try:
+            arr = np.asarray(val)
+            if arr.dtype == np.bool_:
+                return (0, 1)
+            if np.issubdtype(arr.dtype, np.integer) and arr.size >= 1:
+                return (int(arr.min()), int(arr.max()))
+        except Exception:  # noqa: BLE001
+            pass
+        return TOP
+
+    def const_value(self, const) -> Interval:
+        try:
+            arr = np.asarray(const)
+            if (np.issubdtype(arr.dtype, np.integer)
+                    and 1 <= arr.size <= _CONST_SCAN_MAX):
+                return (int(arr.min()), int(arr.max()))
+            if arr.dtype == np.bool_:
+                return (0, 1)
+        except Exception:  # noqa: BLE001
+            pass
+        return TOP
+
+    # -- transfer ----------------------------------------------------------
+
+    def rule(self, eqn, vals) -> list:
+        p = eqn.primitive.name
+        out: Interval = TOP
+
+        if p == "add":
+            out = _corners(vals[0], vals[1], lambda x, y: x + y)
+        elif p == "sub":
+            out = _corners(vals[0], vals[1], lambda x, y: x - y)
+        elif p == "mul":
+            out = _corners(vals[0], vals[1], lambda x, y: x * y)
+        elif p == "convert_element_type":
+            out = vals[0]
+        elif p in ("max", "min"):
+            if vals[0] is not TOP and vals[1] is not TOP:
+                pick = max if p == "max" else min
+                out = (pick(vals[0][0], vals[1][0]),
+                       pick(vals[0][1], vals[1][1]))
+        elif p == "clamp" and vals[0] is not TOP and vals[2] is not TOP:
+            out = (vals[0][0], vals[2][1])     # bounded by [lo.lo, hi.hi]
+        elif p == "neg" and vals[0] is not TOP:
+            out = (-vals[0][1], -vals[0][0])
+        elif p == "abs" and vals[0] is not TOP:
+            lo, hi = vals[0]
+            out = (0 if lo <= 0 <= hi else min(abs(lo), abs(hi)),
+                   max(abs(lo), abs(hi)))
+        elif p == "iota":
+            shape = eqn.params.get("shape") or (0,)
+            dim = eqn.params.get("dimension", 0)
+            out = (0, max(int(shape[dim]) - 1, 0))
+        elif p in ("argmax", "argmin"):
+            size = getattr(eqn.invars[0].aval, "size", 0)
+            out = (0, max(int(size) - 1, 0))
+        elif p in ("reshape", "broadcast_in_dim", "squeeze", "transpose",
+                   "slice", "dynamic_slice", "rev", "copy", "stop_gradient",
+                   "expand_dims", "reduce_max", "reduce_min",
+                   "reduce_or", "reduce_and", "cumsum", "gather"):
+            # shape ops and order-preserving reductions keep the operand
+            # interval; gather's indices can't widen the gathered values.
+            # (cumsum of a bounded array CAN exceed the element bound —
+            # but only via the length factor, which we fold in exactly.)
+            if p == "cumsum" and vals[0] is not TOP:
+                n = max(int(getattr(eqn.invars[0].aval, "size", 1)), 1)
+                lo, hi = vals[0]
+                out = (min(lo, lo * n), max(hi, hi * n))
+            else:
+                out = vals[0]
+        elif p in ("concatenate", "pad", "select_n", "dynamic_update_slice"):
+            ops = vals[1:] if p == "select_n" else vals   # drop predicate
+            ops = [v for v in ops] or [TOP]
+            out = ops[0]
+            for v in ops[1:]:
+                out = self.join(out, v)
+        elif p in ("scatter", "scatter_min", "scatter_max"):
+            out = self.join(vals[0], vals[-1])   # operand ∪ updates
+        elif p == "sort":
+            n_ops = len(eqn.outvars)
+            return [vals[i] if i < len(vals) else TOP
+                    for i in range(n_ops)]
+        elif p in ("eq", "ne", "lt", "le", "gt", "ge", "and", "or", "not",
+                   "xor", "is_finite", "reduce_sum") and \
+                eqn.outvars and getattr(eqn.outvars[0].aval, "dtype",
+                                        None) == np.bool_:
+            out = (0, 1)
+        elif p == "rem" and vals[1] is not TOP:
+            m = max(abs(vals[1][0]), abs(vals[1][1]))
+            if m > 0:
+                out = (-(m - 1), m - 1)
+        elif p == "shift_left":
+            out = _corners(vals[0], vals[1],
+                           lambda x, y: x * (2 ** max(min(y, 64), 0)))
+
+        # the flag: exact interval escaped int32 while dtype stayed int32
+        if p in _FLAG_PRIMS and out is not TOP and eqn.outvars:
+            aval = eqn.outvars[0].aval
+            if (_is_small_int(getattr(aval, "dtype", None))
+                    and (out[0] < INT32_MIN or out[1] > INT32_MAX)):
+                file, line = eqn_site(eqn)
+                v, e = self.traced.bucket
+                self.findings.append(Finding(
+                    PASS_ID, self.traced.name, "error",
+                    f"{'convert' if p == 'convert_element_type' else p}"
+                    "-overflow",
+                    f"int32 `{p}` with exact value interval "
+                    f"[{out[0]}, {out[1]}] at bucket (V={v}, E={e}) — "
+                    "wraps past 2**31-1 on device (the min*V+max edge-key "
+                    "class of bug; use segment ids or a (min,max) pair "
+                    "instead of a packed product key)",
+                    file, line))
+                out = TOP          # wrapped value is unknowable downstream
+
+        return [out for _ in eqn.outvars]
+
+
+def run(traced: list) -> list[Finding]:
+    findings: list[Finding] = []
+    for t in traced:
+        if t.jaxpr is None:
+            continue
+        interp = _IntRange(t)
+        seeds = []
+        for i, var in enumerate(t.jaxpr.jaxpr.invars):
+            info = t.arg_info[i] if i < len(t.arg_info) else None
+            rng = getattr(info, "range", None) if info else None
+            seeds.append(tuple(int(x) for x in rng) if rng else TOP)
+        interp.run(t.jaxpr, seeds)
+        findings.extend(interp.findings)
+    return findings

@@ -1,0 +1,123 @@
+"""Pass ``padmask`` — every billed sum over a padded array is masked.
+
+The §8 discipline pads every edge buffer to its pow2 bucket with (0,0)
+self-loops and carries the true count alongside. Self-loop padding is
+*algebraically invisible* to the connectivity math (a self-loop never
+merges anything) but NOT to additive statistics: an unmasked
+``jnp.sum`` over a padded hops/edges/per-round array bills the padding
+into WorkCounters — precisely the corruption the true-work billing
+tests exist to catch, found here at trace time instead.
+
+Taint analysis over the jaxpr:
+
+* inputs marked ``padded=True`` in their ``VarInfo`` seed the
+  ``padded`` taint; inputs marked ``mask=True`` (true counts, alive
+  masks) seed the ``mask`` tag;
+* taints propagate through shape ops and arithmetic (union of operand
+  tags); comparisons against a mask-tagged value (``iota < true_count``)
+  produce new masks;
+* **sanitizers**: ``select_n`` whose predicate is mask-tagged, and
+  ``and``/``mul`` with a mask-tagged operand, strip the ``padded``
+  taint — that IS the masking discipline, in any of its three idioms
+  (``jnp.where(alive, x, 0)``, ``x * mask``, ``flags & alive``);
+* ``gather`` keeps only the *operand's* taint (indexing a clean table
+  with padded indices reads in-range garbage rows — a semantic
+  question for the min/consistency reductions, which are safe over
+  (0,0) self-loops — it does not bill);
+* the finding: ``reduce_sum`` over a still-padded operand. Order- and
+  idempotent reductions (min/max/and/or) over self-loop padding are
+  correct by construction and never flagged.
+"""
+from __future__ import annotations
+
+from typing import FrozenSet
+
+from repro.analysis.findings import Finding
+from repro.analysis.jaxpr_utils import AbstractInterpreter, eqn_site
+
+PASS_ID = "padmask"
+
+CLEAN: FrozenSet[str] = frozenset()
+PADDED = frozenset({"padded"})
+MASK = frozenset({"mask"})
+
+_CMP = {"eq", "ne", "lt", "le", "gt", "ge"}
+_SANITIZING_MUL = {"and", "mul"}
+
+
+class _PadTaint(AbstractInterpreter):
+    def __init__(self, traced):
+        self.traced = traced
+        self.findings: list[Finding] = []
+
+    # -- lattice (frozensets of tags; join = union) ------------------------
+
+    def top(self):
+        return CLEAN          # unknown provenance carries no taint
+
+    def join(self, a, b):
+        return a | b
+
+    def from_literal(self, val, aval):
+        return CLEAN
+
+    def const_value(self, const):
+        return CLEAN
+
+    # -- transfer ----------------------------------------------------------
+
+    def rule(self, eqn, vals) -> list:
+        p = eqn.primitive.name
+        union = CLEAN
+        for v in vals:
+            union = union | v
+
+        if p == "select_n" and vals and "mask" in vals[0]:
+            # where(alive, x, fill): the canonical sanitizer
+            out = (union - vals[0]) - PADDED | (vals[0] & MASK)
+        elif p in _SANITIZING_MUL and any("mask" in v for v in vals):
+            out = union - PADDED
+            if p == "and":
+                out = out | MASK          # alive & flags is itself a mask
+        elif p in _CMP and any("mask" in v for v in vals):
+            out = MASK                    # iota < true_count → a new mask
+        elif p == "gather":
+            out = vals[0] if vals else CLEAN   # operand taint only
+        elif p in ("scatter", "scatter_add", "scatter_min", "scatter_max"):
+            out = (vals[0] | vals[-1]) if vals else CLEAN
+        else:
+            out = union
+
+        if p == "reduce_sum" and vals and "padded" in vals[0]:
+            file, line = eqn_site(eqn)
+            self.findings.append(Finding(
+                PASS_ID, self.traced.name, "error", "unmasked-padded-sum",
+                "`reduce_sum` over a padded array with no dominating "
+                "alive/prefix mask — self-loop padding rows are billed "
+                "into the sum (WorkCounters corruption); mask with "
+                "`jnp.where(alive, x, 0)` or multiply by the prefix mask "
+                "before summing",
+                file, line))
+            out = CLEAN        # one report per sink, not per consumer
+
+        return [out for _ in eqn.outvars]
+
+
+def run(traced: list) -> list[Finding]:
+    findings: list[Finding] = []
+    for t in traced:
+        if t.jaxpr is None:
+            continue
+        interp = _PadTaint(t)
+        seeds = []
+        for i, _var in enumerate(t.jaxpr.jaxpr.invars):
+            info = t.arg_info[i] if i < len(t.arg_info) else None
+            tags = CLEAN
+            if info is not None and getattr(info, "padded", False):
+                tags = tags | PADDED
+            if info is not None and getattr(info, "mask", False):
+                tags = tags | MASK
+            seeds.append(tags)
+        interp.run(t.jaxpr, seeds)
+        findings.extend(interp.findings)
+    return findings

@@ -1,0 +1,84 @@
+"""Pass ``retrace`` — shape-bucket hygiene (the retrace-storm guard).
+
+``repro.core.batch`` owns the rule: every device program is compiled
+at pow2 shape buckets, so a stream of arbitrary-sized inputs hits a
+bounded set of compiled programs. This pass lints the traced entries
+against that rule:
+
+* an entry contracted ``bucketed`` whose input avals carry a non-pow2
+  leading dimension compiles one program per distinct size — the
+  retrace storm the bucket rule exists to prevent (error);
+* a weak-typed input aval (a Python scalar that leaked into the traced
+  signature without ``jnp.asarray``/explicit dtype) splits the
+  compilation cache: weak and strong avals hash differently, so the
+  same shapes compile twice (warning);
+* a large array constant captured by closure is baked into the
+  executable — re-traced and re-shipped per compilation. The one
+  sanctioned pattern is the iota table (``jnp.arange(num_nodes)``
+  closes over every variant and XLA folds it); anything else that is
+  big and non-iota gets flagged (warning).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.analysis.findings import Finding
+from repro.analysis.jaxpr_utils import TracedEntry
+
+PASS_ID = "retrace"
+
+_CONST_FLAG_BYTES = 1 << 20          # 1 MiB of captured constant
+
+
+def _is_pow2(n: int) -> bool:
+    return n >= 1 and (n & (n - 1)) == 0
+
+
+def _is_iota_like(arr: np.ndarray) -> bool:
+    if arr.ndim != 1 or not np.issubdtype(arr.dtype, np.integer):
+        return False
+    n = arr.shape[0]
+    if n == 0:
+        return True
+    # cheap exact check: endpoints + strict monotone step of 1
+    return (int(arr[0]) == 0 and int(arr[-1]) == n - 1
+            and bool(np.all(np.diff(arr[:: max(n // 64, 1)]) > 0)))
+
+
+def run(traced: list[TracedEntry]) -> list[Finding]:
+    findings: list[Finding] = []
+    for t in traced:
+        bucketed = "bucketed" in t.entry.contracts
+        if t.jaxpr is None:
+            continue
+        for i, var in enumerate(t.jaxpr.jaxpr.invars):
+            aval = var.aval
+            shape = tuple(getattr(aval, "shape", ()))
+            if bucketed and shape and not _is_pow2(int(shape[0])):
+                findings.append(Finding(
+                    PASS_ID, t.name, "error", f"non-pow2-shape-arg{i}",
+                    f"input {i} has leading dim {shape[0]} (shape "
+                    f"{shape}) on a bucketed entry — one compiled "
+                    "program per distinct size; round up with "
+                    "`next_pow2` / `pad_pow2` before dispatch"))
+            if getattr(aval, "weak_type", False):
+                findings.append(Finding(
+                    PASS_ID, t.name, "warning", f"weak-typed-arg{i}",
+                    f"input {i} is weak-typed ({aval}) — a Python "
+                    "scalar leaked into the traced signature; weak and "
+                    "strong avals split the compilation cache. Pass "
+                    "`jnp.asarray(x, jnp.int32)` instead"))
+        for j, const in enumerate(t.jaxpr.consts):
+            try:
+                arr = np.asarray(const)
+            except Exception:  # noqa: BLE001
+                continue
+            if arr.nbytes <= _CONST_FLAG_BYTES or _is_iota_like(arr):
+                continue
+            findings.append(Finding(
+                PASS_ID, t.name, "warning", "large-captured-const",
+                f"captured constant #{j} ({arr.dtype}{list(arr.shape)}, "
+                f"{arr.nbytes >> 10} KiB) is baked into every compiled "
+                "variant; thread it through as an argument (the iota "
+                "table is the one exempt pattern)"))
+    return findings

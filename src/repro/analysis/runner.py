@@ -1,0 +1,93 @@
+"""The sweep driver: trace every entry, run every pass, gate on the
+baseline.
+
+Buckets: every entry is traced at a CI-sized bucket AND a scale-tier
+bucket (|V|=2^20). Both are symbolic — ``jax.make_jaxpr`` over
+``ShapeDtypeStruct``s allocates nothing — so scale-tier analysis costs
+trace time, not memory. The int32 pass exists for exactly this split:
+the ``min*V+max`` overflow class is invisible at CI shapes and
+guaranteed at paper shapes.
+
+Findings are deduped by key across buckets, filtered through source
+suppression pragmas, and compared against the committed baseline
+(``analysis_baseline.json``); only NEW keys gate.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Optional
+
+from repro.analysis import astlint, intrange, padmask, retrace, transfers
+from repro.analysis.findings import (PASS_IDS, Report, apply_suppressions,
+                                     dedupe)
+from repro.analysis.jaxpr_utils import repo_root, trace
+
+# (num_nodes, num_edges): the CI tier and the paper's scale tier
+BUCKETS = {"small": (1024, 4096), "scale": (1 << 20, 1 << 22)}
+
+_JAXPR_PASSES = (transfers, intrange, retrace, padmask)
+
+
+def analyze(entries: Optional[list] = None, *,
+            buckets: Optional[dict] = None,
+            root: Optional[Path] = None,
+            run_astlint: bool = True) -> Report:
+    """Trace ``entries`` (default: every registered entry) at every
+    bucket, run the pass stack, and return the gated ``Report``."""
+    if entries is None:
+        from repro.analysis.entries import all_entries
+        entries = all_entries()
+    buckets = dict(buckets or BUCKETS)
+    root = root or repo_root()
+
+    traced = [trace(e, b) for e in entries for b in buckets.values()]
+
+    findings = []
+    for pass_mod in _JAXPR_PASSES:
+        findings.extend(pass_mod.run(traced))
+    passes = [p.PASS_ID for p in _JAXPR_PASSES]
+    if run_astlint:
+        findings.extend(astlint.run(root))
+        passes.append(astlint.PASS_ID)
+    assert set(passes) <= set(PASS_IDS)
+
+    kept, suppressed = apply_suppressions(dedupe(findings), root)
+    kept.sort(key=lambda f: (f.severity != "error", f.pass_id, f.entry))
+    return Report(findings=kept, suppressed=suppressed,
+                  entries_checked=sorted({e.name for e in entries}),
+                  passes_run=passes)
+
+
+def selftest() -> list[str]:
+    """Run the pass stack over the seeded-bug fixtures; return the list
+    of failures (empty = the analyzer still catches every bug class it
+    was built from)."""
+    from repro.analysis import fixtures
+
+    failures: list[str] = []
+    fixture_by_name = {e.name: e for e in fixtures.fixture_entries()}
+
+    for name, (pass_id, code, where) in fixtures.EXPECTED.items():
+        entry = fixture_by_name[name]
+        for bucket_name, bucket in BUCKETS.items():
+            rep = analyze([entry], buckets={bucket_name: bucket},
+                          run_astlint=False)
+            hit = any(f.pass_id == pass_id and f.code == code
+                      for f in rep.findings)
+            must_hit = where == "any" or bucket_name == where
+            if must_hit and not hit:
+                failures.append(
+                    f"{name}: expected {pass_id}/{code} at bucket "
+                    f"{bucket_name}{bucket}, not flagged")
+            if where == "scale" and bucket_name == "small" and hit:
+                failures.append(
+                    f"{name}: {pass_id}/{code} fired at the SMALL "
+                    "bucket — the scale-only asymmetry is broken")
+
+    for name in sorted(fixtures.CLEAN):
+        rep = analyze([fixture_by_name[name]], run_astlint=False)
+        if rep.findings:
+            failures.append(
+                f"{name}: clean twin produced findings: "
+                + "; ".join(f.render() for f in rep.findings))
+    return failures

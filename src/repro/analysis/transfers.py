@@ -1,0 +1,91 @@
+"""Pass ``transfer`` — compile-time transfer-freedom.
+
+The serving contract (DESIGN.md §7–§10) says steady-state ticks —
+absorb, delete, coalesce, plan — perform zero host round trips. The
+runtime ``jax.transfer_guard("disallow")`` tests pin that on the
+inputs they happen to run; this pass makes it a *static* guarantee
+over the traced program:
+
+  1. **the entry must stage at all** — ``jax.make_jaxpr`` fails
+     exactly when the Python path materializes a tracer on the host
+     (``.item()``, ``int(...)``, ``np.asarray`` on a traced value, a
+     Python ``if`` on a traced bool). A trace failure on a
+     ``transfer_free``-contracted entry is an error finding carrying
+     the tracer leak's own message;
+  2. **no host-callback primitives reachable** — ``pure_callback`` /
+     ``io_callback`` / ``debug_callback`` / infeed / outfeed anywhere
+     in the closed jaxpr (including loop bodies and called jaxprs) is
+     a host round trip per invocation. Error on contracted entries,
+     warning elsewhere (a callback in a benchmark-only path is legal
+     but worth seeing);
+  3. **no device_put of large host constants** inside contracted
+     programs — a host->device transfer per call defeats the contract
+     even though the guard classifies explicit ``device_put`` as
+     legal. Scalar puts (the true-count idiom) are exempt.
+
+The ONE audited host sink of the stack is
+``repro.connectivity.queries.to_host`` — result materialization after
+a query kernel, outside any jaxpr — so nothing here needs a runtime
+whitelist: anything that shows up inside a traced program is a
+violation by construction.
+"""
+from __future__ import annotations
+
+from repro.analysis.findings import Finding
+from repro.analysis.jaxpr_utils import TracedEntry, eqn_site, walk_eqns
+
+PASS_ID = "transfer"
+
+# host round trip per invocation wherever they appear
+_CALLBACK_PRIMS = {
+    "pure_callback", "io_callback", "debug_callback", "callback",
+    "infeed", "outfeed", "host_callback_call", "outside_call",
+}
+
+_SCALAR_PUT_MAX_ELEMS = 8         # true-count / version scalars are fine
+
+
+def run(traced: list[TracedEntry]) -> list[Finding]:
+    findings: list[Finding] = []
+    for t in traced:
+        contracted = "transfer_free" in t.entry.contracts
+        if t.failure is not None:
+            if contracted:
+                findings.append(Finding(
+                    PASS_ID, t.name, "error", "trace-host-sync",
+                    f"entry failed to stage ({t.failure.exc_type}): a "
+                    "transfer-free path must close to a jaxpr — "
+                    f"{t.failure.message.splitlines()[0][:200]}"))
+            else:
+                # not contracted transfer-free, but an entry that can't
+                # stage at all is invisible to every jaxpr pass — say so
+                findings.append(Finding(
+                    PASS_ID, t.name, "warning", "trace-failed",
+                    f"entry failed to trace ({t.failure.exc_type}); "
+                    "jaxpr passes did not see it — "
+                    f"{t.failure.message.splitlines()[0][:200]}"))
+            continue
+        for eqn in walk_eqns(t.jaxpr):
+            prim = eqn.primitive.name
+            if prim in _CALLBACK_PRIMS:
+                file, line = eqn_site(eqn)
+                findings.append(Finding(
+                    PASS_ID, t.name,
+                    "error" if contracted else "warning",
+                    f"callback-{prim}",
+                    f"host-callback primitive `{prim}` reachable "
+                    + ("on a transfer-free contracted path (one host "
+                       "round trip per tick)" if contracted else
+                       "(host round trip per invocation)"),
+                    file, line))
+            elif prim == "device_put" and contracted:
+                sizes = [getattr(v.aval, "size", 0) for v in eqn.invars]
+                if any(s > _SCALAR_PUT_MAX_ELEMS for s in sizes):
+                    file, line = eqn_site(eqn)
+                    findings.append(Finding(
+                        PASS_ID, t.name, "warning", "large-device-put",
+                        "non-scalar device_put inside a transfer-free "
+                        f"contracted program (sizes={sizes}) — a "
+                        "host->device copy per call",
+                        file, line))
+    return findings

@@ -20,7 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.plan import ExecutionPlan
-from repro.api.registry import Capabilities, register_backend
+from repro.api.registry import (Capabilities, TraceEntry, VarInfo,
+                                register_backend, register_trace_spec)
 from repro.core import batch as batch_mod
 from repro.core import cc as cc_mod
 from repro.core import distributed as dist_mod
@@ -172,3 +173,198 @@ def _distributed(plan: ExecutionPlan) -> CCResult:
         axis_names=plan.opts.get("axis_names", ("data",)),
         lift_steps=plan.lift_steps)
     return CCResult(labels, WorkCounters.zeros())
+
+
+# ---------------------------------------------------------------------------
+# Traceable entry specs — one per backend (repro.analysis; DESIGN.md §11)
+# ---------------------------------------------------------------------------
+# Each spec closes the backend's device program over symbolic shape
+# buckets (ShapeDtypeStructs — no data is allocated) so the static
+# analyzer can hold it to its contracts: transfer-freedom on tick
+# paths, int32 range safety at scale-tier shapes, pow2 bucketing, and
+# padding-mask discipline. Builders construct DeviceGraphs INSIDE the
+# traced function so the flat argument list aligns 1:1 with VarInfo.
+
+def _graph_fn_build(v: int, e: int, run):
+    """Shared builder for entries of shape fn(edges, true_edges)."""
+    import jax
+
+    from repro.core.segmentation import (adaptive_num_segments,
+                                         plan_segmentation)
+    from repro.graphs.device import DeviceGraph
+    plan = plan_segmentation(e, v, adaptive_num_segments(e, v))
+
+    def fn(edges, true_edges):
+        return run(DeviceGraph(edges, v, true_edges, plan))
+
+    args = (jax.ShapeDtypeStruct((e, 2), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32))
+    info = [VarInfo(range=(0, v - 1), padded=True),
+            VarInfo(range=(0, e), mask=True)]
+    return fn, args, info
+
+
+def _static_solve_entry(method: str) -> TraceEntry:
+    def build(v, e, _method=method):
+        return _graph_fn_build(
+            v, e, lambda g: cc_mod.solve_static(g, method=_method))
+    return TraceEntry(name=f"backend.{method}", build=build,
+                      backend=method)
+
+
+@register_trace_spec("static")
+def _static_specs():
+    return [_static_solve_entry(m)
+            for m in cc_mod.METHODS + (cc_mod.FUSED_METHOD,)]
+
+
+@register_trace_spec("pallas")
+def _pallas_specs():
+    def build(v, e):
+        fn, args, info = _graph_fn_build(
+            v, e, lambda g: cc_mod.solve_pallas(g))
+        return fn, args, info
+    return [TraceEntry(name="backend.pallas", build=build,
+                       backend="pallas")]
+
+
+@register_trace_spec("hostloop")
+def _hostloop_specs():
+    # the hostloop backend is CONTRACTED to sync (device_loop=False);
+    # its per-step device programs still must stage cleanly, so each
+    # step is its own entry without the transfer_free contract
+    import jax
+
+    def build_hook(v, e):
+        def fn(pi, edges):
+            return cc_mod._host_hook(pi, edges)
+        return (fn, (jax.ShapeDtypeStruct((v,), jnp.int32),
+                     jax.ShapeDtypeStruct((e, 2), jnp.int32)),
+                [VarInfo(range=(0, v - 1)),
+                 VarInfo(range=(0, v - 1), padded=True)])
+
+    def build_jump(v, e):
+        def fn(pi):
+            return cc_mod._host_jump(pi)
+        return (fn, (jax.ShapeDtypeStruct((v,), jnp.int32),),
+                [VarInfo(range=(0, v - 1))])
+
+    def build_compress(v, e):
+        def fn(pi):
+            return cc_mod._host_compress(pi)
+        return (fn, (jax.ShapeDtypeStruct((v,), jnp.int32),),
+                [VarInfo(range=(0, v - 1))])
+
+    bucketed = frozenset({"bucketed"})
+    return [TraceEntry("backend.hostloop.hook", build_hook, bucketed,
+                       backend="hostloop"),
+            TraceEntry("backend.hostloop.jump", build_jump, bucketed,
+                       backend="hostloop"),
+            TraceEntry("backend.hostloop.compress", build_compress,
+                       bucketed, backend="hostloop")]
+
+
+@register_trace_spec("batched")
+def _batched_specs():
+    def build(v, e, batch=4):
+        import jax
+        per = max(e // batch, 8)
+
+        def fn(edges, true_edges, true_nodes):
+            return batch_mod._cc_batched_jit(
+                edges, true_edges, true_nodes, num_nodes=v,
+                num_segments=None, lift_steps=2)
+        return (fn,
+                (jax.ShapeDtypeStruct((batch, per, 2), jnp.int32),
+                 jax.ShapeDtypeStruct((batch,), jnp.int32),
+                 jax.ShapeDtypeStruct((batch,), jnp.int32)),
+                [VarInfo(range=(0, v - 1), padded=True),
+                 VarInfo(range=(0, per), mask=True),
+                 VarInfo(range=(0, v), mask=True)])
+    return [TraceEntry(name="backend.batched", build=build,
+                       backend="batched")]
+
+
+@register_trace_spec("incremental")
+def _incremental_specs():
+    from repro.core import incremental as inc_mod
+
+    def build(v, e):
+        import jax
+
+        def fn(pi, new_edges, true_count, version):
+            return inc_mod._absorb_jit(pi, new_edges, true_count,
+                                       version, lift_steps=2)
+        return (fn,
+                (jax.ShapeDtypeStruct((v,), jnp.int32),
+                 jax.ShapeDtypeStruct((e, 2), jnp.int32),
+                 jax.ShapeDtypeStruct((), jnp.int32),
+                 jax.ShapeDtypeStruct((), jnp.int32)),
+                [VarInfo(range=(0, v - 1)),
+                 VarInfo(range=(0, v - 1), padded=True),
+                 VarInfo(range=(0, e), mask=True),
+                 VarInfo()])
+    return [TraceEntry(name="backend.incremental.absorb", build=build,
+                       backend="incremental")]
+
+
+def _delete_build(v: int, e: int, scan_method: str):
+    import jax
+
+    from repro.core import incremental as inc_mod
+    from repro.core.segmentation import adaptive_num_segments
+    d = max(e // 4, 8)
+
+    def fn(edges, alive, pi, dels, d_true, version, deleted):
+        return inc_mod._delete_jit(
+            edges, alive, pi, dels, d_true, version, deleted,
+            lift_steps=2, num_segments=adaptive_num_segments(e, v),
+            scan_method=scan_method, interpret=True)
+    return (fn,
+            (jax.ShapeDtypeStruct((e, 2), jnp.int32),
+             jax.ShapeDtypeStruct((e,), jnp.bool_),
+             jax.ShapeDtypeStruct((v,), jnp.int32),
+             jax.ShapeDtypeStruct((d, 2), jnp.int32),
+             jax.ShapeDtypeStruct((), jnp.int32),
+             jax.ShapeDtypeStruct((), jnp.int32),
+             jax.ShapeDtypeStruct((), jnp.int32)),
+            [VarInfo(range=(0, v - 1), padded=True),
+             VarInfo(mask=True),
+             VarInfo(range=(0, v - 1)),
+             VarInfo(range=(0, v - 1), padded=True),
+             VarInfo(range=(0, d), mask=True),
+             VarInfo(),
+             VarInfo()])
+
+
+@register_trace_spec("dynamic")
+def _dynamic_specs():
+    def build_absorb(v, e):
+        return _incremental_specs()[0].build(v, e)
+
+    return [TraceEntry(name="backend.dynamic.absorb",
+                       build=build_absorb, backend="dynamic"),
+            TraceEntry(name="backend.dynamic.delete",
+                       build=lambda v, e: _delete_build(v, e, "jnp"),
+                       backend="dynamic"),
+            TraceEntry(name="backend.dynamic.delete_fused",
+                       build=lambda v, e: _delete_build(
+                           v, e, "pallas_fused"),
+                       backend="dynamic")]
+
+
+@register_trace_spec("distributed")
+def _distributed_specs():
+    def build(v, e):
+        import jax
+        from jax.sharding import Mesh
+
+        from repro.graphs.device import DeviceGraph
+        mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+        dg = DeviceGraph.from_edges(jnp.zeros((e, 2), jnp.int32), v)
+        call = dist_mod.build_distributed_cc(dg, mesh, ("data",))
+        return (call.on_edges,
+                (jax.ShapeDtypeStruct((e, 2), jnp.int32),),
+                [VarInfo(range=(0, v - 1), padded=True)])
+    return [TraceEntry(name="backend.distributed", build=build,
+                       backend="distributed")]

@@ -95,6 +95,81 @@ class _FunctionBackend:
 BACKENDS: Dict[str, Backend] = {}
 
 
+# ---------------------------------------------------------------------------
+# Traceable entry specs (consumed by repro.analysis — DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class VarInfo:
+    """Static facts the analyzer knows about ONE flat traced argument.
+
+    * ``range``  — inclusive (lo, hi) value bounds for integer inputs
+      (vertex ids lie in [0, |V|-1], true counts in [0, |E|], ...);
+      None = unbounded/unknown (the int32 pass treats it as TOP and
+      never reports overflow through it);
+    * ``padded`` — the array carries rows past a true count (the §8
+      prefix-padding / tombstone-log discipline) — the padding-mask
+      pass seeds its taint here;
+    * ``mask``   — the argument IS a true-count scalar or alive mask:
+      a sanitizer source for the padding-mask pass.
+    """
+
+    range: Optional[tuple] = None
+    padded: bool = False
+    mask: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceEntry:
+    """One traceable program of the stack, as data.
+
+    ``build(num_nodes, num_edges)`` returns ``(fn, args, arg_info)``:
+    a pure function over FLAT array arguments, example arguments
+    (``jax.ShapeDtypeStruct``s — nothing is allocated), and a
+    ``VarInfo`` per argument. ``repro.analysis`` closes each entry to
+    a jaxpr via ``jax.make_jaxpr`` at symbolic shape buckets and runs
+    its checker passes over the graph.
+
+    ``contracts`` name the invariants the entry is held to:
+      * ``"transfer_free"`` — the program must stage with zero host
+        round trips (the steady-state tick contract the
+        ``jax.transfer_guard`` tests pin at runtime);
+      * ``"bucketed"``      — inputs must land on the pow2 shape-bucket
+        rule (``repro.core.batch``), the retrace-storm guard.
+    """
+
+    name: str
+    build: Callable[[int, int], tuple]
+    contracts: frozenset = frozenset({"transfer_free", "bucketed"})
+    backend: Optional[str] = None        # owning BACKENDS key, if any
+
+
+TRACE_SPECS: Dict[str, Callable[[], list]] = {}
+
+
+def register_trace_spec(name: str):
+    """Decorator registering a zero-arg builder returning the
+    ``TraceEntry`` list for one backend (or subsystem). The analysis
+    toolkit discovers every traceable program through this registry —
+    adding a backend without a trace spec is caught by its sweep test."""
+    def deco(fn):
+        if name in TRACE_SPECS:
+            raise ValueError(f"trace spec {name!r} already registered")
+        TRACE_SPECS[name] = fn
+        return fn
+    return deco
+
+
+def trace_entries() -> list:
+    """Every registered ``TraceEntry``, sorted by name. Importing
+    ``repro.api.backends`` (and ``repro.analysis.entries``) populates
+    the registry; this accessor only reads it."""
+    out = []
+    for name in sorted(TRACE_SPECS):
+        out.extend(TRACE_SPECS[name]())
+    return sorted(out, key=lambda e: e.name)
+
+
 def register_backend(name: str, capabilities: Capabilities,
                      make_state: Optional[Callable[..., Any]] = None):
     """Class/function decorator registering an execution backend.

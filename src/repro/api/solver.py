@@ -419,7 +419,7 @@ class Solver:
         pairs = np.asarray(pairs, np.int32).reshape(-1, 2)
         self._check_vertices(pairs)
         q = pairs.shape[0]
-        return np.asarray(queries.same_component(
+        return queries.to_host(queries.same_component(
             self.labels, pad_rows_pow2(pairs)))[:q]
 
     def connected(self, u: int, v: int) -> bool:
@@ -431,7 +431,7 @@ class Solver:
         vertices = np.asarray(vertices, np.int32).reshape(-1)
         self._check_vertices(vertices)
         q = vertices.shape[0]
-        return np.asarray(queries.component_size(
+        return queries.to_host(queries.component_size(
             self.labels, pad_rows_pow2(vertices)))[:q]
 
     def component_sizes(self):
@@ -446,7 +446,7 @@ class Solver:
 
     def component_histogram(self) -> np.ndarray:
         """Components per power-of-two size bin."""
-        return np.asarray(queries.component_histogram(self.labels))
+        return queries.to_host(queries.component_histogram(self.labels))
 
     def __repr__(self) -> str:
         mode = "dynamic" if self._dyn is not None else "static"

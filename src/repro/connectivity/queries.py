@@ -26,6 +26,27 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+
+def to_host(result) -> np.ndarray:
+    """THE audited device->host sink for query results.
+
+    Every result materialization in the stack routes through here, so
+    the transfer-freedom story stays auditable: device programs are
+    statically transfer-free (``repro.analysis`` transfer pass), and
+    the one place answers legally cross to the host is this function —
+    called *after* a query kernel returns, never inside anything
+    traced. Calling it on a tracer is a bug by definition and raises
+    under ``jax.make_jaxpr`` (which the analyzer reports as a
+    ``trace-host-sync`` finding on the offending entry).
+    """
+    if isinstance(result, jax.core.Tracer):     # fail loud, not silent
+        raise TypeError(
+            "to_host() called on a tracer — a device->host sync leaked "
+            "into a traced program; keep results on device until after "
+            "the kernel returns")
+    return np.asarray(result)
 
 
 @jax.jit

@@ -44,7 +44,7 @@ import hashlib
 
 import numpy as np
 
-from repro.connectivity import policy
+from repro.connectivity import policy, queries
 from repro.graphs.device import DeviceGraph
 
 _MAX_CACHED_RESULTS = 1024      # per tenant; FIFO-evicted
@@ -122,8 +122,8 @@ class TenantGraph:
         """Host view of the surviving edges (syncs; introspection)."""
         g = self.graph()
         t = g.true_edges_static
-        return np.asarray(g.edges)[: int(g.true_edges) if t is None
-                                   else t]
+        return queries.to_host(g.edges)[: int(g.true_edges) if t is None
+                                        else t]
 
     def _routed(self, call, arg) -> None:
         """Run a facade mutation and fold the solver's OWN route
@@ -270,7 +270,7 @@ class GraphRegistry:
             lambda t: t.solver.num_components()))
 
     def component_histogram(self, name: str) -> np.ndarray:
-        return np.asarray(self._cached(
+        return queries.to_host(self._cached(
             name, ("component_histogram",),
             lambda t: t.solver.component_histogram()))
 

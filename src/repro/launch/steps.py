@@ -341,6 +341,9 @@ def _build_recsys(arch_id, shape, mesh, fsdp) -> Cell:
 def _build_cc(shape, mesh, multi_pod) -> Cell:
     """The paper's distributed CC on a Table I graph (full size)."""
     from repro.configs import cc_graphs
+    # AOT lowering needs the raw edges-level jitted entry (fn.on_edges)
+    # over ShapeDtypeStructs; the Solver facade only exposes the
+    # concrete-plan path.  # analysis: ok[pallas-ast]
     from repro.core.distributed import build_distributed_cc
     import numpy as np
 
