@@ -359,10 +359,12 @@ def service(scale: float) -> None:
     measured for real (same engine, same inputs). hook_ops is the
     hardware-independent signal; every service query is answered from
     the live label array (zero recomputes)."""
+    from repro import obs
     from repro.api import solve
     from repro.connectivity.policy import AutotuneCache, warm_start
     from repro.connectivity.registry import GraphRegistry
-    from repro.connectivity.service import ConnectivityService
+    from repro.connectivity.service import (QUERY_KINDS,
+                                            ConnectivityService)
     from repro.core.unionfind import connected_components_oracle
     from repro.graphs.generators import grid_road, rmat
 
@@ -411,6 +413,11 @@ def service(scale: float) -> None:
                         res.work.hook_ops)
         return svc, counter_ops
 
+    # the stream runs with span tracing + on-device metrics ENABLED —
+    # the SLO table below prices the instrumented service, and the
+    # trace/SLO exports are the CI artifacts
+    tracer = obs.enable(capacity=1 << 14)
+    tracer.reset()
     svc, counter_ops = run_stream(True)
     # correctness gate: final labels equal the union-find oracle
     for name, g in tenants.items():
@@ -418,10 +425,24 @@ def service(scale: float) -> None:
         got = np.asarray(svc.registry.get(name).labels)
         assert np.array_equal(got, want), name
 
+    # export the counted run's telemetry before the timed reruns
+    # overwrite the ring buffer
+    trace_path = os.path.join(RESULTS_DIR, "service_trace.jsonl")
+    tracer.export_jsonl(trace_path)
+    with open(os.path.join(RESULTS_DIR, "service_slo.json"), "w") as fh:
+        json.dump(svc.obs_summary(), fh, indent=1, sort_keys=True)
+
     t = _bench(lambda: run_stream(False)[0].registry.get(
         "road").labels, reps=2)
+    obs.disable()
     service_ops = sum(s["hook_ops"] for s in svc.registry.stats().values())
     assert service_ops < counter_ops, (service_ops, counter_ops)
+
+    def q_ms(quantile, tenant=None):
+        return round(svc.slo.percentile(quantile, tenant=tenant,
+                                        kinds=QUERY_KINDS) * 1e3, 4)
+
+    counters = tracer.counters
     st = svc.stats
     rows = [{
         "workload": "mixed-insert-query",
@@ -438,6 +459,15 @@ def service(scale: float) -> None:
         "hook_ops_perquery_recompute": counter_ops,
         "hook_ops_saved_x": round(counter_ops / max(service_ops, 1), 2),
         "autotune_cache": os.path.basename(cache_path),
+        # latency SLOs (repro.obs; query kinds only, milliseconds):
+        # per-tenant + exact merged global p50/p99
+        **{f"p{int(p * 100)}_ms_query_{name}": q_ms(p, name)
+           for name in tenants for p in (0.50, 0.99)},
+        "p50_ms_query_global": q_ms(0.50),
+        "p99_ms_query_global": q_ms(0.99),
+        "autotune_hits": counters.get("autotune.hit", 0),
+        "autotune_misses": counters.get("autotune.miss", 0),
+        "trace_spans": tracer.log.total,
     }]
     _emit_bench("service", rows)
 
@@ -591,9 +621,22 @@ def api(scale: float) -> None:
     Python — planning is also timed standalone (µs) to show it never
     touches the device. Asserts dispatch adds no measurable per-call
     overhead (way under the noise floor of one jitted solve)."""
+    from repro import obs
     from repro.api import Solver, solve
     from repro.core import cc as cc_mod
     from repro.graphs.device import as_device_graph
+
+    # disabled-mode tracing cost: one no-op span (flag check + shared
+    # null context manager), measured standalone so the <=5% gate below
+    # is deterministic instead of a wall-clock diff in CI-runner noise
+    obs.disable()
+    noop_reps = 100_000
+    t0 = time.perf_counter()
+    for _ in range(noop_reps):
+        with obs.span("noop", backend="adaptive", reason="forced",
+                      bucket="v0_e0"):
+            pass
+    noop_span_ns = (time.perf_counter() - t0) / noop_reps * 1e9
 
     rows = []
     for g in graphs_for_scale(scale):
@@ -603,6 +646,14 @@ def api(scale: float) -> None:
             dg, method="adaptive").labels, reps=5)
         t_facade = _bench(lambda: solver.solve("adaptive").labels,
                           reps=5)
+        # instrumented column: same dispatch with span tracing ON
+        tracer = obs.enable(capacity=1 << 15)
+        t_traced = _bench(lambda: solver.solve("adaptive").labels,
+                          reps=5)
+        tracer.log.clear()
+        solver.solve("adaptive").labels.block_until_ready()
+        spans_per_solve = len(tracer.log)
+        obs.disable()
         # planning alone: host metadata only (µs-scale)
         reps = 200
         t0 = time.perf_counter()
@@ -617,14 +668,26 @@ def api(scale: float) -> None:
         assert plan_us < 2000, (g.name, plan_us)
         assert t_facade <= t_direct * 2.5 + 5e-3, (g.name, t_facade,
                                                    t_direct)
+        # the PR-7 overhead gate: disabled-mode tracing (no-op spans x
+        # instrumented sites on this dispatch) must cost <= 5% of the
+        # facade call — upper-bounded from the standalone no-op cost,
+        # so the gate cannot pass by timing luck
+        disabled_obs_pct = 100 * (noop_span_ns * spans_per_solve) \
+            / max(t_facade * 1e9, 1e-9)
+        assert disabled_obs_pct <= 5.0, (g.name, disabled_obs_pct,
+                                         noop_span_ns, spans_per_solve)
         rows.append({
             "graph": g.name, "nodes": g.num_nodes, "edges": g.num_edges,
             "ms_direct_engine": round(t_direct * 1e3, 3),
             "ms_facade": round(t_facade * 1e3, 3),
+            "ms_facade_traced": round(t_traced * 1e3, 3),
             "overhead_ms": round(overhead_ms, 3),
             "overhead_pct": round(100 * overhead_ms /
                                   max(t_direct * 1e3, 1e-9), 1),
             "plan_us": round(plan_us, 1),
+            "spans_per_solve": spans_per_solve,
+            "noop_span_ns": round(noop_span_ns, 1),
+            "disabled_obs_pct": round(disabled_obs_pct, 3),
         })
     _emit_bench("api", rows)
 

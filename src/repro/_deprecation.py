@@ -10,11 +10,18 @@ from __future__ import annotations
 
 import warnings
 
+from repro.obs import trace as _obs
+
 _WARNED: set[str] = set()
 
 
 def warn_once(legacy: str, replacement: str) -> None:
-    """Emit one ``DeprecationWarning`` per process for ``legacy``."""
+    """Emit one ``DeprecationWarning`` per process for ``legacy``.
+
+    EVERY call bumps the always-on ``deprecated.<legacy>`` obs counter
+    (the warning fires once; legacy-path traffic stays visible in the
+    tick summary and trace exports)."""
+    _obs.count(f"deprecated.{legacy}")
     if legacy in _WARNED:
         return
     _WARNED.add(legacy)

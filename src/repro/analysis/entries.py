@@ -90,6 +90,93 @@ def _service_specs():
             TraceEntry("service.tick.delete", build_delete_tick, _TF)]
 
 
+@register_trace_spec("obs")
+def _obs_specs():
+    """The INSTRUMENTED service tick: the PR-7 telemetry contract that
+    carrying the ``repro.obs`` Metrics pytree through the mutation jits
+    keeps the steady-state tick transfer-free. Same staging as the
+    ``service.tick.*`` entries plus the ``record_mutation`` fold — if
+    the metrics update ever grows a host sync or a callback, the
+    ``transfer`` pass flags it here."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import incremental as inc_mod
+    from repro.core.segmentation import adaptive_num_segments
+    from repro.graphs.device import DeviceGraph
+    from repro.obs import metrics as obs_metrics
+
+    n_slots = 16                          # Metrics.counts leading dim
+    n_kinds = len(obs_metrics.HIST_KINDS)
+    n_bins = obs_metrics.WORK_SPEC.num_bins
+
+    def metrics_args():
+        return ((jax.ShapeDtypeStruct((n_slots,), jnp.int32),
+                 jax.ShapeDtypeStruct((n_kinds, n_bins), jnp.int32)),
+                [VarInfo(), VarInfo()])
+
+    def build_insert_tick(v, e):
+        half = max(e // 2, 8)
+        (m_avals, m_infos) = metrics_args()
+
+        def fn(pi, edges_a, edges_b, version, counts, hist):
+            metrics = obs_metrics.Metrics(counts, hist)
+            batch = DeviceGraph.concat([
+                DeviceGraph.from_edges(edges_a, v),
+                DeviceGraph.from_edges(edges_b, v),
+            ]).pad_pow2()
+            true_count = batch.true_edges_device()
+            pi1, version1, work = inc_mod._absorb_jit(
+                pi, batch.edges, true_count, version, lift_steps=2)
+            metrics = obs_metrics.record_mutation(
+                metrics, work, true_count, version, version1,
+                kind="insert")
+            return pi1, version1, metrics
+        return (fn,
+                (jax.ShapeDtypeStruct((v,), jnp.int32),
+                 jax.ShapeDtypeStruct((half, 2), jnp.int32),
+                 jax.ShapeDtypeStruct((half, 2), jnp.int32),
+                 jax.ShapeDtypeStruct((), jnp.int32)) + m_avals,
+                [VarInfo(range=(0, v - 1)),
+                 VarInfo(range=(0, v - 1)),
+                 VarInfo(range=(0, v - 1)),
+                 VarInfo()] + m_infos)
+
+    def build_delete_tick(v, e):
+        d = max(e // 8, 8)
+        (m_avals, m_infos) = metrics_args()
+
+        def fn(edges, alive, pi, dels, version, deleted, counts, hist):
+            metrics = obs_metrics.Metrics(counts, hist)
+            batch = DeviceGraph.from_edges(dels, v).pad_pow2()
+            true_count = batch.true_edges_device()
+            pi1, alive1, version1, deleted1, work = inc_mod._delete_jit(
+                edges, alive, pi, batch.edges, true_count, version,
+                deleted, lift_steps=2,
+                num_segments=adaptive_num_segments(e, v),
+                scan_method="jnp", interpret=True)
+            metrics = obs_metrics.record_mutation(
+                metrics, work, true_count, version, version1,
+                kind="delete")
+            return pi1, alive1, version1, deleted1, metrics
+        return (fn,
+                (jax.ShapeDtypeStruct((e, 2), jnp.int32),
+                 jax.ShapeDtypeStruct((e,), jnp.bool_),
+                 jax.ShapeDtypeStruct((v,), jnp.int32),
+                 jax.ShapeDtypeStruct((d, 2), jnp.int32),
+                 jax.ShapeDtypeStruct((), jnp.int32),
+                 jax.ShapeDtypeStruct((), jnp.int32)) + m_avals,
+                [VarInfo(range=(0, v - 1), padded=True),
+                 VarInfo(mask=True),
+                 VarInfo(range=(0, v - 1)),
+                 VarInfo(range=(0, v - 1)),
+                 VarInfo(),
+                 VarInfo()] + m_infos)
+
+    return [TraceEntry("obs.tick.insert", build_insert_tick, _TF),
+            TraceEntry("obs.tick.delete", build_delete_tick, _TF)]
+
+
 @register_trace_spec("queries")
 def _query_specs():
     import jax

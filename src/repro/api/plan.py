@@ -22,6 +22,7 @@ import dataclasses
 from typing import Any, Optional
 
 from repro.core.segmentation import SegmentationPlan
+from repro.obs import trace as obs
 
 
 @dataclasses.dataclass
@@ -50,30 +51,69 @@ class ExecutionPlan:
     def run(self):
         """Execute through the registered backend; returns its
         ``CCResult`` (a list of them for batched plans). Extra outputs
-        land in ``self.artifacts``."""
+        land in ``self.artifacts``. Traced as a ``plan.run`` span
+        tagged with the plan provenance when ``repro.obs`` is
+        enabled."""
         from repro.api.registry import get_backend
-        return get_backend(self.backend).run(self)
+        if not obs.enabled():
+            return get_backend(self.backend).run(self)
+        with obs.span("plan.run", **self.trace_tags()):
+            return get_backend(self.backend).run(self)
+
+    def as_dict(self) -> dict:
+        """The decision as one plain-JSON dict — THE schema shared by
+        the ``explain()`` renderer and the tracer's span tags (pinned
+        by a snapshot test so traces and ``explain()`` can't drift)."""
+        seg = self.segmentation
+        return {
+            "backend": self.backend,
+            "reason": self.reason,
+            "num_nodes": self.num_nodes,
+            "num_edges": self.num_edges,
+            "density": 2.0 * self.num_edges / max(self.num_nodes, 1),
+            "bucket": list(self.bucket),
+            "bucket_key": self.bucket_key,
+            "lift_steps": self.lift_steps,
+            "num_segments": self.num_segments,
+            "batch_size": (len(self.graphs) if self.graphs is not None
+                           else None),
+            "segmentation": None if seg is None else {
+                "num_segments": seg.num_segments,
+                "segment_size": seg.segment_size,
+                "padded_edges": seg.padded_edges,
+                "source": ("override" if self.num_segments is not None
+                           else "s=2|E|/|V| heuristic"),
+            },
+            "predicted": dict(self.predicted),
+        }
+
+    def trace_tags(self) -> dict:
+        """The provenance subset of ``as_dict()`` that rides on every
+        span touching this plan: backend, why it won, shape bucket."""
+        d = self.as_dict()
+        return {"backend": d["backend"], "reason": d["reason"],
+                "bucket": d["bucket_key"]}
 
     def explain(self) -> str:
-        """Human-readable account of the adaptive decision."""
+        """Human-readable account of the adaptive decision (rendered
+        from ``as_dict()`` — same fields the tracer tags see)."""
         from repro.api.registry import BACKENDS
-        lines = [f"plan: backend={self.backend} ({self.reason})"]
-        if self.graphs is not None:
-            lines.append(f"  batch: {len(self.graphs)} graphs, "
-                         f"total |E|={self.num_edges}")
-        density = 2.0 * self.num_edges / max(self.num_nodes, 1)
-        lines.append(f"  graph: |V|={self.num_nodes} |E|={self.num_edges} "
-                     f"density={density:.2f} bucket={self.bucket_key}")
-        s = self.segmentation
+        d = self.as_dict()
+        lines = [f"plan: backend={d['backend']} ({d['reason']})"]
+        if d["batch_size"] is not None:
+            lines.append(f"  batch: {d['batch_size']} graphs, "
+                         f"total |E|={d['num_edges']}")
+        lines.append(f"  graph: |V|={d['num_nodes']} |E|={d['num_edges']} "
+                     f"density={d['density']:.2f} "
+                     f"bucket={d['bucket_key']}")
+        s = d["segmentation"]
         if s is not None:
-            src = "override" if self.num_segments is not None \
-                else "s=2|E|/|V| heuristic"
-            lines.append(f"  segmentation: {s.num_segments} segment(s) x "
-                         f"{s.segment_size} edges (padded {s.padded_edges}"
-                         f"; {src})")
-        if self.predicted:
+            lines.append(f"  segmentation: {s['num_segments']} segment(s)"
+                         f" x {s['segment_size']} edges "
+                         f"(padded {s['padded_edges']}; {s['source']})")
+        if d["predicted"]:
             lines.append("  predicted: " + " ".join(
-                f"{k}={v}" for k, v in sorted(self.predicted.items())))
+                f"{k}={v}" for k, v in sorted(d["predicted"].items())))
         backend = BACKENDS.get(self.backend)
         if backend is not None:
             lines.append(f"  capabilities: "

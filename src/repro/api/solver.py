@@ -51,6 +51,7 @@ from repro.core.cc import ALL_METHODS, CCResult
 from repro.core.segmentation import plan_segmentation
 from repro.graphs.device import (DeviceGraph, as_device_graph,
                                  validate_edge_bounds)
+from repro.obs import trace as obs
 
 # method spellings a plan accepts beyond "auto" (each is a backend name)
 _PLANNABLE = tuple(ALL_METHODS) + ("pallas", "hostloop")
@@ -237,7 +238,12 @@ class Solver:
         work)`` with canonical min-id labels. Routing == ``plan()``."""
         plan = self.plan(method, backend=backend,
                          num_segments=num_segments, **opts)
-        res = plan.run()
+        if obs.enabled():
+            with obs.span("solver.solve", tenant=self.name,
+                          **plan.trace_tags()):
+                res = plan.run()
+        else:
+            res = plan.run()
         self.stats["solves"] += 1
         self.last_method = plan.backend
         self._labels = res.labels
@@ -293,6 +299,11 @@ class Solver:
             self._dyn = get_backend("dynamic").make_state(
                 self.num_nodes, lift_steps=self.lift_steps,
                 scan_method=self._scan_method)
+            if obs.enabled():
+                # span tracing on => carry the on-device Metrics pytree
+                # through every mutation jit (still transfer-free; host
+                # materialization only at metrics_summary())
+                self._dyn.enable_metrics()
             seed, self._graph = self._graph, None
             if seed is not None and seed.num_edges:
                 # the opened snapshot routes through the policy as the
@@ -337,7 +348,10 @@ class Solver:
         delta = self._coerce(edges)
         self._ensure_dyn()
         self.stats["inserts"] += 1
-        self._route_insert(delta)
+        with obs.span("solver.insert", tenant=self.name,
+                      edges=delta.num_edges) as sp:
+            self._route_insert(delta)
+            sp.tag(route=self.last_method)
         return self._dyn.version_device
 
     def delete(self, edges):
@@ -350,20 +364,24 @@ class Solver:
         delta = self._coerce(edges)
         dyn = self._ensure_dyn()
         self.stats["deletes"] += 1
-        method = policy.select_for(self.num_nodes, self.num_edges, delta,
-                                   delete=True, cache=self.policy_cache)
-        self.last_method = method
-        if method in policy.DELETE_METHODS:
-            if self._scan_method is None:
-                dyn.scan_method = "pallas_fused" \
-                    if method == policy.DYNAMIC_DELETE_FUSED else "jnp"
-            dyn.delete_graph(delta)
-            self.stats["scoped_deletes"] += 1
-        else:
-            dyn.tombstone_graph(delta)
-            res = self._rebuild(method)
-            dyn.adopt(res.labels, work=res.work)
-            self.stats["rebuilds"] += 1
+        with obs.span("solver.delete", tenant=self.name,
+                      edges=delta.num_edges) as sp:
+            method = policy.select_for(self.num_nodes, self.num_edges,
+                                       delta, delete=True,
+                                       cache=self.policy_cache)
+            self.last_method = method
+            sp.tag(route=method)
+            if method in policy.DELETE_METHODS:
+                if self._scan_method is None:
+                    dyn.scan_method = "pallas_fused" \
+                        if method == policy.DYNAMIC_DELETE_FUSED else "jnp"
+                dyn.delete_graph(delta)
+                self.stats["scoped_deletes"] += 1
+            else:
+                dyn.tombstone_graph(delta)
+                res = self._rebuild(method)
+                dyn.adopt(res.labels, work=res.work)
+                self.stats["rebuilds"] += 1
         return dyn.version_device
 
     # -- live state views ----------------------------------------------------
@@ -405,6 +423,29 @@ class Solver:
         from repro.core.rounds import WorkCounters
         return {k: 0 for k in WorkCounters._fields}
 
+    def enable_metrics(self) -> None:
+        """Attach the on-device ``repro.obs`` Metrics accumulators to
+        the dynamic engine (automatic when tracing was enabled before
+        the first mutation; call this to opt in later). Device-only
+        until ``metrics_summary()``."""
+        self._ensure_dyn().enable_metrics()
+
+    @property
+    def metrics(self):
+        """The live on-device ``Metrics`` pytree (None unless
+        attached). Reading never syncs."""
+        return self._dyn.metrics if self._dyn is not None else None
+
+    def metrics_summary(self) -> dict | None:
+        """Materialize the accumulators on the host (the one explicit
+        sync, via the audited ``queries.to_host`` sink); None when no
+        metrics are attached."""
+        m = self.metrics
+        if m is None:
+            return None
+        from repro.obs import metrics as obs_metrics
+        return obs_metrics.flush(m)
+
     # -- queries (on-device kernels over the live labels) --------------------
 
     def _check_vertices(self, batch: np.ndarray) -> None:
@@ -419,8 +460,10 @@ class Solver:
         pairs = np.asarray(pairs, np.int32).reshape(-1, 2)
         self._check_vertices(pairs)
         q = pairs.shape[0]
-        return queries.to_host(queries.same_component(
-            self.labels, pad_rows_pow2(pairs)))[:q]
+        with obs.span("solver.query.same_component", tenant=self.name,
+                      rows=q):
+            return queries.to_host(queries.same_component(
+                self.labels, pad_rows_pow2(pairs)))[:q]
 
     def connected(self, u: int, v: int) -> bool:
         """Scalar convenience over ``same_component``."""
@@ -431,8 +474,10 @@ class Solver:
         vertices = np.asarray(vertices, np.int32).reshape(-1)
         self._check_vertices(vertices)
         q = vertices.shape[0]
-        return queries.to_host(queries.component_size(
-            self.labels, pad_rows_pow2(vertices)))[:q]
+        with obs.span("solver.query.component_size", tenant=self.name,
+                      rows=q):
+            return queries.to_host(queries.component_size(
+                self.labels, pad_rows_pow2(vertices)))[:q]
 
     def component_sizes(self):
         """int32 [V] size of every vertex's component (device)."""
@@ -442,11 +487,15 @@ class Solver:
         """Distinct-component count (one on-device sort/segment
         kernel — the single counting implementation every layer
         delegates to)."""
-        return int(queries.count_components(self.labels))
+        with obs.span("solver.query.num_components", tenant=self.name):
+            return int(queries.count_components(self.labels))
 
     def component_histogram(self) -> np.ndarray:
         """Components per power-of-two size bin."""
-        return queries.to_host(queries.component_histogram(self.labels))
+        with obs.span("solver.query.component_histogram",
+                      tenant=self.name):
+            return queries.to_host(
+                queries.component_histogram(self.labels))
 
     def __repr__(self) -> str:
         mode = "dynamic" if self._dyn is not None else "static"

@@ -50,6 +50,8 @@ import time
 
 import numpy as np
 
+from repro.obs import trace as obs
+
 # the static engines the heuristic chooses between; the fused Pallas
 # backend joins the measured (autotune) candidate set below
 STATIC_METHODS = ("adaptive", "atomic_hook", "labelprop")
@@ -180,6 +182,9 @@ class AutotuneCache:
 
     def lookup(self, num_nodes: int, num_edges: int) -> str | None:
         ent = self.entries.get(self.key(num_nodes, num_edges))
+        # always-on obs counters: cold-cache serving (miss-heavy
+        # steady state) must be visible in the tick summary
+        obs.count("autotune.hit" if ent else "autotune.miss")
         return ent["method"] if ent else None
 
     def record(self, num_nodes: int, num_edges: int, method: str,
@@ -298,10 +303,15 @@ def select_static_explained(num_nodes: int, num_edges: int, *,
     decision can never drift from the decision itself."""
     f = extract_features(num_nodes, num_edges)
     cache = default_cache() if cache is None else cache
-    hit = cache.lookup(f.num_nodes, f.total_edges)
-    if hit is not None:
-        return hit, "autotune"
-    return heuristic_method(f), "heuristic"
+    with obs.span("policy.select", num_nodes=f.num_nodes,
+                  num_edges=f.total_edges) as sp:
+        hit = cache.lookup(f.num_nodes, f.total_edges)
+        if hit is not None:
+            sp.tag(method=hit, reason="autotune")
+            return hit, "autotune"
+        choice = heuristic_method(f)
+        sp.tag(method=choice, reason="heuristic")
+        return choice, "heuristic"
 
 
 def select_method(num_nodes: int, num_edges: int, *,
@@ -350,8 +360,12 @@ def select_for(num_nodes: int, num_edges: int, delta=None, *,
     batch through the delete-side heuristic (scoped tombstone delete
     vs full static rebuild over the survivors)."""
     size = None if delta is None else delta.num_edges
-    return select_method(
-        num_nodes, num_edges,
-        delta_edges=None if delete else size,
-        delta_deletes=size if delete else None,
-        cache=cache)
+    with obs.span("policy.select_for", num_edges=num_edges, delta=size,
+                  delete=delete) as sp:
+        method = select_method(
+            num_nodes, num_edges,
+            delta_edges=None if delete else size,
+            delta_deletes=size if delete else None,
+            cache=cache)
+        sp.tag(method=method)
+        return method

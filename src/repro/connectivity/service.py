@@ -42,6 +42,7 @@ hook_ops.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Optional
 
 import jax
@@ -49,6 +50,8 @@ import numpy as np
 
 from repro.connectivity.registry import GraphRegistry
 from repro.graphs.device import DeviceGraph, validate_edge_bounds
+from repro.obs import trace as obs
+from repro.obs.slo import SLORecorder
 
 QUERY_KINDS = ("same_component", "component_size", "count_components",
                "component_histogram")
@@ -78,6 +81,13 @@ class ConnectivityService:
         self.slots = slots
         self.queue: list[Request] = []
         self._uid = 0
+        # per-(tenant, kind) latency SLO histograms — a fixed-size
+        # bucket table (never grows with traffic); recorded only while
+        # repro.obs tracing is enabled. Query latencies are end-to-end
+        # (the query path syncs to return answers); mutation latencies
+        # are dispatch-side (blocking the async tick to time it would
+        # serialize the pipeline the service exists to keep full).
+        self.slo = SLORecorder()
         self.stats = {
             "ticks": 0,
             "inserts_absorbed": 0,        # insert requests completed
@@ -107,7 +117,8 @@ class ConnectivityService:
         else:
             payload = None
         self._uid += 1
-        self.queue.append(Request(self._uid, tenant, kind, payload))
+        with obs.span("service.admit", tenant=tenant, kind=kind):
+            self.queue.append(Request(self._uid, tenant, kind, payload))
         return self._uid
 
     def _ingest_edges(self, tenant: str, kind: str, payload
@@ -175,25 +186,37 @@ class ConnectivityService:
         for r in reqs_in:
             by_tenant.setdefault(r.tenant, []).append(r)
         registry_call = getattr(self.registry, kind)
+        record = obs.enabled()
         for tenant, reqs in by_tenant.items():
-            try:
-                # device-side coalescing: one concat + ONE
-                # absorb/tombstone per tenant per tick, zero host
-                # transfers. Only payloads submitted before the tenant
-                # existed (|V|=0 marker) re-bind to its |V| — with the
-                # bounds check they skipped at admission; a real |V|
-                # mismatch must fall through to the registry's error,
-                # not be papered over.
-                n = self.registry.get(tenant).num_nodes
-                batch = DeviceGraph.concat(
-                    [self._rebind(r.payload, n) if
-                     r.payload.num_nodes == 0 and n != 0 else r.payload
-                     for r in reqs])
-                version = registry_call(tenant, batch)
-            except Exception as err:     # fail the group, not the tick
-                for r in reqs:
-                    self._fail(r, err)
-                continue
+            with obs.span(f"service.{kind}", tenant=tenant,
+                          requests=len(reqs)) as sp:
+                t0 = time.perf_counter()
+                try:
+                    # device-side coalescing: one concat + ONE
+                    # absorb/tombstone per tenant per tick, zero host
+                    # transfers. Only payloads submitted before the
+                    # tenant existed (|V|=0 marker) re-bind to its |V| —
+                    # with the bounds check they skipped at admission; a
+                    # real |V| mismatch must fall through to the
+                    # registry's error, not be papered over.
+                    n = self.registry.get(tenant).num_nodes
+                    batch = DeviceGraph.concat(
+                        [self._rebind(r.payload, n) if
+                         r.payload.num_nodes == 0 and n != 0 else r.payload
+                         for r in reqs])
+                    version = registry_call(tenant, batch)
+                except Exception as err:  # fail the group, not the tick
+                    for r in reqs:
+                        self._fail(r, err)
+                    sp.tag(failed=len(reqs))
+                    continue
+                sp.tag(route=self.registry.get(tenant).last_method)
+                dt = time.perf_counter() - t0
+            if record:
+                # dispatch latency, shared by the coalesced group (one
+                # device call served all of them)
+                for _ in reqs:
+                    self.slo.record(tenant, kind, dt)
             self.stats[f"{kind}_calls"] += 1
             for r in reqs:
                 # the version rides as a device scalar; int(...) it to
@@ -204,26 +227,37 @@ class ConnectivityService:
 
     def _run_query_group(self, tenant: str, kind: str,
                          reqs: list[Request]) -> None:
-        try:
-            if kind in ("same_component", "component_size"):
-                parts = [r.payload for r in reqs]
-                flat = np.concatenate(parts, axis=0)
-                answers = getattr(self.registry, kind)(tenant, flat)
-                self.stats["query_calls"] += 1
-                self.stats["pairs_answered"] += int(flat.shape[0])
-                off = 0
-                for r, part in zip(reqs, parts):
-                    r.result = answers[off:off + part.shape[0]]
-                    off += part.shape[0]
-            else:                       # scalar/histogram: one call serves all
-                answer = getattr(self.registry, kind)(tenant)
-                self.stats["query_calls"] += 1
+        with obs.span(f"service.query.{kind}", tenant=tenant,
+                      requests=len(reqs)) as sp:
+            t0 = time.perf_counter()
+            try:
+                if kind in ("same_component", "component_size"):
+                    parts = [r.payload for r in reqs]
+                    flat = np.concatenate(parts, axis=0)
+                    answers = getattr(self.registry, kind)(tenant, flat)
+                    self.stats["query_calls"] += 1
+                    self.stats["pairs_answered"] += int(flat.shape[0])
+                    sp.tag(rows=int(flat.shape[0]))
+                    off = 0
+                    for r, part in zip(reqs, parts):
+                        r.result = answers[off:off + part.shape[0]]
+                        off += part.shape[0]
+                else:               # scalar/histogram: one call serves all
+                    answer = getattr(self.registry, kind)(tenant)
+                    self.stats["query_calls"] += 1
+                    for r in reqs:
+                        r.result = answer
+            except Exception as err:     # fail the group, not the tick
                 for r in reqs:
-                    r.result = answer
-        except Exception as err:         # fail the group, not the tick
-            for r in reqs:
-                self._fail(r, err)
-            return
+                    self._fail(r, err)
+                sp.tag(failed=len(reqs))
+                return
+            dt = time.perf_counter() - t0
+        if obs.enabled():
+            # end-to-end: the query path syncs to return host answers,
+            # so the wall time IS the request latency
+            for _ in reqs:
+                self.slo.record(tenant, kind, dt)
         for r in reqs:
             r.done = True
             self.stats["queries_served"] += 1
@@ -239,15 +273,19 @@ class ConnectivityService:
         self.queue = self.queue[self.slots:]
         self.stats["ticks"] += 1
 
-        for kind in MUTATION_KINDS:       # inserts apply before deletes
-            self._run_mutations(kind,
-                                [r for r in admitted if r.kind == kind])
-        groups: dict[tuple[str, str], list[Request]] = {}
-        for r in admitted:
-            if r.kind not in MUTATION_KINDS:
-                groups.setdefault((r.tenant, r.kind), []).append(r)
-        for (tenant, kind), reqs in groups.items():
-            self._run_query_group(tenant, kind, reqs)
+        # step= maps to jax.profiler.StepTraceAnnotation under the
+        # opt-in profiler bridge, so device profiles step-align
+        with obs.span("service.tick", step=self.stats["ticks"],
+                      admitted=len(admitted)):
+            for kind in MUTATION_KINDS:   # inserts apply before deletes
+                self._run_mutations(
+                    kind, [r for r in admitted if r.kind == kind])
+            groups: dict[tuple[str, str], list[Request]] = {}
+            for r in admitted:
+                if r.kind not in MUTATION_KINDS:
+                    groups.setdefault((r.tenant, r.kind), []).append(r)
+            for (tenant, kind), reqs in groups.items():
+                self._run_query_group(tenant, kind, reqs)
         return admitted
 
     def run(self) -> list[Request]:
@@ -256,3 +294,27 @@ class ConnectivityService:
         while self.queue:
             finished.extend(self.step())
         return finished
+
+    # -- telemetry ---------------------------------------------------------
+
+    def obs_summary(self) -> dict:
+        """The tick summary: per-tenant/global latency SLOs, always-on
+        host counters (autotune hit/miss, deprecation-shim traffic),
+        and the fleet's on-device metrics — merged across tenants with
+        ``Metrics.merge`` (associative, so fold order is irrelevant)
+        and flushed ONCE through the audited ``queries.to_host`` sink.
+        This is the one explicit sync point of the instrumented
+        service; everything upstream of it stays on device."""
+        from repro.obs import metrics as obs_metrics
+        merged = None
+        for name in self.registry.names():
+            m = self.registry.get(name).solver.metrics
+            if m is not None:
+                merged = m if merged is None else merged.merge(m)
+        return {
+            "ticks": self.stats["ticks"],
+            "latency": self.slo.summary(),
+            "counters": dict(obs.tracer().counters),
+            "device_metrics": (None if merged is None
+                               else obs_metrics.flush(merged)),
+        }

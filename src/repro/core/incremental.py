@@ -106,6 +106,30 @@ class IncrementalCC:
         # accumulated totals never wrap int32
         self._work_host = {k: 0 for k in WorkCounters._fields}
         self._work_pending: list[WorkCounters] = []
+        # optional on-device telemetry (repro.obs Metrics pytree):
+        # None (default) costs one attribute check per mutation;
+        # attached, it is updated by a device program per batch —
+        # still transfer-free — and flushed only on explicit request
+        self.metrics = None
+
+    def enable_metrics(self) -> None:
+        """Attach zeroed ``repro.obs`` Metrics accumulators (no-op if
+        already attached)."""
+        if self.metrics is None:
+            from repro.obs.metrics import Metrics
+            self.metrics = Metrics.zeros()
+
+    def _record_metrics(self, kind: str, batch_work, true_count,
+                        version_before) -> None:
+        """Fold one mutation batch into the attached accumulators —
+        every operand is already a device scalar, so the update is one
+        more staged program on the tick (no transfer)."""
+        if self.metrics is None:
+            return
+        from repro.obs import metrics as obs_metrics
+        self.metrics = obs_metrics.record_mutation(
+            self.metrics, batch_work, true_count, version_before,
+            self._version, kind=kind)
 
     @property
     def labels(self) -> jnp.ndarray:
@@ -168,11 +192,12 @@ class IncrementalCC:
         target = max(_MIN_BATCH_PAD, 1 << int(e - 1).bit_length())
         padded = np.zeros((target, 2), np.int32)
         padded[:e] = new_edges
+        v0, true_count = self._version, jax.device_put(np.int32(e))
         self._pi, self._version, batch_work = _absorb_jit(
-            self._pi, jax.device_put(padded),
-            jax.device_put(np.int32(e)), self._version,
+            self._pi, jax.device_put(padded), true_count, self._version,
             lift_steps=self.lift_steps)
         self._queue_work(batch_work)
+        self._record_metrics("insert", batch_work, true_count, v0)
         return self._pi
 
     def insert_graph(self, delta) -> jnp.ndarray:
@@ -191,10 +216,12 @@ class IncrementalCC:
         if self.num_nodes == 0 or delta.edges.shape[0] == 0:
             return self._pi
         padded = delta.pad_pow2(min_rows=_MIN_BATCH_PAD)
+        v0, true_count = self._version, padded.true_edges_device()
         self._pi, self._version, batch_work = _absorb_jit(
-            self._pi, padded.edges, padded.true_edges_device(),
+            self._pi, padded.edges, true_count,
             self._version, lift_steps=self.lift_steps)
         self._queue_work(batch_work)
+        self._record_metrics("insert", batch_work, true_count, v0)
         return self._pi
 
     def adopt(self, labels, work=None, num_edges: int = 0) -> jnp.ndarray:
@@ -216,6 +243,11 @@ class IncrementalCC:
             return self._pi
         self._pi, self._version = _adopt_jit(self._pi, labels,
                                              self._version)
+        if self.metrics is not None:
+            # rebuild work is billed through the engine's own
+            # WorkCounters; the accumulator counts the route
+            from repro.obs import metrics as obs_metrics
+            self.metrics = obs_metrics.record_rebuild(self.metrics)
         return self._pi
 
     def connected(self, u: int, v: int) -> bool:
@@ -387,16 +419,18 @@ class DynamicCC(IncrementalCC):
         from repro.core.segmentation import adaptive_num_segments
         from repro.kernels import default_interpret
         padded = dels.pad_pow2(min_rows=_MIN_BATCH_PAD)
+        v0, true_count = self._version, padded.true_edges_device()
         (self._pi, self.log.alive, self._version, self._deleted,
          batch_work) = _delete_jit(
             self.log.edges, self.log.alive, self._pi, padded.edges,
-            padded.true_edges_device(), self._version, self._deleted,
+            true_count, self._version, self._deleted,
             lift_steps=self.lift_steps,
             num_segments=adaptive_num_segments(self.log.capacity,
                                                self.num_nodes),
             scan_method=self.scan_method,
             interpret=default_interpret())
         self._queue_work(batch_work)
+        self._record_metrics("delete", batch_work, true_count, v0)
         return self._pi
 
     def tombstone_graph(self, dels) -> None:

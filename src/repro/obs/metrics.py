@@ -1,0 +1,231 @@
+"""On-device metric accumulators (DESIGN.md §12).
+
+A small ``Metrics`` pytree — named int32 counters plus fixed-size
+int32 histogram bucket arrays — carried through the absorb/delete jits
+exactly like ``core.rounds.WorkCounters``: updated by device programs,
+merged associatively, and materialized on the host ONLY at an explicit
+``flush()`` through the audited ``queries.to_host()`` sink. That keeps
+the steady-state service tick transfer-free with instrumentation ON —
+pinned by the ``obs.tick.*`` TraceEntries under the analysis
+``transfer`` pass and by a ``jax.transfer_guard`` test.
+
+Pytree rules (what keeps the analysis passes green and the jit caches
+warm — follow these when adding a metric):
+
+* every leaf is a fixed-shape int32 array whose leading dim is a
+  power of two (the ``retrace`` pass rejects non-pow2 bucketed
+  inputs); named slots index into a padded array rather than adding
+  a leaf per name;
+* updates are pure ``(Metrics, device scalars) -> Metrics`` functions
+  with any data-dependent choice expressed as arithmetic/scatter —
+  no host branching on device values;
+* ``merge`` is elementwise ``+`` — associative and commutative, so
+  per-tenant accumulators fold in any order into fleet totals;
+* counters saturate nowhere: they are int32 adds, so flush well
+  before 2^31 events (the service flushes per ``obs_summary()``).
+
+``HistogramSpec`` is shared by the device histograms here and the
+host-side latency SLO layer (``obs.slo``): log-spaced fixed bucket
+edges, so a quantile read off bucket counts is exact to within one
+bucket (ratio error bounded by the edge ratio — tested against an
+``np.percentile`` oracle).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class HistogramSpec:
+    """Fixed log-spaced bucket layout shared by device (jnp) and host
+    (np) accumulators.
+
+    ``num_bins`` buckets over ``num_bins - 1`` inner edges
+    (geometrically spaced from ``lo`` to ``hi``): bucket 0 is the
+    underflow ``(-inf, lo)``, bucket ``num_bins - 1`` the overflow
+    ``[hi, inf)``. A quantile estimated from bucket counts is the
+    geometric midpoint of the crossing bucket — off from the true
+    sample quantile by at most one edge ratio (``resolution()``).
+    """
+
+    lo: float
+    hi: float
+    num_bins: int
+
+    def __post_init__(self):
+        if not (0 < self.lo < self.hi):
+            raise ValueError(f"need 0 < lo < hi, got {self.lo}, {self.hi}")
+        if self.num_bins < 4:
+            raise ValueError(f"need >= 4 bins, got {self.num_bins}")
+
+    @functools.cached_property
+    def edges(self) -> np.ndarray:
+        """Inner edges, float64 [num_bins - 1], log-spaced lo..hi."""
+        return np.geomspace(self.lo, self.hi, self.num_bins - 1)
+
+    def resolution(self) -> float:
+        """Adjacent-edge ratio — the worst-case multiplicative error of
+        ``quantile`` against the true sample quantile."""
+        return float((self.hi / self.lo) ** (1.0 / (self.num_bins - 2)))
+
+    # -- bucketing ----------------------------------------------------------
+
+    def bucket(self, values) -> np.ndarray:
+        """Host bucket index/indices for value(s)."""
+        return np.searchsorted(self.edges, values, side="right")
+
+    def bucket_device(self, value: jnp.ndarray) -> jnp.ndarray:
+        """Device bucket index for a scalar (stages into the caller's
+        jit; the edges array is a tiny captured const)."""
+        edges = jnp.asarray(self.edges, jnp.float32)
+        return jnp.searchsorted(edges, value.astype(jnp.float32),
+                                side="right").astype(jnp.int32)
+
+    def observe(self, counts: np.ndarray, value: float) -> None:
+        """Host in-place increment (the SLO layer's hot path)."""
+        counts[int(np.searchsorted(self.edges, value, side="right"))] += 1
+
+    # -- reading ------------------------------------------------------------
+
+    def quantile(self, counts: np.ndarray, q: float) -> float:
+        """Estimate the q-quantile (q in [0, 1]) from bucket counts:
+        the geometric midpoint of the bucket where the cumulative count
+        crosses ``q * total`` (underflow reads as ``lo``, overflow as
+        ``hi``). NaN when empty."""
+        counts = np.asarray(counts)
+        total = int(counts.sum())
+        if total == 0:
+            return float("nan")
+        rank = max(q * total, 1e-9)
+        b = int(np.searchsorted(np.cumsum(counts), rank, side="left"))
+        if b <= 0:
+            return float(self.lo)
+        if b >= self.num_bins - 1:
+            return float(self.hi)
+        return float(np.sqrt(self.edges[b - 1] * self.edges[b]))
+
+
+# Device work histograms: batch sizes and per-batch hook work span
+# 1 .. ~1e9 over 32 bins (pow2 for the retrace pass; ratio ~2x/bucket).
+WORK_SPEC = HistogramSpec(lo=1.0, hi=2.0**30, num_bins=32)
+
+# Named counter slots. The backing array is padded to _NUM_SLOTS so the
+# pytree leaf keeps a pow2 leading dim; add names here (order is ABI
+# for flushed dicts only, not for device programs).
+COUNTERS = (
+    "absorbs",          # incremental-path insert batches
+    "deletes",          # scoped-delete batches
+    "rebuilds",         # mutations routed through a static engine
+    "merges",           # absorbs that changed the partition (version tick)
+    "splits",           # deletes that changed the partition (version tick)
+    "edges_absorbed",   # true (unpadded) rows across absorb batches
+    "edges_retired",    # true (unpadded) rows across delete batches
+    "hook_ops",         # per-batch hook work folded from WorkCounters
+    "jump_sweeps",      # pointer-jumping sweeps folded from WorkCounters
+)
+_NUM_SLOTS = 16
+assert len(COUNTERS) <= _NUM_SLOTS
+
+HIST_KINDS = (
+    "absorb_edges",     # true batch size per absorb
+    "delete_edges",     # true batch size per delete
+    "absorb_hook_ops",  # hook work per absorb batch
+    "delete_hook_ops",  # hook work per delete batch
+)
+
+_C = {name: i for i, name in enumerate(COUNTERS)}
+_H = {name: i for i, name in enumerate(HIST_KINDS)}
+
+
+class Metrics(NamedTuple):
+    """The accumulator pytree: ``counts`` int32 [16] (named slots via
+    ``COUNTERS``), ``hist`` int32 [4, 32] (``HIST_KINDS`` x
+    ``WORK_SPEC`` buckets). NamedTuple => automatic pytree."""
+
+    counts: jnp.ndarray
+    hist: jnp.ndarray
+
+    @staticmethod
+    def zeros() -> "Metrics":
+        return Metrics(
+            counts=jnp.zeros((_NUM_SLOTS,), jnp.int32),
+            hist=jnp.zeros((len(HIST_KINDS), WORK_SPEC.num_bins),
+                           jnp.int32))
+
+    def merge(self, other: "Metrics") -> "Metrics":
+        """Elementwise sum — associative/commutative, so per-tenant and
+        per-tick accumulators fold in any order."""
+        return Metrics(self.counts + other.counts, self.hist + other.hist)
+
+
+def _observe(hist: jnp.ndarray, row: int, value: jnp.ndarray) -> jnp.ndarray:
+    return hist.at[row, WORK_SPEC.bucket_device(value)].add(1)
+
+
+@functools.partial(jax.jit, static_argnames=("kind",))
+def record_mutation(metrics: Metrics, batch_work, true_count,
+                    version_before, version_after, *, kind: str) -> Metrics:
+    """Fold one mutation batch into the accumulators — all operands are
+    device scalars (or the ``WorkCounters`` delta), so this composes
+    into the tick without a transfer. ``kind`` is static
+    ("insert"/"delete"); the partition-change bit is
+    ``version_after != version_before`` computed on device."""
+    if kind == "insert":
+        tick, edge_slot, change_slot = "absorbs", "edges_absorbed", "merges"
+        h_edges, h_hook = "absorb_edges", "absorb_hook_ops"
+    elif kind == "delete":
+        tick, edge_slot, change_slot = "deletes", "edges_retired", "splits"
+        h_edges, h_hook = "delete_edges", "delete_hook_ops"
+    else:
+        raise ValueError(f"kind must be insert|delete, got {kind!r}")
+    true_count = jnp.asarray(true_count).astype(jnp.int32)
+    hook_ops = jnp.asarray(batch_work.hook_ops).astype(jnp.int32)
+    sweeps = jnp.asarray(batch_work.jump_sweeps).astype(jnp.int32)
+    changed = (jnp.asarray(version_after)
+               != jnp.asarray(version_before)).astype(jnp.int32)
+    counts = (metrics.counts
+              .at[_C[tick]].add(1)
+              .at[_C[edge_slot]].add(true_count)
+              .at[_C[change_slot]].add(changed)
+              .at[_C["hook_ops"]].add(hook_ops)
+              .at[_C["jump_sweeps"]].add(sweeps))
+    hist = _observe(metrics.hist, _H[h_edges], true_count)
+    hist = _observe(hist, _H[h_hook], hook_ops)
+    return Metrics(counts, hist)
+
+
+@jax.jit
+def record_rebuild(metrics: Metrics) -> Metrics:
+    """Count a static-rebuild adoption (bulk insert/drop routed through
+    a static engine). Rebuild work is already billed through the
+    engine's own ``WorkCounters``; the accumulator just counts the
+    route."""
+    return Metrics(metrics.counts.at[_C["rebuilds"]].add(1), metrics.hist)
+
+
+def flush(metrics: Metrics) -> dict:
+    """Materialize the accumulators on the host — the ONE device->host
+    crossing, routed through the audited ``queries.to_host`` sink (so
+    it cannot run under a tracer or inside a transfer-guarded tick).
+    Returns ``{"counters": {name: int}, "histograms": {kind: {count,
+    p50, p99}}}``."""
+    from repro.connectivity.queries import to_host
+    counts = to_host(metrics.counts)
+    hist = to_host(metrics.hist)
+    out = {"counters": {name: int(counts[i]) for name, i in _C.items()},
+           "histograms": {}}
+    for kind, row in _H.items():
+        c = np.asarray(hist[row], np.int64)
+        n = int(c.sum())
+        entry = {"count": n}
+        if n:
+            entry["p50"] = round(WORK_SPEC.quantile(c, 0.50), 3)
+            entry["p99"] = round(WORK_SPEC.quantile(c, 0.99), 3)
+        out["histograms"][kind] = entry
+    return out
