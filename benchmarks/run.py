@@ -36,6 +36,13 @@
               method="pallas_fused") vs one launch per segment hook +
               one per compress sweep, interpret mode on CPU. Launch
               counts are the hardware-independent signal.
+  sampled     Sampling-accelerated table (DESIGN.md §13): k-out
+              sampling + residue-only scan (``sampled`` /
+              ``sampled_fused``) vs the full-scan ``adaptive`` and
+              ``pallas_fused`` backends on skewed (soc/kron) and
+              road stand-ins; asserts the residue scan pays less than
+              the full scan on skewed inputs and that the degree-skew
+              policy routes ``auto`` onto/off sampling per class.
 
 Output: CSV blocks on stdout + files under benchmarks/results/; the
 batched/incremental/service/fused tables additionally emit one standard
@@ -613,6 +620,85 @@ def fused(scale: float) -> None:
     _emit_bench("fused", rows)
 
 
+def sampled(scale: float) -> None:
+    """Sampling-accelerated table (DESIGN.md §13): the k-out sampling
+    phase + residue-only adaptive scan (``sampled`` / ``sampled_fused``)
+    vs the full-scan jnp ``adaptive`` and ``pallas_fused`` backends, on
+    the Table I stand-ins. The skewed classes (soc/kron R-MATs) are the
+    sampling phase's home turf — two cheap k-out rounds collapse the
+    giant component and the expensive scan touches only the residue;
+    the road grids are the contrast rows where sampling does NOT pay
+    and the degree-skew policy keeps ``auto`` off it. hook_ops is the
+    hardware-independent signal (Pallas wall-clock is interpret-mode,
+    same caveat as the fused table)."""
+    from repro.api import Solver
+    from repro.connectivity.policy import AutotuneCache
+    from repro.core.unionfind import connected_components_oracle
+
+    skewed_classes = {"soc-live-journal", "kron-logn21"}
+    rows = []
+    for g in graphs_for_scale(scale):
+        is_skewed = g.name in skewed_classes
+        want = connected_components_oracle(g.edges, g.num_nodes)
+        solver = Solver.open(g, policy_cache=AutotuneCache())
+
+        res = {}
+        ms = {}
+        for backend in ("adaptive", "sampled", "sampled_fused"):
+            res[backend] = solver.solve(backend=backend)
+            assert np.array_equal(np.asarray(res[backend].labels),
+                                  want), (g.name, backend)
+            if backend == "sampled":
+                stats = dict(solver.last_plan.artifacts["sampled_stats"])
+            ms[backend] = _bench(
+                lambda b=backend: solver.solve(backend=b).labels,
+                reps=1 if backend == "sampled_fused" else 2)
+        res["pallas_fused"] = solver.solve(backend="pallas_fused")
+        assert np.array_equal(np.asarray(res["pallas_fused"].labels),
+                              want), g.name
+        ms["pallas_fused"] = _bench(
+            lambda: solver.solve(backend="pallas_fused").labels, reps=1)
+
+        full_ops = int(res["adaptive"].work.hook_ops)
+        samp_ops = int(res["sampled"].work.hook_ops)
+        # phase billing folds exactly into the total (bit-exact gate)
+        assert stats["sample_hook_ops"] + stats["residue_hook_ops"] \
+            == samp_ops, g.name
+        # the satellite's acceptance signal: on skewed inputs the
+        # sampling phase shrinks the scan — the residue pays less than
+        # the full scan did, and the TOTAL (sampling included) wins too
+        if is_skewed:
+            assert stats["residue_hook_ops"] < full_ops, (
+                g.name, stats["residue_hook_ops"], full_ops)
+            assert samp_ops < full_ops, (g.name, samp_ops, full_ops)
+        # ...and the degree-skew feature routes "auto" accordingly
+        auto = solver.plan().backend
+        if is_skewed:
+            assert auto == "sampled", (g.name, auto)
+        else:
+            assert auto != "sampled", (g.name, auto)
+
+        rows.append({
+            "graph": g.name, "nodes": g.num_nodes, "edges": g.num_edges,
+            "skewed": int(is_skewed),
+            "auto_backend": auto,
+            "ms_adaptive": round(ms["adaptive"] * 1e3, 2),
+            "ms_pallas_fused_interpret":
+                round(ms["pallas_fused"] * 1e3, 2),
+            "ms_sampled": round(ms["sampled"] * 1e3, 2),
+            "ms_sampled_fused_interpret":
+                round(ms["sampled_fused"] * 1e3, 2),
+            "hook_ops_adaptive": full_ops,
+            "hook_ops_sampled": samp_ops,
+            "hook_ops_saved_x": round(full_ops / max(samp_ops, 1), 2),
+            "sample_hook_ops": stats["sample_hook_ops"],
+            "residue_hook_ops": stats["residue_hook_ops"],
+            "n_residue": stats["n_residue"],
+            "giant_size": stats["giant_size"],
+        })
+    _emit_bench("sampled", rows)
+
+
 def api(scale: float) -> None:
     """Facade-overhead table (DESIGN.md §10): ``repro.api.solve``
     (plan construction + policy lookup + registry dispatch) vs calling
@@ -697,7 +783,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     choices=["table1", "fig5", "fig6", "kernels",
                              "batched", "incremental", "service",
-                             "dynamic", "fused", "api"])
+                             "dynamic", "fused", "sampled", "api"])
     ap.add_argument("--scale", type=float, default=1 / 256,
                     help="Table I graph scale factor")
     args = ap.parse_args()
@@ -710,6 +796,7 @@ def main() -> None:
             "service": lambda: service(args.scale),
             "dynamic": lambda: dynamic(args.scale),
             "fused": lambda: fused(args.scale),
+            "sampled": lambda: sampled(args.scale),
             "api": lambda: api(args.scale)}
     for name, job in jobs.items():
         if args.only and name != args.only:

@@ -38,13 +38,20 @@ def method_sweep() -> None:
               f"auto->{s.plan().backend} ===")
         print(f"{'backend':<12} {'sync_rounds':>11} {'hook_ops':>12} "
               f"{'jump_sweeps':>11}")
-        for backend in ("soman", "multijump", "atomic_hook", "adaptive"):
+        for backend in ("soman", "multijump", "atomic_hook", "adaptive",
+                        "sampled"):
             res = s.solve(backend=backend)
             assert np.array_equal(np.asarray(res.labels), oracle), backend
             w = res.work
             print(f"{backend:<12} {int(w.sync_rounds):>11} "
                   f"{int(w.hook_ops):>12} {int(w.jump_sweeps):>11}")
         print("all backends match the union-find oracle ✓")
+        # the spanning forest is a first-class product: |V| - C parent
+        # edges recorded during the hook rounds, roots = component minima
+        forest = s.spanning_forest()
+        n_edges = int(np.sum(np.asarray(forest.parents)[:, 0] >= 0))
+        print(f"spanning forest: {n_edges:,} tree edges "
+              f"({gr.num_nodes - n_edges:,} roots)")
 
 
 if __name__ == "__main__":

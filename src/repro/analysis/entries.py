@@ -220,12 +220,23 @@ def _query_specs():
             return q.component_histogram(labels)
         return fn, (la,), [li]
 
+    def build_forest_stats(v, e):
+        la, li = labels_arg(v)
+
+        def fn(labels, parents):
+            return q.spanning_forest_stats(labels, parents)
+        # parents rows carry -1 sentinels for roots, hence the -1 floor
+        return (fn, (la, jax.ShapeDtypeStruct((v, 2), jnp.int32)),
+                [li, VarInfo(range=(-1, v - 1))])
+
     return [
         TraceEntry("queries.same_component", build_same_component, _TF),
         TraceEntry("queries.component_size", build_component_size, _TF),
         TraceEntry("queries.count_components", build_count_components, _TF),
         TraceEntry("queries.component_histogram",
                    build_component_histogram, _TF),
+        TraceEntry("queries.spanning_forest_stats", build_forest_stats,
+                   _TF),
     ]
 
 

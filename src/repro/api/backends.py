@@ -37,8 +37,10 @@ __all__ = []            # nothing public; importing registers everything
 # ---------------------------------------------------------------------------
 
 def _register_jnp_variant(method: str) -> None:
-    @register_backend(method, Capabilities(static=True,
-                                           bit_exact_counters=True))
+    @register_backend(
+        method,
+        Capabilities(static=True, bit_exact_counters=True,
+                     spanning_forest=method in cc_mod.FOREST_METHODS))
     def _run(plan: ExecutionPlan, _method=method) -> CCResult:
         return cc_mod.solve_static(plan.graph, method=_method,
                                    num_segments=plan.num_segments,
@@ -73,6 +75,43 @@ def _pallas_per_round(plan: ExecutionPlan) -> CCResult:
                                  lift_steps=plan.lift_steps,
                                  interpret=plan.opts.get("interpret"))
     return CCResult(labels, WorkCounters.zeros())
+
+
+# ---------------------------------------------------------------------------
+# Sampling-accelerated backends (k-out / Afforest-style; DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def _run_sampled(plan: ExecutionPlan, fused: bool) -> CCResult:
+    from repro.core import sampled as sampled_mod
+    res = sampled_mod.solve_sampled(plan.graph,
+                                    num_segments=plan.num_segments,
+                                    lift_steps=plan.lift_steps,
+                                    fused=fused,
+                                    interpret=plan.opts.get("interpret"))
+    # phase-split telemetry (device scalars synced once, post-solve)
+    plan.artifacts["sampled_stats"] = {k: int(v)
+                                       for k, v in res.stats.items()}
+    return CCResult(res.labels, res.work)
+
+
+@register_backend("sampled",
+                  Capabilities(static=True, bit_exact_counters=True,
+                               spanning_forest=True))
+def _sampled(plan: ExecutionPlan) -> CCResult:
+    """k-out sampling phase collapses the giant component, then the
+    adaptive Fig. 4 scan covers the residue only (Hong et al.). The
+    sampled-vs-residue work split lands in
+    ``plan.artifacts["sampled_stats"]``."""
+    return _run_sampled(plan, fused=False)
+
+
+@register_backend("sampled_fused",
+                  Capabilities(static=True, bit_exact_counters=True))
+def _sampled_fused(plan: ExecutionPlan) -> CCResult:
+    """``sampled`` with the residue scan routed through the fused
+    Pallas kernel (one launch per scan). The kernel does not record
+    forest edges, so this variant does not claim ``spanning_forest``."""
+    return _run_sampled(plan, fused=True)
 
 
 # ---------------------------------------------------------------------------
@@ -216,6 +255,49 @@ def _static_solve_entry(method: str) -> TraceEntry:
 def _static_specs():
     return [_static_solve_entry(m)
             for m in cc_mod.METHODS + (cc_mod.FUSED_METHOD,)]
+
+
+@register_trace_spec("sampled")
+def _sampled_specs():
+    import jax
+
+    from repro.core import rounds, sampled as sampled_mod
+    from repro.core.segmentation import adaptive_num_segments
+
+    def build_sample(v, e):
+        def fn(edges, true_edges):
+            return sampled_mod._sample_phase_jit(
+                edges, true_edges, num_nodes=v, k=sampled_mod.SAMPLE_K,
+                sample_rounds=sampled_mod.SAMPLE_ROUNDS, lift_steps=2)
+        return (fn, (jax.ShapeDtypeStruct((e, 2), jnp.int32),
+                     jax.ShapeDtypeStruct((), jnp.int32)),
+                [VarInfo(range=(0, v - 1), padded=True),
+                 VarInfo(range=(0, e), mask=True)])
+
+    def residue_build(v, e, fused):
+        # parents/work start fresh inside the trace (scalar constants
+        # only); pi arrives as the sampling phase's label array
+        def fn(edges, true_edges, pi):
+            return sampled_mod._residue_scan_jit(
+                edges, true_edges, pi, rounds.empty_forest(v),
+                WorkCounters.zeros(), num_nodes=v,
+                num_segments=adaptive_num_segments(e, v),
+                lift_steps=2, fused=fused, interpret=True)
+        return (fn, (jax.ShapeDtypeStruct((e, 2), jnp.int32),
+                     jax.ShapeDtypeStruct((), jnp.int32),
+                     jax.ShapeDtypeStruct((v,), jnp.int32)),
+                [VarInfo(range=(0, v - 1), padded=True),
+                 VarInfo(range=(0, e), mask=True),
+                 VarInfo(range=(0, v - 1))])
+
+    return [TraceEntry(name="backend.sampled.sample_phase",
+                       build=build_sample, backend="sampled"),
+            TraceEntry(name="backend.sampled.residue",
+                       build=lambda v, e: residue_build(v, e, False),
+                       backend="sampled"),
+            TraceEntry(name="backend.sampled_fused.residue",
+                       build=lambda v, e: residue_build(v, e, True),
+                       backend="sampled_fused")]
 
 
 @register_trace_spec("pallas")

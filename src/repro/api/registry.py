@@ -46,6 +46,9 @@ class Capabilities:
     # for cross-mode comparison — pallas_fused's are additionally
     # bit-identical to the jnp adaptive composition, asserted in tests)
     bit_exact_counters: bool = False
+    # records the spanning forest during hook rounds (the parent-edge
+    # table behind Solver.spanning_forest(); property-tested)
+    spanning_forest: bool = False
 
     def describe(self) -> str:
         flag = lambda b: "y" if b else "n"          # noqa: E731
@@ -54,7 +57,8 @@ class Capabilities:
                 f"deletions={flag(self.deletions)} "
                 f"sharded={flag(self.sharded)} "
                 f"device_loop={flag(self.device_loop)} "
-                f"bit_exact_counters={flag(self.bit_exact_counters)}")
+                f"bit_exact_counters={flag(self.bit_exact_counters)} "
+                f"spanning_forest={flag(self.spanning_forest)}")
 
 
 @runtime_checkable

@@ -82,6 +82,7 @@ class Solver:
         self.name = name
         self._dyn = None               # live dynamic state (lazy)
         self._labels = None            # cached static-solve labels
+        self._forest = None            # cached (method, ForestResult)
         self._empty = None             # cached empty DeviceGraph
         self.last_method: str | None = None
         self.last_plan: ExecutionPlan | None = None
@@ -214,10 +215,20 @@ class Solver:
         elif self.mesh is not None:
             chosen, reason = "distributed", "sharded"
         else:
+            # the skew feature rides the graph's static pytree metadata
+            # (measured once at host ingest; None for device-resident
+            # edge arrays) — it routes kron/soc-style graphs to the
+            # sampled engine at scale and costs road-like graphs nothing
             chosen, reason = policy.select_static_explained(
-                n, e, cache=self.policy_cache)
+                n, e, degree_skew=g.degree_skew,
+                cache=self.policy_cache)
         seg = g.plan if num_segments is None else plan_segmentation(
             int(g.edges.shape[0]), n, num_segments)
+        predicted = {"hook_ops_per_round": e,
+                     "jump_ops_per_sweep": n,
+                     "segments": seg.num_segments}
+        if g.degree_skew is not None:
+            predicted["degree_skew"] = round(float(g.degree_skew), 3)
         plan = ExecutionPlan(
             backend=chosen, reason=reason, num_nodes=n, num_edges=e,
             bucket=bucket_shape(n, e), segmentation=seg,
@@ -225,9 +236,7 @@ class Solver:
             graph=g,
             opts={"mesh": self.mesh, "axis_names": self.axis_names,
                   **opts},
-            predicted={"hook_ops_per_round": e,
-                       "jump_ops_per_sweep": n,
-                       "segments": seg.num_segments})
+            predicted=predicted)
         return plan
 
     # -- static solve --------------------------------------------------------
@@ -247,6 +256,39 @@ class Solver:
         self.stats["solves"] += 1
         self.last_method = plan.backend
         self._labels = res.labels
+        return res
+
+    def spanning_forest(self, method: str | None = None):
+        """Labels PLUS the spanning forest the hook rounds record —
+        ``ForestResult(labels, parents, work)`` where ``parents`` is
+        int32 [V, 2]: row r holds the original graph edge whose hook
+        retired root r, (-1, -1) for the one root per component (the
+        component minimum). Exactly |V| - C rows are recorded and they
+        form a spanning forest whose partition equals ``labels``
+        (property-tested; ``connectivity.queries.spanning_forest_stats``
+        validates one on device).
+
+        ``method=None`` asks the policy and falls back to ``adaptive``
+        when the chosen backend does not record a forest (capability
+        ``spanning_forest``); forcing a non-recording method raises.
+        The result is cached per method and invalidated by
+        ``insert()`` / ``delete()``."""
+        from repro.core import cc as cc_mod
+        if method is None:
+            g = self.graph()
+            chosen, _ = policy.select_static_explained(
+                self.num_nodes, self.num_edges,
+                degree_skew=g.degree_skew, cache=self.policy_cache)
+            method = chosen if chosen in cc_mod.FOREST_METHODS \
+                else "adaptive"
+        if self._forest is not None and self._forest[0] == method:
+            return self._forest[1]
+        with obs.span("solver.spanning_forest", tenant=self.name,
+                      method=method):
+            res = cc_mod.solve_forest(self.graph(), method=method,
+                                      num_segments=self.num_segments,
+                                      lift_steps=self.lift_steps)
+        self._forest = (method, res)
         return res
 
     @classmethod
@@ -348,6 +390,7 @@ class Solver:
         delta = self._coerce(edges)
         self._ensure_dyn()
         self.stats["inserts"] += 1
+        self._forest = None            # edge set changed: forest stale
         with obs.span("solver.insert", tenant=self.name,
                       edges=delta.num_edges) as sp:
             self._route_insert(delta)
@@ -364,6 +407,7 @@ class Solver:
         delta = self._coerce(edges)
         dyn = self._ensure_dyn()
         self.stats["deletes"] += 1
+        self._forest = None            # edge set changed: forest stale
         with obs.span("solver.delete", tenant=self.name,
                       edges=delta.num_edges) as sp:
             method = policy.select_for(self.num_nodes, self.num_edges,

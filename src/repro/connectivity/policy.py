@@ -53,9 +53,10 @@ import numpy as np
 from repro.obs import trace as obs
 
 # the static engines the heuristic chooses between; the fused Pallas
-# backend joins the measured (autotune) candidate set below
+# backend and the k-out sampling engine join the measured (autotune)
+# candidate set below
 STATIC_METHODS = ("adaptive", "atomic_hook", "labelprop")
-AUTOTUNE_METHODS = STATIC_METHODS + ("pallas_fused",)
+AUTOTUNE_METHODS = STATIC_METHODS + ("pallas_fused", "sampled")
 INCREMENTAL_ABSORB = "incremental-absorb"
 # delete-path routes (DESIGN.md §9): tombstone + scoped recompute over
 # the affected components only — the fused variant runs the scoped scan
@@ -70,6 +71,14 @@ UPDATE_RATE_ABSORB = 0.5       # delta/total above this is a bulk load
 DELETE_RATE_SCOPED = 0.5       # deletes/alive above this is a bulk drop
 MIN_SEGMENT_DENSITY = 1.5      # below: s = round(2E/V) <= 1 segment
 LABELPROP_DENSITY_FRAC = 0.25  # density >= frac*V: near-clique regime
+# k-out sampling routing (Hong et al.): max_degree/mean_degree above
+# SAMPLED_SKEW marks a power-law/kron-like graph where the sampling
+# phase collapses the giant component cheaply; road-like graphs sit
+# near 1 and skip it. The edge floor keeps tiny graphs (the whole test
+# corpus) on the exact engines — sampling's two extra jit launches
+# only pay for themselves at scale.
+SAMPLED_SKEW = 8.0
+SAMPLED_MIN_EDGES = 4096
 
 CACHE_FORMAT_VERSION = 1
 
@@ -82,6 +91,7 @@ class GraphFeatures:
     num_edges: int              # edges already absorbed (static: total)
     delta_edges: int | None = None    # pending insert batch (None: static)
     delta_deletes: int | None = None  # pending delete batch (None: static)
+    degree_skew: float | None = None  # max_deg/mean_deg (None: unmeasured)
 
     @property
     def total_edges(self) -> int:
@@ -117,13 +127,16 @@ class GraphFeatures:
 
 def extract_features(num_nodes: int, num_edges: int,
                      delta_edges: int | None = None,
-                     delta_deletes: int | None = None) -> GraphFeatures:
+                     delta_deletes: int | None = None,
+                     degree_skew: float | None = None) -> GraphFeatures:
     return GraphFeatures(num_nodes=int(num_nodes),
                          num_edges=int(num_edges),
                          delta_edges=None if delta_edges is None
                          else int(delta_edges),
                          delta_deletes=None if delta_deletes is None
-                         else int(delta_deletes))
+                         else int(delta_deletes),
+                         degree_skew=None if degree_skew is None
+                         else float(degree_skew))
 
 
 
@@ -142,6 +155,10 @@ def heuristic_method(f: GraphFeatures) -> str:
         return INCREMENTAL_ABSORB
     if f.num_nodes <= 1 or f.total_edges == 0:
         return "adaptive"              # trivial either way
+    if (f.degree_skew is not None and f.degree_skew >= SAMPLED_SKEW
+            and f.total_edges >= SAMPLED_MIN_EDGES
+            and f.density >= MIN_SEGMENT_DENSITY):
+        return "sampled"               # skewed at scale: sampling wins
     if f.density < MIN_SEGMENT_DENSITY:
         return "atomic_hook"
     if f.density >= LABELPROP_DENSITY_FRAC * f.num_nodes:
@@ -293,15 +310,18 @@ def default_cache() -> AutotuneCache:
 # ---------------------------------------------------------------------------
 
 def select_static_explained(num_nodes: int, num_edges: int, *,
+                            degree_skew: float | None = None,
                             cache: AutotuneCache | None = None
                             ) -> tuple[str, str]:
     """Static-solve selection WITH its provenance: ``(method, reason)``
     where reason is ``"autotune"`` (measured cache hit for the shape
-    bucket) or ``"heuristic"`` (the paper's density rule). This is what
-    ``repro.api`` plans report via ``ExecutionPlan.explain()`` —
-    ``select_method`` routes through it so the facade's account of the
-    decision can never drift from the decision itself."""
-    f = extract_features(num_nodes, num_edges)
+    bucket) or ``"heuristic"`` (the paper's density rule, including the
+    degree-skew sampling rule when the caller measured skew at ingest).
+    This is what ``repro.api`` plans report via
+    ``ExecutionPlan.explain()`` — ``select_method`` routes through it
+    so the facade's account of the decision can never drift from the
+    decision itself."""
+    f = extract_features(num_nodes, num_edges, degree_skew=degree_skew)
     cache = default_cache() if cache is None else cache
     with obs.span("policy.select", num_nodes=f.num_nodes,
                   num_edges=f.total_edges) as sp:
@@ -317,6 +337,7 @@ def select_static_explained(num_nodes: int, num_edges: int, *,
 def select_method(num_nodes: int, num_edges: int, *,
                   delta_edges: int | None = None,
                   delta_deletes: int | None = None,
+                  degree_skew: float | None = None,
                   cache: AutotuneCache | None = None) -> str:
     """Pick the execution method from graph features.
 
@@ -335,6 +356,7 @@ def select_method(num_nodes: int, num_edges: int, *,
         # static call: one shared path with the facade's plan(), so
         # ExecutionPlan.explain() can never drift from the selection
         return select_static_explained(num_nodes, num_edges,
+                                       degree_skew=degree_skew,
                                        cache=cache)[0]
     f = extract_features(num_nodes, num_edges, delta_edges, delta_deletes)
     choice = heuristic_method(f)

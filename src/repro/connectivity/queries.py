@@ -104,6 +104,49 @@ def count_components(labels: jnp.ndarray) -> jnp.ndarray:
     return _count_components(labels)
 
 
+@jax.jit
+def _spanning_forest_stats(labels: jnp.ndarray, parents: jnp.ndarray):
+    v = labels.shape[0]
+    valid = parents[:, 0] >= 0
+    n_edges = jnp.sum(valid).astype(jnp.int32)
+    n_components = _count_components(labels)
+    # every recorded edge must connect two vertices the solve labeled
+    # as one component (roots' (-1, -1) rows are vacuously fine —
+    # clamp the gather indices so they never read out of bounds)
+    u = jnp.clip(parents[:, 0], 0, v - 1)
+    w = jnp.clip(parents[:, 1], 0, v - 1)
+    intra = jnp.all(jnp.where(valid, labels[u] == labels[w], True))
+    return {"n_forest_edges": n_edges,
+            "n_roots": (jnp.int32(v) - n_edges).astype(jnp.int32),
+            "n_components": n_components,
+            "edges_intra_component": intra,
+            "count_consistent": n_edges + n_components == v}
+
+
+def spanning_forest_stats(labels: jnp.ndarray, parents: jnp.ndarray
+                          ) -> dict:
+    """On-device validation scalars for a recorded spanning forest
+    (``ForestResult.parents``: int32 [V, 2], row r = the graph edge
+    whose hook retired root r, (-1, -1) for roots).
+
+    Returns device scalars: ``n_forest_edges`` (rows recorded),
+    ``n_roots`` (V - recorded), ``n_components`` (distinct labels),
+    ``edges_intra_component`` (every recorded edge joins same-label
+    endpoints), and ``count_consistent`` (recorded + components == V —
+    with intra-component endpoints this pins the forest to exactly one
+    tree per component; the full acyclicity property is re-proved
+    host-side in the test suite's union-find check). One gather +
+    masked reductions; stays on device."""
+    labels = jnp.asarray(labels)
+    parents = jnp.asarray(parents, jnp.int32).reshape(-1, 2)
+    if labels.shape[0] == 0:
+        z = jnp.zeros((), jnp.int32)
+        return {"n_forest_edges": z, "n_roots": z, "n_components": z,
+                "edges_intra_component": jnp.asarray(True),
+                "count_consistent": jnp.asarray(True)}
+    return _spanning_forest_stats(labels, parents)
+
+
 def _floor_log2(n: jnp.ndarray) -> jnp.ndarray:
     """Exact floor(log2) for positive int32. frexp(x) = (m, e) with
     m in [0.5, 1) gives floor(log2 x) == e - 1, but only while the

@@ -59,12 +59,35 @@ METHODS = ("soman", "multijump", "atomic_hook", "adaptive", "labelprop")
 # + the fused Pallas backend (one kernel launch per segment scan);
 # labels are bit-identical to the jnp backend, validated in tests
 FUSED_METHOD = "pallas_fused"
-ALL_METHODS = METHODS + (FUSED_METHOD,)
+# + the k-out sampling engines (repro.core.sampled): sampling phase
+# collapses the giant component, adaptive scan covers the residue only
+SAMPLED_METHODS = ("sampled", "sampled_fused")
+ALL_METHODS = METHODS + (FUSED_METHOD,) + SAMPLED_METHODS
 HOSTLOOP_METHODS = ("soman", "multijump")
+# the static methods whose jnp hook rounds record the spanning forest
+# (labelprop propagates labels without hooking; the fused kernel hooks
+# in-kernel without recording; sampled_fused records the sampling
+# phase only, so it does not claim the capability)
+FOREST_METHODS = ("soman", "multijump", "atomic_hook", "adaptive",
+                  "sampled")
 
 
 class CCResult(NamedTuple):
     labels: jnp.ndarray       # int32 [V]; labels[v] = min id of v's component
+    work: WorkCounters
+
+
+class ForestResult(NamedTuple):
+    """Labels + the spanning forest recorded during hook rounds.
+
+    ``parents`` is int32 [V, 2]: row r holds the original graph edge
+    whose hook retired root r (rows left (-1, -1) are the component
+    roots — exactly one per component, the component minimum). The
+    recorded rows are exactly |V| - C edges forming a spanning forest
+    whose partition equals ``labels`` (property-tested)."""
+
+    labels: jnp.ndarray
+    parents: jnp.ndarray
     work: WorkCounters
 
 
@@ -253,7 +276,14 @@ def solve_static(
                         WorkCounters.zeros())
     if method == "auto":
         from repro.connectivity.policy import select_method
-        method = select_method(g.num_nodes, g.num_edges)
+        method = select_method(g.num_nodes, g.num_edges,
+                               degree_skew=g.degree_skew)
+    if method in SAMPLED_METHODS:
+        from repro.core.sampled import solve_sampled
+        res = solve_sampled(g, num_segments=num_segments,
+                            lift_steps=lift_steps,
+                            fused=(method == "sampled_fused"))
+        return CCResult(res.labels, res.work)
     # the common exact-sized case keeps true_edges out of the traced
     # operands entirely (None): billing stays a compile-time constant
     # and no per-call scalar device_put is paid; only padded graphs
@@ -270,6 +300,105 @@ def solve_static(
     return _cc_jit(g.edges, true, num_nodes=g.num_nodes, method=method,
                    num_segments=g.plan.num_segments,
                    lift_steps=lift_steps)
+
+
+# ---------------------------------------------------------------------------
+# Spanning-forest solves (forest recorded during hook rounds)
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit, static_argnames=("num_nodes", "method", "num_segments",
+                              "lift_steps"))
+def _cc_forest_jit(edges, true_edges, *, num_nodes, method, num_segments,
+                   lift_steps):
+    """Forest-recording twin of ``_cc_jit``: identical pi updates and
+    billing, with the parent-edge table threaded through every hook.
+    Kept a SEPARATE program so the plain solves stay bit-identical."""
+    e = edges.shape[0] if true_edges is None else true_edges
+    pi0 = jnp.arange(num_nodes, dtype=jnp.int32)
+    parents0 = rounds.empty_forest(num_nodes)
+
+    if method in ("soman", "multijump"):
+        count_syncs = method == "soman"
+        per_round = 1 if count_syncs else 2
+
+        def outer_cond(state):
+            _, _, changed, rounds_, _ = state
+            return jnp.logical_and(changed, rounds_ < _MAX_ROUNDS)
+
+        def outer_body(state):
+            pi, f, _, rounds_, w = state
+            new_pi, f = rounds.hook_edges_forest(pi, f, edges,
+                                                 lift_steps=0)
+            hook_changed = jnp.any(new_pi != pi)
+            w = w.add(hook_ops=e, hook_rounds=1, sync_rounds=per_round)
+            new_pi, w = compress(new_pi, w, count_syncs=count_syncs)
+            return new_pi, f, hook_changed, rounds_ + 1, w
+
+        pi, parents, _, _, work = jax.lax.while_loop(
+            outer_cond, outer_body,
+            (pi0, parents0, jnp.asarray(True), jnp.zeros((), jnp.int32),
+             WorkCounters.zeros()))
+        return ForestResult(pi, parents, work)
+
+    if method == "atomic_hook":
+        pi, parents, work = rounds.forest_cleanup_rounds(
+            pi0, parents0, edges, WorkCounters.zeros(),
+            true_edges=e, lift_steps=lift_steps)
+        return ForestResult(pi, parents, work.add(sync_rounds=1))
+
+    if method == "adaptive":
+        plan = plan_segmentation(edges.shape[0], num_nodes, num_segments)
+        pi, parents, work = rounds.forest_adaptive_rounds(
+            edges, num_nodes, plan, lift_steps=lift_steps, true_edges=e)
+        return ForestResult(pi, parents, work.add(sync_rounds=1))
+
+    raise ValueError(f"unknown forest method {method!r}; choose from "
+                     f"{FOREST_METHODS}")
+
+
+def solve_forest(
+    graph,
+    num_nodes: int | None = None,
+    method: str = "adaptive",
+    *,
+    num_segments: int | None = None,
+    lift_steps: int = 2,
+) -> ForestResult:
+    """Connected components WITH the spanning forest: the parent edges
+    each hook round records, as a first-class product (DESIGN.md §13).
+
+    ``method`` must be one of ``FOREST_METHODS`` — the static engines
+    whose jnp hook rounds run through ``rounds.hook_edges_forest``
+    (``sampled`` records during both the sampling phase and the
+    residue scan). Labels are the same canonical min-id fixed point as
+    the plain solves. The engine entry behind
+    ``Solver.spanning_forest()``; prefer the facade.
+    """
+    from repro.graphs.device import as_device_graph
+    if method not in FOREST_METHODS:
+        raise ValueError(f"method {method!r} does not record a spanning "
+                         f"forest; choose from {FOREST_METHODS}")
+    g = as_device_graph(graph, num_nodes, num_segments=num_segments)
+    if g.num_nodes <= 0:
+        return ForestResult(jnp.zeros((0,), jnp.int32),
+                            rounds.empty_forest(0), WorkCounters.zeros())
+    if g.edges.shape[0] == 0 or g.true_edges_static == 0:
+        return ForestResult(jnp.arange(g.num_nodes, dtype=jnp.int32),
+                            rounds.empty_forest(g.num_nodes),
+                            WorkCounters.zeros())
+    if method == "sampled":
+        from repro.core.sampled import solve_sampled
+        res = solve_sampled(g, num_segments=num_segments,
+                            lift_steps=lift_steps, fused=False)
+        return ForestResult(res.labels, res.parents, res.work)
+    t = g.true_edges_static
+    true = None if (t is not None and t == int(g.edges.shape[0])) \
+        else g.true_edges_device()
+    return _cc_forest_jit(g.edges, true, num_nodes=g.num_nodes,
+                          method=method,
+                          num_segments=g.plan.num_segments,
+                          lift_steps=lift_steps)
 
 
 def connected_components(

@@ -229,6 +229,136 @@ def fused_round_ops(lift_steps: int = 2, *,
 
 
 # ---------------------------------------------------------------------------
+# Forest-recording hook (spanning forest as a by-product of hook rounds)
+# ---------------------------------------------------------------------------
+# Every hook round runs over a fully-compressed pi (all compositions in
+# this module compress to fixpoint between hooks), so a scatter-min
+# write at position ``hi`` is a STRICT decrease of a root's own label:
+# pi[hi] == hi before the write, pi[hi] = lo < hi after, and hi never
+# reappears as a label. Each position is therefore recorded at most
+# once over the whole run, each recorded edge merges two components
+# that were distinct at record time, and the recorded set is exactly a
+# spanning forest of the input: V - C edges, one unrecorded root (the
+# component minimum) per component. These are SEPARATE compositions
+# from the plain ones above so the non-forest paths stay bit-identical.
+
+
+def empty_forest(num_nodes: int) -> jnp.ndarray:
+    """int32 [V, 2] parent-edge table, all (-1, -1): row r will hold
+    the original graph edge whose hook retired root r (see
+    ``hook_edges_forest``); rows still (-1, -1) at the end are the
+    per-component roots."""
+    return jnp.full((num_nodes, 2), -1, jnp.int32)
+
+
+def hook_edges_forest(pi: jnp.ndarray, parents: jnp.ndarray,
+                      edges: jnp.ndarray, lift_steps: int = 0
+                      ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """``hook_edges`` + spanning-forest recording (same pi updates).
+
+    An edge wins position ``hi`` iff its scatter-min write actually
+    landed (``new_pi[hi] == lo``) AND strictly lowered the root's label
+    (``new_pi[hi] < pi[hi]`` — rules out self loops, duplicates, and
+    already-merged endpoints). Ties between same-(hi, lo) edges are
+    broken by a second scatter-min over edge indices, so exactly one
+    original edge is recorded per retired root.
+    """
+    n = pi.shape[0]
+    u, v = edges[..., 0], edges[..., 1]
+    pu, pv = pi[u], pi[v]
+    for _ in range(lift_steps):
+        pu, pv = pi[pu], pi[pv]
+    hi = jnp.maximum(pu, pv)
+    lo = jnp.minimum(pu, pv)
+    new_pi = pi.at[hi].min(lo)
+    won = jnp.logical_and(new_pi[hi] == lo, new_pi[hi] < pi[hi])
+    eidx = jnp.arange(edges.shape[0], dtype=jnp.int32)
+    sentinel = jnp.full((n,), jnp.iinfo(jnp.int32).max, jnp.int32)
+    winner = sentinel.at[jnp.where(won, hi, n)].min(eidx, mode="drop")
+    rec = jnp.logical_and(won, winner[hi] == eidx)
+    parents = parents.at[jnp.where(rec, hi, n)].set(
+        jnp.stack([u, v], axis=-1), mode="drop")
+    return new_pi, parents
+
+
+def forest_segment_scan(pi: jnp.ndarray, parents: jnp.ndarray,
+                        segments: jnp.ndarray, work: WorkCounters,
+                        true_counts: jnp.ndarray,
+                        lift_steps: int = 2,
+                        ) -> tuple[jnp.ndarray, jnp.ndarray, WorkCounters]:
+    """``segment_scan`` with the parent-edge table threaded through the
+    ``lax.scan`` carry (jnp ops only; billing matches ``jnp_round_ops``)."""
+    bill = 1 + lift_steps
+
+    def seg_body(carry, xs):
+        p, f, w = carry
+        seg, cnt = xs
+        p, f = hook_edges_forest(p, f, seg, lift_steps=lift_steps)
+        w = w.add(hook_ops=cnt * bill, hook_rounds=1)
+        p, w = compress(p, w)
+        return (p, f, w), None
+
+    (pi, parents, work), _ = jax.lax.scan(
+        seg_body, (pi, parents, work), (segments, true_counts))
+    return pi, parents, work
+
+
+def forest_cleanup_rounds(pi: jnp.ndarray, parents: jnp.ndarray,
+                          edges: jnp.ndarray, work: WorkCounters,
+                          true_edges: int | jnp.ndarray | None = None,
+                          lift_steps: int = 2,
+                          max_rounds: int = MAX_ROUNDS,
+                          ) -> tuple[jnp.ndarray, jnp.ndarray, WorkCounters]:
+    """``cleanup_rounds`` with forest recording (same short-circuit on
+    already-consistent edge sets, same true-edge billing)."""
+    if true_edges is None:
+        true_edges = edges.shape[0]
+    bill = jnp.asarray(true_edges, jnp.int32) * (1 + lift_steps)
+
+    def cond(state):
+        _, _, done, rounds_, _ = state
+        return jnp.logical_and(~done, rounds_ < max_rounds)
+
+    def body(state):
+        p, f, _, rounds_, w = state
+        p, f = hook_edges_forest(p, f, edges, lift_steps=lift_steps)
+        w = w.add(hook_ops=bill, hook_rounds=1)
+        p, w = compress(p, w)
+        return p, f, edges_consistent(p, edges), rounds_ + 1, w
+
+    done0 = edges_consistent(pi, edges)
+    pi, parents, _, _, work = jax.lax.while_loop(
+        cond, body,
+        (pi, parents, done0, jnp.zeros((), jnp.int32), work))
+    return pi, parents, work
+
+
+def forest_adaptive_rounds(edges: jnp.ndarray, num_nodes: int,
+                           plan: SegmentationPlan, *,
+                           lift_steps: int = 2,
+                           true_edges: int | jnp.ndarray | None = None,
+                           max_rounds: int = MAX_ROUNDS,
+                           ) -> tuple[jnp.ndarray, jnp.ndarray,
+                                      WorkCounters]:
+    """The Fig. 4 pipeline (segment scan + cleanup) with the spanning
+    forest recorded along the way. Labels and counters match
+    ``adaptive_rounds`` bit for bit (asserted in tests)."""
+    if true_edges is None:
+        true_edges = plan.num_edges
+    segments = pad_and_segment(edges, plan)
+    counts = segment_true_counts(true_edges, plan)
+    pi0 = jnp.arange(num_nodes, dtype=jnp.int32)
+    pi, parents, work = forest_segment_scan(
+        pi0, empty_forest(num_nodes), segments, WorkCounters.zeros(),
+        counts, lift_steps=lift_steps)
+    flat = segments.reshape(-1, 2)
+    pi, parents, work = forest_cleanup_rounds(
+        pi, parents, flat, work, true_edges=true_edges,
+        lift_steps=lift_steps, max_rounds=max_rounds)
+    return pi, parents, work
+
+
+# ---------------------------------------------------------------------------
 # Segmentation helpers
 # ---------------------------------------------------------------------------
 

@@ -65,6 +65,22 @@ def validate_edge_bounds(edges: np.ndarray, num_nodes: int) -> None:
         raise ValueError(f"edge endpoint out of range [0, {num_nodes})")
 
 
+def measure_degree_skew(edges: np.ndarray, num_nodes: int) -> float:
+    """max_degree / mean_degree over the undirected degree sequence —
+    the policy's skew feature (~1 on regular/road-like graphs, large on
+    power-law/kron-like ones). HOST arrays only: it runs once at
+    ``from_edges`` ingest, where the edges are on host anyway; graphs
+    that arrive device-resident skip it (skew stays None) rather than
+    pay a transfer."""
+    edges = np.asarray(edges)
+    if edges.size == 0 or num_nodes <= 0:
+        return 1.0
+    deg = np.bincount(
+        np.concatenate([edges[:, 0], edges[:, 1]]), minlength=num_nodes)
+    mean = 2.0 * edges.shape[0] / num_nodes
+    return float(deg.max() / max(mean, 1e-9))
+
+
 @functools.partial(jax.jit, static_argnames=("rows",))
 def _pad_rows_jit(edges: jnp.ndarray, *, rows: int) -> jnp.ndarray:
     """Append ``rows`` (0, 0) no-op rows on device (jitted so it stays
@@ -91,12 +107,18 @@ class DeviceGraph:
     """Device-resident COO graph + segmentation plan (one pytree)."""
 
     def __init__(self, edges, num_nodes: int, true_edges,
-                 plan: SegmentationPlan, name: str = "graph"):
+                 plan: SegmentationPlan, name: str = "graph",
+                 degree_skew: float | None = None):
         self.edges = edges                     # int32 [E, 2], device
         self.num_nodes = int(num_nodes)        # static
         self.true_edges = true_edges           # static int | traced scalar
         self.plan = plan                       # static
         self.name = name
+        # static metadata: max_degree / mean_degree, measured once at
+        # host ingest (None when the edges arrived device-resident — a
+        # host pass would violate transfer discipline). Policy feature
+        # for the sampled routing rule; rides in the pytree aux.
+        self.degree_skew = degree_skew
         self._csr = None                       # lazy (offsets, neighbors)
 
     # -- pytree protocol ---------------------------------------------------
@@ -105,18 +127,21 @@ class DeviceGraph:
         if self.true_edges_static is not None:
             return ((self.edges,),
                     (self.num_nodes, self.true_edges_static, self.plan,
-                     self.name))
+                     self.name, self.degree_skew))
         return ((self.edges, self.true_edges),
-                (self.num_nodes, None, self.plan, self.name))
+                (self.num_nodes, None, self.plan, self.name,
+                 self.degree_skew))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        num_nodes, true_static, plan, name = aux
+        num_nodes, true_static, plan, name, degree_skew = aux
         if true_static is not None:
             (edges,) = children
-            return cls(edges, num_nodes, true_static, plan, name=name)
+            return cls(edges, num_nodes, true_static, plan, name=name,
+                       degree_skew=degree_skew)
         edges, true_edges = children
-        return cls(edges, num_nodes, true_edges, plan, name=name)
+        return cls(edges, num_nodes, true_edges, plan, name=name,
+                   degree_skew=degree_skew)
 
     # -- constructors ------------------------------------------------------
 
@@ -125,17 +150,25 @@ class DeviceGraph:
                    num_segments: int | None = None,
                    name: str = "graph") -> "DeviceGraph":
         """The raw-array shim: accepts host numpy / lists (explicitly
-        device_put) or already-device jnp arrays (left in place)."""
+        device_put) or already-device jnp arrays (left in place). Host
+        ingest also measures ``degree_skew`` (free while the array is
+        on host; device-resident arrays keep it None)."""
+        degree_skew = None
         if isinstance(edges, jnp.ndarray):
             edges = edges.astype(jnp.int32).reshape(-1, 2)
         else:
-            edges = jax.device_put(
-                np.asarray(edges, np.int32).reshape(-1, 2))
+            host = np.asarray(edges, np.int32).reshape(-1, 2)
+            t = true_edges if isinstance(true_edges, (int, np.integer)) \
+                else host.shape[0]
+            degree_skew = measure_degree_skew(host[:int(t)],
+                                              int(num_nodes))
+            edges = jax.device_put(host)
         e_stored = int(edges.shape[0])
         if true_edges is None:
             true_edges = e_stored
         plan = _plan_for(e_stored, int(num_nodes), true_edges, num_segments)
-        return cls(edges, int(num_nodes), true_edges, plan, name=name)
+        return cls(edges, int(num_nodes), true_edges, plan, name=name,
+                   degree_skew=degree_skew)
 
     @classmethod
     def from_host(cls, graph, *, num_segments: int | None = None
@@ -184,7 +217,7 @@ class DeviceGraph:
         edges = _pad_rows_jit(self.edges, rows=target - e)
         plan = _plan_for(target, self.num_nodes, self.true_edges, None)
         return DeviceGraph(edges, self.num_nodes, self.true_edges, plan,
-                           name=self.name)
+                           name=self.name, degree_skew=self.degree_skew)
 
     def pad_pow2(self, min_rows: int = _MIN_PAD_ROWS) -> "DeviceGraph":
         """Pad to the next power-of-two row count (floored at
@@ -249,7 +282,8 @@ class DeviceGraph:
                  None)
         edges = jax.device_put(padded.edges, NamedSharding(mesh, spec))
         return DeviceGraph(edges, self.num_nodes, padded.true_edges,
-                           padded.plan, name=self.name)
+                           padded.plan, name=self.name,
+                           degree_skew=self.degree_skew)
 
     # -- lazy on-device CSR ------------------------------------------------
 
@@ -494,7 +528,8 @@ def as_device_graph(graph, num_nodes: int | None = None, *,
             plan = plan_segmentation(int(graph.edges.shape[0]),
                                      graph.num_nodes, num_segments)
             return DeviceGraph(graph.edges, graph.num_nodes,
-                               graph.true_edges, plan, name=graph.name)
+                               graph.true_edges, plan, name=graph.name,
+                               degree_skew=graph.degree_skew)
         return graph
     if hasattr(graph, "edges") and hasattr(graph, "num_nodes"):
         return DeviceGraph.from_edges(graph.edges, graph.num_nodes,

@@ -80,6 +80,19 @@ def _er(n, e, seed):
     return rng.integers(0, n, (e, 2)).tolist()
 
 
+def power_law(n, e, seed, alpha: float = 1.0):
+    """Skewed-degree (RMAT/power-law-style) graph: endpoints drawn with
+    probability proportional to 1/(rank+1)^alpha, so low-id vertices
+    become hubs (max_degree >> mean_degree — the regime where the
+    sampling phase collapses the giant component; road/ER graphs sit
+    near skew 1). Self loops and duplicates occur by construction,
+    like ``_er``."""
+    rng = np.random.default_rng(seed)
+    w = 1.0 / np.power(np.arange(1, n + 1, dtype=np.float64), alpha)
+    w /= w.sum()
+    return rng.choice(n, size=(e, 2), p=w).tolist()
+
+
 def corpus():
     """The deterministic named cases: ``(name, num_nodes, edges)`` with
     ``edges`` an int32 [E, 2] array. Covers every generator family the
@@ -99,6 +112,11 @@ def corpus():
         ("er-sparse", 30, _er(30, 18, seed=11)),
         ("er-mid", 24, _er(24, 60, seed=12)),
         ("er-dense", 10, _er(10, 70, seed=13)),
+        # skewed-degree (power-law) — the sampled backends' home turf;
+        # sized under the policy's SAMPLED_MIN_EDGES floor so "auto"
+        # corpus routing stays on the exact engines
+        ("powerlaw-64", 64, power_law(64, 256, seed=31)),
+        ("powerlaw-256", 256, power_law(256, 1024, seed=32)),
         # pow2 padding boundaries: E at a bucket edge and one past it,
         # V exactly at / one past a pow2 (bucket height boundaries)
         ("pow2-E8", 12, _er(12, 8, seed=21)),

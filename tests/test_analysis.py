@@ -109,7 +109,7 @@ def test_every_backend_has_a_trace_entry():
     covered = {e.backend for e in all_entries() if e.backend}
     assert covered == set(BACKENDS), (
         f"backends without a trace spec: {set(BACKENDS) - covered}")
-    assert len(BACKENDS) == 12
+    assert len(BACKENDS) == 14
 
 
 def test_full_sweep_is_clean_vs_committed_baseline():
@@ -119,7 +119,7 @@ def test_full_sweep_is_clean_vs_committed_baseline():
     assert not new, "NEW findings:\n" + "\n".join(
         f.render() for f in new)
     # the sweep actually saw the whole surface
-    assert len(rep.entries_checked) >= 22
+    assert len(rep.entries_checked) >= 26
     assert set(rep.passes_run) == {"transfer", "int32", "retrace",
                                    "padmask", "pallas-ast"}
 
@@ -254,7 +254,7 @@ def test_cli_selftest_and_sweep_exit_zero(tmp_path):
     out = tmp_path / "report.json"
     assert main(["--json", str(out)]) == 0   # clean tree, default baseline
     data = json.loads(out.read_text())
-    assert data["findings"] == [] and len(data["entries"]) >= 22
+    assert data["findings"] == [] and len(data["entries"]) >= 26
 
 
 def test_cli_gates_on_new_findings(tmp_path, capsys):

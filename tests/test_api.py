@@ -45,28 +45,31 @@ EXPECTED_ALL = [
 EXPECTED_BACKENDS = [
     "adaptive", "atomic_hook", "batched", "distributed", "dynamic",
     "hostloop", "incremental", "labelprop", "multijump", "pallas",
-    "pallas_fused", "soman",
+    "pallas_fused", "sampled", "sampled_fused", "soman",
 ]
 
 # (static, batched, streaming, deletions, sharded, device_loop,
-#  bit_exact_counters) per backend — the DESIGN.md §10 capability matrix
+#  bit_exact_counters, spanning_forest) per backend — the DESIGN.md §10
+# capability matrix
 EXPECTED_CAPABILITIES = {
-    "soman":        (1, 0, 0, 0, 0, 1, 1),
-    "multijump":    (1, 0, 0, 0, 0, 1, 1),
-    "atomic_hook":  (1, 0, 0, 0, 0, 1, 1),
-    "adaptive":     (1, 0, 0, 0, 0, 1, 1),
-    "labelprop":    (1, 0, 0, 0, 0, 1, 1),
-    "pallas":       (1, 0, 0, 0, 0, 1, 0),
-    "pallas_fused": (1, 0, 0, 0, 0, 1, 1),
-    "hostloop":     (1, 0, 0, 0, 0, 0, 0),
-    "batched":      (1, 1, 0, 0, 0, 1, 1),
-    "incremental":  (1, 0, 1, 0, 0, 1, 1),
-    "dynamic":      (1, 0, 1, 1, 0, 1, 1),
-    "distributed":  (1, 0, 0, 0, 1, 1, 0),
+    "soman":         (1, 0, 0, 0, 0, 1, 1, 1),
+    "multijump":     (1, 0, 0, 0, 0, 1, 1, 1),
+    "atomic_hook":   (1, 0, 0, 0, 0, 1, 1, 1),
+    "adaptive":      (1, 0, 0, 0, 0, 1, 1, 1),
+    "labelprop":     (1, 0, 0, 0, 0, 1, 1, 0),
+    "pallas":        (1, 0, 0, 0, 0, 1, 0, 0),
+    "pallas_fused":  (1, 0, 0, 0, 0, 1, 1, 0),
+    "sampled":       (1, 0, 0, 0, 0, 1, 1, 1),
+    "sampled_fused": (1, 0, 0, 0, 0, 1, 1, 0),
+    "hostloop":      (1, 0, 0, 0, 0, 0, 0, 0),
+    "batched":       (1, 1, 0, 0, 0, 1, 1, 0),
+    "incremental":   (1, 0, 1, 0, 0, 1, 1, 0),
+    "dynamic":       (1, 0, 1, 1, 0, 1, 1, 0),
+    "distributed":   (1, 0, 0, 0, 1, 1, 0, 0),
 }
 
 _CAP_FIELDS = ("static", "batched", "streaming", "deletions", "sharded",
-               "device_loop", "bit_exact_counters")
+               "device_loop", "bit_exact_counters", "spanning_forest")
 
 
 def test_public_api_surface_is_stable():

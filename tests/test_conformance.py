@@ -52,7 +52,8 @@ from repro.core.unionfind import (DynamicConnectivityOracle,
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-ALL_SINGLE_BACKENDS = METHODS + ("pallas_fused",)
+ALL_SINGLE_BACKENDS = METHODS + ("pallas_fused", "sampled",
+                                 "sampled_fused")
 
 
 def oracle_labels(n, edges):
@@ -166,6 +167,95 @@ def test_conformance_work_counters_where_bit_exact_claimed():
                                       np.asarray(b.labels), err_msg=name)
         for field, x, y in zip(WorkCounters._fields, a.work, b.work):
             assert int(x) == int(y), (name, field, int(x), int(y))
+
+
+# ---------------------------------------------------------------------------
+# Spanning forest (ISSUE 8): acyclic, one root per component, spans it
+# ---------------------------------------------------------------------------
+
+def _assert_valid_forest(tag, n, labels, parents):
+    """The full forest property, host-side: the recorded parent edges
+    are acyclic (every union merges two distinct sets), exactly
+    |V| - C of them, roots are the component minima, and the forest's
+    partition equals the labels' partition."""
+    valid = parents[:, 0] >= 0
+    ncomp = len(np.unique(labels)) if n else 0
+    assert int(valid.sum()) == n - ncomp, (tag, int(valid.sum()),
+                                           n - ncomp)
+    pa = list(range(n))
+
+    def find(x):
+        while pa[x] != x:
+            pa[x] = pa[pa[x]]
+            x = pa[x]
+        return x
+
+    for u, v in parents[valid]:
+        assert labels[u] == labels[v], (tag, "cross-component edge")
+        ru, rv = find(int(u)), find(int(v))
+        assert ru != rv, (tag, "cycle in recorded forest")
+        pa[ru] = rv
+    # partition equality: forest components == label components
+    for i in range(n):
+        assert find(i) == find(int(labels[i])), (tag, i)
+    # one root per component, and it is the component minimum
+    roots = np.flatnonzero(~valid)
+    assert len(roots) == ncomp, tag
+    np.testing.assert_array_equal(np.sort(labels[roots]),
+                                  np.unique(labels), err_msg=tag)
+
+
+def test_conformance_spanning_forest_property():
+    """Every forest-recording method, every corpus case: canonical
+    labels identical to the oracles AND the recorded parent edges form
+    a valid spanning forest. The on-device validation kernel
+    (``queries.spanning_forest_stats``) must agree with the host-side
+    proof."""
+    from repro.connectivity.queries import spanning_forest_stats
+    from repro.core.cc import FOREST_METHODS, solve_forest
+    for name, n, edges in corpus():
+        want = oracle_labels(n, edges)
+        for method in FOREST_METHODS:
+            res = solve_forest(edges, n, method=method)
+            labels = np.asarray(res.labels)
+            parents = np.asarray(res.parents)
+            np.testing.assert_array_equal(
+                labels, want, err_msg=f"{name} forest method={method}")
+            _assert_valid_forest(f"{name}/{method}", n, labels, parents)
+            stats = spanning_forest_stats(res.labels, res.parents)
+            assert bool(stats["edges_intra_component"]), (name, method)
+            assert bool(stats["count_consistent"]), (name, method)
+
+
+def test_spanning_forest_via_solver_facade():
+    """``Solver.spanning_forest()``: same labels as ``solve()``, a
+    valid forest, cached until a mutation invalidates it, and refused
+    for non-recording backends."""
+    import pytest
+
+    name, n, edges = next(c for c in corpus()
+                          if c[1] > 4 and len(c[2]) > 4)
+    s = Solver.open(edges, n)
+    res = s.spanning_forest()
+    np.testing.assert_array_equal(np.asarray(res.labels),
+                                  oracle_labels(n, edges))
+    _assert_valid_forest("facade", n, np.asarray(res.labels),
+                         np.asarray(res.parents))
+    assert s.spanning_forest() is res          # cached
+    with pytest.raises(ValueError, match="does not record"):
+        s.spanning_forest(method="labelprop")
+
+    # mutation invalidates: the forest re-derives over the new edge set
+    s2 = Solver.open(num_nodes=6)
+    s2.insert([[0, 1]])
+    f1 = s2.spanning_forest()
+    assert int((np.asarray(f1.parents)[:, 0] >= 0).sum()) == 1
+    s2.insert([[2, 3], [1, 2]])
+    f2 = s2.spanning_forest()
+    assert f2 is not f1
+    assert int((np.asarray(f2.parents)[:, 0] >= 0).sum()) == 3
+    _assert_valid_forest("mutated", 6, np.asarray(f2.labels),
+                         np.asarray(f2.parents))
 
 
 # ---------------------------------------------------------------------------
