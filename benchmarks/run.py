@@ -480,77 +480,187 @@ def service(scale: float) -> None:
 
 
 def dynamic(scale: float) -> None:
-    """Fully-dynamic table (DESIGN.md §9): interleaved insert/delete
-    churn absorbed by a ``Solver`` streaming session (policy-routed
-    tombstone + scoped recompute over
-    only the affected components) vs the full-recompute design (one
-    from-scratch adaptive run over the survivors after EVERY mutation
-    batch), swept across delete:insert ratios. hook_ops is the
-    hardware-independent signal; the acceptance bar is scoped beating
-    full at delete:insert <= 1:10 (it usually wins far beyond that —
-    most deletions are not bridges, and a non-bridge delete re-hooks
-    one component, not the world). Labels are oracle-checked at the
+    """Fully-dynamic table (DESIGN.md §9 + §14): interleaved
+    insert/delete churn absorbed by a ``Solver`` streaming session on
+    THREE delete designs — the maintained-forest tree-aware route
+    (classify against the device-resident forest, short-circuit
+    all-non-tree batches, skeleton + crossing reconnection otherwise),
+    the plain scoped recompute (PR 5), and the full-recompute
+    counterfactual (a from-scratch adaptive run over the survivors
+    after EVERY mutation batch) — swept across delete:insert ratios.
+
+    The forest stream runs only on the graphs the policy actually
+    routes to it (``tree_edge_ratio <= FOREST_TREE_RATIO``): on
+    road-like graphs nearly every edge IS a tree edge, so a skeleton
+    the size of the edge set cannot beat the scoped recompute and the
+    router sends them down the plain path; their forest columns are
+    null. On routed graphs deletes arrive as a stream of micro-batches
+    (at most ~9 ticks per round) — the steady-state shape the
+    maintained forest is for, and what makes ``tree_hit_ratio``
+    meaningful — while unrouted graphs keep the one-batch-per-round
+    stream of the PR 5 table.
+
+    hook_ops is the hardware-independent signal; the acceptance bars
+    are (a) the forest route billing >= 5x fewer delete-side hook_ops
+    than the scoped recompute at 1:20 and 1:10 churn on every routed
+    graph, (b) an explicitly all-non-tree batch billing ZERO hook work
+    (the lax.cond short-circuit), and (c) the 1:20 forest stream
+    beating the scoped stream on wall clock across the routed graphs
+    (the BENCH_dynamic smoke gate — the ratio-insensitive ms plateau
+    this PR is motivated against). Labels are oracle-checked at the
     end of every stream. The steady-state delete tick's zero-transfer
     property is pinned by the facade/service transfer-guard tests,
     not here."""
     from repro.api import Solver, solve
+    from repro.connectivity import policy
     from repro.core.unionfind import DynamicConnectivityOracle
 
+    FOREST, SCOPED = policy.DYNAMIC_DELETE_FOREST, policy.DYNAMIC_DELETE
     n_rounds = 6
     ratios = (0.05, 0.1, 0.25, 1.0)       # delete:insert per round
+    smoke_ratio = 0.05                    # the 1:20 wall-clock gate
+    micro_batch = 64                      # steady-state delete tick size
     rows = []
+    gate_ms = {FOREST: 0.0, SCOPED: 0.0}
     for g in graphs_for_scale(scale):
         edges, n = np.asarray(g.edges, np.int32), g.num_nodes
         order = np.random.default_rng(0).permutation(edges.shape[0])
         splits = np.array_split(order, n_rounds)
+        forest_routed = policy.extract_features(
+            n, edges.shape[0]).tree_edge_ratio <= policy.FOREST_TREE_RATIO
+        forest_dyn = None                 # last counted forest session
         for ratio in ratios:
+            # Build the mutation schedule ONCE per (graph, ratio): the
+            # per-round insert chunks, the micro-batched kill stream
+            # (drawn from the oracle's evolving live set), the
+            # full-recompute counterfactual bill (route-independent —
+            # it depends only on the mutation stream), and the expected
+            # end labels. Timed replays below then drive ONLY the
+            # solver, so the forest-vs-scoped wall comparison measures
+            # engine work rather than shared oracle bookkeeping.
+            rng = np.random.default_rng(1)
+            oracle = DynamicConnectivityOracle(n)
+            sched = []
+            full_ops = 0
+            for s in splits:
+                chunk = edges[s]
+                oracle.insert(chunk)
+                r = solve(oracle.alive(), n, method="adaptive")
+                full_ops += int(r.work.hook_ops)
+                k = max(1, int(round(ratio * chunk.shape[0])))
+                live = oracle.alive()
+                kills = live[rng.integers(0, live.shape[0], k)]
+                # routed graphs: stream the round quota in bounded
+                # micro-batches; both routes replay the SAME ticks
+                step = max(micro_batch, -(-k // 8)) if forest_routed \
+                    else k
+                batches = [kills[lo:lo + step] for lo in range(0, k, step)]
+                for batch in batches:
+                    oracle.delete(batch)
+                r = solve(oracle.alive(), n, method="adaptive")
+                full_ops += int(r.work.hook_ops)
+                sched.append((chunk, batches))
+            want_labels = oracle.labels()
 
-            def run_stream(count_full: bool):
-                # fresh rng per run: the timed reps must replay the
-                # EXACT stream the counted/asserted run saw
-                rng = np.random.default_rng(1)
-                dyn = Solver.open(num_nodes=n)
-                oracle = DynamicConnectivityOracle(n)
-                full_ops = 0
-                deletes = 0
-                for s in splits:
-                    chunk = edges[s]
+            def run_stream(route: str, count_deletes: bool = False):
+                dyn = Solver.open(num_nodes=n, delete_route=route)
+                del_ops = 0
+                for chunk, batches in sched:
                     dyn.insert(chunk)
-                    oracle.insert(chunk)
-                    if count_full:
-                        r = solve(oracle.alive(), n, method="adaptive")
-                        full_ops += int(r.work.hook_ops)
-                    k = max(1, int(round(ratio * chunk.shape[0])))
-                    live = oracle.alive()
-                    kills = live[rng.integers(0, live.shape[0], k)]
-                    dyn.delete(kills)
-                    oracle.delete(kills)
-                    deletes += k
-                    if count_full:
-                        r = solve(oracle.alive(), n, method="adaptive")
-                        full_ops += int(r.work.hook_ops)
-                return dyn, oracle, full_ops, deletes
+                    if route == FOREST:
+                        # the bulk first insert adopts (forest stales);
+                        # repair on the insert side so delete billing
+                        # prices the steady state, not the one-off
+                        dyn.state.ensure_forest()
+                    for batch in batches:
+                        if count_deletes:
+                            before = dyn.work["hook_ops"]
+                        dyn.delete(batch)
+                        if count_deletes:
+                            del_ops += dyn.work["hook_ops"] - before
+                return dyn, del_ops
 
-            dyn, oracle, full_ops, deletes = run_stream(True)
-            want = oracle.labels()
-            assert np.array_equal(np.asarray(dyn.labels), want), g.name
-            dyn_ops = dyn.work["hook_ops"]
-            if ratio <= 0.1:              # the ISSUE's acceptance bar
-                assert dyn_ops < full_ops, (g.name, ratio, dyn_ops,
-                                            full_ops)
-            t = _bench(lambda: run_stream(False)[0].labels, reps=2)
+            sdyn, scoped_del_ops = run_stream(SCOPED, count_deletes=True)
+            assert np.array_equal(np.asarray(sdyn.labels),
+                                  want_labels), g.name
+            scoped_ops = sdyn.work["hook_ops"]
+            t_scoped = _bench(
+                lambda: np.asarray(run_stream(SCOPED)[0].labels),
+                reps=2 if ratio == smoke_ratio else 1)
+            forest_ops = forest_del_ops = tree_hit_ratio = None
+            t_forest = None
+            if forest_routed:
+                fdyn, forest_del_ops = run_stream(
+                    FOREST, count_deletes=True)
+                assert np.array_equal(np.asarray(fdyn.labels),
+                                      want_labels), g.name
+                forest_ops = fdyn.work["hook_ops"]
+                rc = fdyn.state.delete_route_counts()
+                ticks = rc["nontree_shortcircuit"] + rc["tree_scoped"]
+                tree_hit_ratio = rc["tree_scoped"] / max(ticks, 1)
+                if ratio <= 0.1:          # the ISSUE 9 bar: >= 5x
+                    assert forest_del_ops * 5 <= scoped_del_ops, \
+                        (g.name, ratio, forest_del_ops, scoped_del_ops)
+                t_forest = _bench(
+                    lambda: np.asarray(run_stream(FOREST)[0].labels),
+                    reps=2 if ratio == smoke_ratio else 1)
+                if ratio == smoke_ratio:
+                    gate_ms[FOREST] += t_forest
+                    gate_ms[SCOPED] += t_scoped
+                forest_dyn = fdyn
+            engine_ops = forest_ops if forest_routed else scoped_ops
+            t_engine = t_forest if forest_routed else t_scoped
+            if ratio <= 0.1:    # the PR-5 bar, on the routed engine:
+                # under micro-batched churn the E-wide scoped baseline
+                # legitimately loses to full recompute — the plateau
+                # the maintained forest removes
+                assert engine_ops < full_ops, (g.name, ratio,
+                                               engine_ops, full_ops)
             rows.append({
                 "graph": g.name, "nodes": n,
                 "edges_inserted": int(edges.shape[0]),
                 "rounds": n_rounds,
                 "delete_insert_ratio": ratio,
-                "edges_deleted": int(dyn.state.num_edges_deleted),
-                "partition_changes": int(dyn.version),
-                "ms_stream": round(t * 1e3, 2),
-                "hook_ops_dynamic": dyn_ops,
+                "edges_deleted": int(sdyn.state.num_edges_deleted),
+                "partition_changes": int(sdyn.version),
+                "forest_routed_by_policy": forest_routed,
+                "tree_hit_ratio": None if tree_hit_ratio is None
+                else round(tree_hit_ratio, 4),
+                "ms_stream": round(t_engine * 1e3, 2),
+                "ms_stream_scoped": round(t_scoped * 1e3, 2),
+                "hook_ops_dynamic": engine_ops,
+                "hook_ops_deletes_forest": forest_del_ops,
+                "hook_ops_deletes_scoped": scoped_del_ops,
                 "hook_ops_full_recompute": full_ops,
-                "hook_ops_saved_x": round(full_ops / max(dyn_ops, 1), 2),
+                "hook_ops_saved_x": round(full_ops / max(engine_ops, 1), 2),
+                "delete_hook_ops_saved_x": None if forest_del_ops is None
+                else round(scoped_del_ops / max(forest_del_ops, 1), 2),
             })
+
+        # the all-non-tree short-circuit bills ZERO hook work: kill a
+        # batch drawn from the alive NON-forest edges of the last
+        # counted forest session (host set-difference against the
+        # maintained forest) and assert the counters did not move
+        if forest_dyn is not None:
+            st = forest_dyn.state
+            st.ensure_forest()
+            parents = np.asarray(st.forest[0])
+            tree = {tuple(sorted(map(int, parents[r])))
+                    for r in np.flatnonzero(parents[:, 0] >= 0)}
+            log_e = np.asarray(st.log.edges)[:st.log.rows]
+            log_a = np.asarray(st.log.alive)[:st.log.rows]
+            alive_pairs = {tuple(sorted(map(int, e)))
+                           for e, a in zip(log_e, log_a) if a}
+            non_tree = sorted(alive_pairs - tree)[:16]
+            if non_tree:
+                before = forest_dyn.work["hook_ops"]
+                forest_dyn.delete(np.asarray(non_tree, np.int32))
+                assert forest_dyn.work["hook_ops"] == before, g.name
+
+    # BENCH_dynamic smoke gate: at 1:20 churn the forest route must
+    # beat the scoped recompute on wall clock across the routed graphs
+    if gate_ms[SCOPED]:
+        assert gate_ms[FOREST] < gate_ms[SCOPED], gate_ms
     _emit_bench("dynamic", rows)
 
 

@@ -86,8 +86,45 @@ def _service_specs():
                  VarInfo(),
                  VarInfo()])
 
+    def build_delete_forest_tick(v, e):
+        d = max(e // 8, 8)
+
+        def fn(edges, alive, pi, parents, parent_eidx, dels_a, dels_b,
+               version, deleted, routes):
+            batch = DeviceGraph.concat([
+                DeviceGraph.from_edges(dels_a, v),
+                DeviceGraph.from_edges(dels_b, v),
+            ]).pad_pow2()
+            return inc_mod._delete_forest_jit(
+                edges, alive, pi, parents, parent_eidx, batch.edges,
+                batch.true_edges_device(), version, deleted, routes,
+                lift_steps=2)
+        return (fn,
+                (jax.ShapeDtypeStruct((e, 2), jnp.int32),
+                 jax.ShapeDtypeStruct((e,), jnp.bool_),
+                 jax.ShapeDtypeStruct((v,), jnp.int32),
+                 jax.ShapeDtypeStruct((v, 2), jnp.int32),
+                 jax.ShapeDtypeStruct((v,), jnp.int32),
+                 jax.ShapeDtypeStruct((d, 2), jnp.int32),
+                 jax.ShapeDtypeStruct((d, 2), jnp.int32),
+                 jax.ShapeDtypeStruct((), jnp.int32),
+                 jax.ShapeDtypeStruct((), jnp.int32),
+                 jax.ShapeDtypeStruct((2,), jnp.int32)),
+                [VarInfo(range=(0, v - 1), padded=True),
+                 VarInfo(mask=True),
+                 VarInfo(range=(0, v - 1)),
+                 VarInfo(range=(-1, v - 1)),
+                 VarInfo(range=(-1, e - 1)),
+                 VarInfo(range=(0, v - 1)),
+                 VarInfo(range=(0, v - 1)),
+                 VarInfo(),
+                 VarInfo(),
+                 VarInfo()])
+
     return [TraceEntry("service.tick.insert", build_insert_tick, _TF),
-            TraceEntry("service.tick.delete", build_delete_tick, _TF)]
+            TraceEntry("service.tick.delete", build_delete_tick, _TF),
+            TraceEntry("service.tick.delete_forest",
+                       build_delete_forest_tick, _TF)]
 
 
 @register_trace_spec("obs")

@@ -24,7 +24,14 @@ gate while it demonstrably flags the bugs it was built from:
   prefix mask and must be clean;
 * ``fixture.retrace_nonpow2`` — a non-pow2 input shape plus a leaked
   weak-typed Python scalar on a bucketed entry (one compiled program
-  per distinct size in serving).
+  per distinct size in serving);
+* ``fixture.stale_forest_idx`` — the PR-9 compaction hazard: summing
+  edge spans gathered through ``parent_eidx`` log-row pointers that
+  were NOT remapped through ``EdgeLog.compact()``'s permutation. Stale
+  pointers land past the packed true count, billing retired/padding
+  rows; its twin ``fixture.stale_forest_idx_fixed`` remaps through the
+  permutation and masks by the post-compaction true count (the
+  ``_remap_eidx_jit`` discipline) and must be clean.
 """
 from __future__ import annotations
 
@@ -120,6 +127,41 @@ def _build_retrace_nonpow2(v, e):
             [VarInfo(range=(0, v - 1)), VarInfo()])
 
 
+def _build_stale_forest_idx(v, e):
+    import jax.numpy as jnp
+
+    def fn(edges, parent_eidx, true_edges):
+        # pre-compaction pointers into a freshly packed log: rows past
+        # the true count are retired padding, but nothing masks them
+        safe = jnp.maximum(parent_eidx, 0)
+        rows = edges[safe]
+        span = jnp.abs(rows[:, 0] - rows[:, 1])
+        return jnp.sum(span)           # bills retired rows
+    return (fn, (_sds((e, 2)), _sds((v,)), _sds(())),
+            [VarInfo(range=(0, v - 1), padded=True),
+             VarInfo(range=(-1, e - 1)),
+             VarInfo(range=(0, e), mask=True)])
+
+
+def _build_stale_forest_idx_fixed(v, e):
+    import jax.numpy as jnp
+
+    def fn(edges, parent_eidx, perm, true_edges):
+        # the fix: remap through the compaction permutation, then mask
+        # by the post-compaction true count (the _remap_eidx_jit rule)
+        safe = jnp.maximum(parent_eidx, 0)
+        idx = jnp.where(parent_eidx >= 0, perm[safe], -1)
+        rows = edges[jnp.maximum(idx, 0)]
+        span = jnp.abs(rows[:, 0] - rows[:, 1])
+        live = (idx >= 0) & (idx < true_edges)
+        return jnp.sum(jnp.where(live, span, 0))
+    return (fn, (_sds((e, 2)), _sds((v,)), _sds((e,)), _sds(())),
+            [VarInfo(range=(0, v - 1), padded=True),
+             VarInfo(range=(-1, e - 1)),
+             VarInfo(range=(-1, e - 1)),
+             VarInfo(range=(0, e), mask=True)])
+
+
 def fixture_entries() -> list:
     return [
         TraceEntry("fixture.int32_edge_key", _build_edge_key, _TF),
@@ -132,6 +174,10 @@ def fixture_entries() -> list:
         TraceEntry("fixture.masked_padded_sum", _build_masked_sum, _TF),
         TraceEntry("fixture.retrace_nonpow2", _build_retrace_nonpow2,
                    _TF),
+        TraceEntry("fixture.stale_forest_idx", _build_stale_forest_idx,
+                   _TF),
+        TraceEntry("fixture.stale_forest_idx_fixed",
+                   _build_stale_forest_idx_fixed, _TF),
     ]
 
 
@@ -144,7 +190,9 @@ EXPECTED = {
     "fixture.unmasked_padded_sum": ("padmask", "unmasked-padded-sum",
                                     "any"),
     "fixture.retrace_nonpow2": ("retrace", "non-pow2-shape-arg0", "any"),
+    "fixture.stale_forest_idx": ("padmask", "unmasked-padded-sum", "any"),
 }
 
 # entries that must produce ZERO findings (the fixed twins)
-CLEAN = {"fixture.int32_edge_key_fixed", "fixture.masked_padded_sum"}
+CLEAN = {"fixture.int32_edge_key_fixed", "fixture.masked_padded_sum",
+         "fixture.stale_forest_idx_fixed"}

@@ -176,7 +176,8 @@ class _Incremental:
 
 @register_backend("dynamic",
                   Capabilities(static=True, streaming=True, deletions=True,
-                               bit_exact_counters=True))
+                               bit_exact_counters=True,
+                               maintained_forest=True))
 class _Dynamic:
     """Fully-dynamic engine: tombstone log + scoped recompute
     (DESIGN.md §9). ``Solver`` sessions get their live state here."""
@@ -419,6 +420,67 @@ def _delete_build(v: int, e: int, scan_method: str):
              VarInfo()])
 
 
+def _absorb_forest_build(v: int, e: int):
+    import jax
+
+    from repro.core import incremental as inc_mod
+
+    def fn(pi, parents, parent_eidx, new_edges, eid_base, true_count,
+           version):
+        return inc_mod._absorb_forest_jit(
+            pi, parents, parent_eidx, new_edges, eid_base, true_count,
+            version, lift_steps=2)
+    return (fn,
+            (jax.ShapeDtypeStruct((v,), jnp.int32),
+             jax.ShapeDtypeStruct((v, 2), jnp.int32),
+             jax.ShapeDtypeStruct((v,), jnp.int32),
+             jax.ShapeDtypeStruct((e, 2), jnp.int32),
+             jax.ShapeDtypeStruct((), jnp.int32),
+             jax.ShapeDtypeStruct((), jnp.int32),
+             jax.ShapeDtypeStruct((), jnp.int32)),
+            [VarInfo(range=(0, v - 1)),
+             VarInfo(range=(-1, v - 1)),
+             VarInfo(range=(-1, e - 1)),
+             VarInfo(range=(0, v - 1), padded=True),
+             VarInfo(range=(0, e)),
+             VarInfo(range=(0, e), mask=True),
+             VarInfo()])
+
+
+def _delete_forest_build(v: int, e: int):
+    import jax
+
+    from repro.core import incremental as inc_mod
+    d = max(e // 4, 8)
+
+    def fn(edges, alive, pi, parents, parent_eidx, dels, d_true,
+           version, deleted, routes):
+        return inc_mod._delete_forest_jit(
+            edges, alive, pi, parents, parent_eidx, dels, d_true,
+            version, deleted, routes, lift_steps=2)
+    return (fn,
+            (jax.ShapeDtypeStruct((e, 2), jnp.int32),
+             jax.ShapeDtypeStruct((e,), jnp.bool_),
+             jax.ShapeDtypeStruct((v,), jnp.int32),
+             jax.ShapeDtypeStruct((v, 2), jnp.int32),
+             jax.ShapeDtypeStruct((v,), jnp.int32),
+             jax.ShapeDtypeStruct((d, 2), jnp.int32),
+             jax.ShapeDtypeStruct((), jnp.int32),
+             jax.ShapeDtypeStruct((), jnp.int32),
+             jax.ShapeDtypeStruct((), jnp.int32),
+             jax.ShapeDtypeStruct((2,), jnp.int32)),
+            [VarInfo(range=(0, v - 1), padded=True),
+             VarInfo(mask=True),
+             VarInfo(range=(0, v - 1)),
+             VarInfo(range=(-1, v - 1)),
+             VarInfo(range=(-1, e - 1)),
+             VarInfo(range=(0, v - 1), padded=True),
+             VarInfo(range=(0, d), mask=True),
+             VarInfo(),
+             VarInfo(),
+             VarInfo()])
+
+
 @register_trace_spec("dynamic")
 def _dynamic_specs():
     def build_absorb(v, e):
@@ -426,13 +488,17 @@ def _dynamic_specs():
 
     return [TraceEntry(name="backend.dynamic.absorb",
                        build=build_absorb, backend="dynamic"),
+            TraceEntry(name="backend.dynamic.absorb_forest",
+                       build=_absorb_forest_build, backend="dynamic"),
             TraceEntry(name="backend.dynamic.delete",
                        build=lambda v, e: _delete_build(v, e, "jnp"),
                        backend="dynamic"),
             TraceEntry(name="backend.dynamic.delete_fused",
                        build=lambda v, e: _delete_build(
                            v, e, "pallas_fused"),
-                       backend="dynamic")]
+                       backend="dynamic"),
+            TraceEntry(name="backend.dynamic.delete_forest",
+                       build=_delete_forest_build, backend="dynamic")]
 
 
 @register_trace_spec("distributed")

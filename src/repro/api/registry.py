@@ -49,6 +49,10 @@ class Capabilities:
     # records the spanning forest during hook rounds (the parent-edge
     # table behind Solver.spanning_forest(); property-tested)
     spanning_forest: bool = False
+    # keeps the spanning forest as a MAINTAINED device resident across
+    # mutations (extended in-jit on insert, consumed by the tree-aware
+    # delete route; DESIGN.md §14) rather than recompute-on-demand
+    maintained_forest: bool = False
 
     def describe(self) -> str:
         flag = lambda b: "y" if b else "n"          # noqa: E731
@@ -58,7 +62,8 @@ class Capabilities:
                 f"sharded={flag(self.sharded)} "
                 f"device_loop={flag(self.device_loop)} "
                 f"bit_exact_counters={flag(self.bit_exact_counters)} "
-                f"spanning_forest={flag(self.spanning_forest)}")
+                f"spanning_forest={flag(self.spanning_forest)} "
+                f"maintained_forest={flag(self.maintained_forest)}")
 
 
 @runtime_checkable

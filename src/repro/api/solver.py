@@ -70,7 +70,8 @@ class Solver:
                  lift_steps: int = 2, num_segments: int | None = None,
                  mesh=None, axis_names=("data",),
                  policy_cache: policy.AutotuneCache | None = None,
-                 scan_method: str | None = None, name: str = "solver"):
+                 scan_method: str | None = None,
+                 delete_route: str | None = None, name: str = "solver"):
         self._graph = graph            # opened static snapshot (or None)
         self.num_nodes = int(num_nodes)
         self.lift_steps = lift_steps
@@ -79,15 +80,26 @@ class Solver:
         self.axis_names = tuple(axis_names)
         self.policy_cache = policy_cache
         self._scan_method = scan_method   # force the scoped-scan backend
+        if delete_route is not None \
+                and delete_route not in policy.DELETE_METHODS:
+            raise ValueError(f"unknown delete_route {delete_route!r}; "
+                             f"choose from {policy.DELETE_METHODS} or "
+                             "None (policy-routed)")
+        self._delete_route = delete_route  # force the delete-side route
         self.name = name
         self._dyn = None               # live dynamic state (lazy)
         self._labels = None            # cached static-solve labels
-        self._forest = None            # cached (method, ForestResult)
+        # cached (method, ForestResult, label version at build): kept
+        # while the version is unchanged — an absorb that merged
+        # nothing leaves the partition intact, so the forest still
+        # spans it (edges only got added)
+        self._forest = None
         self._empty = None             # cached empty DeviceGraph
         self.last_method: str | None = None
         self.last_plan: ExecutionPlan | None = None
         self.stats = {"solves": 0, "inserts": 0, "deletes": 0,
-                      "absorbs": 0, "scoped_deletes": 0, "rebuilds": 0}
+                      "absorbs": 0, "scoped_deletes": 0,
+                      "forest_deletes": 0, "rebuilds": 0}
 
     # -- session lifecycle ---------------------------------------------------
 
@@ -97,6 +109,7 @@ class Solver:
              mesh=None, axis_names=("data",),
              policy_cache: policy.AutotuneCache | None = None,
              scan_method: str | None = None,
+             delete_route: str | None = None,
              name: str = "solver") -> "Solver":
         """Open a session.
 
@@ -113,6 +126,10 @@ class Solver:
             (None = the process-wide default cache).
           scan_method: force the dynamic engine's scoped-scan backend
             (``"jnp"`` | ``"pallas_fused"``; None = policy-routed).
+          delete_route: force the delete-side route (a
+            ``policy.DELETE_METHODS`` entry; None = policy-routed by
+            the delete-rate + tree-edge-ratio features). Benchmarks
+            use this to compare routes on identical streams.
           name: label for introspection.
         """
         if graph is None:
@@ -127,7 +144,7 @@ class Solver:
         return cls(g, n, lift_steps=lift_steps, num_segments=num_segments,
                    mesh=mesh, axis_names=axis_names,
                    policy_cache=policy_cache, scan_method=scan_method,
-                   name=name)
+                   delete_route=delete_route, name=name)
 
     def graph(self) -> DeviceGraph:
         """The CURRENT edge set as a DeviceGraph: the dynamic log's
@@ -271,8 +288,14 @@ class Solver:
         ``method=None`` asks the policy and falls back to ``adaptive``
         when the chosen backend does not record a forest (capability
         ``spanning_forest``); forcing a non-recording method raises.
-        The result is cached per method and invalidated by
-        ``insert()`` / ``delete()``."""
+
+        The result is cached per method, keyed on the label VERSION at
+        build time: an ``insert()`` whose absorb provably merged
+        nothing (version unchanged) leaves the partition intact, and a
+        spanning forest of the old edge set still spans the new one —
+        the cache survives. ``delete()`` always invalidates: a deleted
+        tree edge with a surviving replacement keeps the version
+        unticked yet kills a cached forest edge."""
         from repro.core import cc as cc_mod
         if method is None:
             g = self.graph()
@@ -281,14 +304,15 @@ class Solver:
                 degree_skew=g.degree_skew, cache=self.policy_cache)
             method = chosen if chosen in cc_mod.FOREST_METHODS \
                 else "adaptive"
-        if self._forest is not None and self._forest[0] == method:
+        if self._forest is not None and self._forest[0] == method \
+                and self._forest[2] == self.version:
             return self._forest[1]
         with obs.span("solver.spanning_forest", tenant=self.name,
                       method=method):
             res = cc_mod.solve_forest(self.graph(), method=method,
                                       num_segments=self.num_segments,
                                       lift_steps=self.lift_steps)
-        self._forest = (method, res)
+        self._forest = (method, res, self.version)
         return res
 
     @classmethod
@@ -390,7 +414,9 @@ class Solver:
         delta = self._coerce(edges)
         self._ensure_dyn()
         self.stats["inserts"] += 1
-        self._forest = None            # edge set changed: forest stale
+        # the spanning-forest cache is NOT cleared here: it is keyed on
+        # the label version, and an absorb that merged nothing leaves
+        # the cached forest valid (see spanning_forest())
         with obs.span("solver.insert", tenant=self.name,
                       edges=delta.num_edges) as sp:
             self._route_insert(delta)
@@ -410,18 +436,27 @@ class Solver:
         self._forest = None            # edge set changed: forest stale
         with obs.span("solver.delete", tenant=self.name,
                       edges=delta.num_edges) as sp:
-            method = policy.select_for(self.num_nodes, self.num_edges,
+            method = self._delete_route if self._delete_route is not None \
+                else policy.select_for(self.num_nodes, self.num_edges,
                                        delta, delete=True,
                                        cache=self.policy_cache)
             self.last_method = method
             sp.tag(route=method)
-            if method in policy.DELETE_METHODS:
+            if method == policy.DYNAMIC_DELETE_FOREST:
+                # tree-aware route (DESIGN.md §14): classify against
+                # the maintained forest, short-circuit all-non-tree
+                # batches, scope reconnection to split components
+                dyn.delete_graph_forest(delta)
+                self.stats["forest_deletes"] += 1
+                self.stats["scoped_deletes"] += 1
+            elif method in policy.DELETE_METHODS:
                 if self._scan_method is None:
                     dyn.scan_method = "pallas_fused" \
                         if method == policy.DYNAMIC_DELETE_FUSED else "jnp"
                 dyn.delete_graph(delta)
                 self.stats["scoped_deletes"] += 1
             else:
+                obs.count("dynamic.deletes.rebuild")
                 dyn.tombstone_graph(delta)
                 res = self._rebuild(method)
                 dyn.adopt(res.labels, work=res.work)

@@ -64,11 +64,23 @@ INCREMENTAL_ABSORB = "incremental-absorb"
 # to a static rebuild over the surviving log instead
 DYNAMIC_DELETE = "tombstone-delete"
 DYNAMIC_DELETE_FUSED = "tombstone-delete-fused"
-DELETE_METHODS = (DYNAMIC_DELETE, DYNAMIC_DELETE_FUSED)
+# the tree-aware route (DESIGN.md §14): classify the batch against the
+# maintained spanning forest, short-circuit all-non-tree batches, and
+# reconnect via the forest skeleton + replacement edges otherwise
+DYNAMIC_DELETE_FOREST = "tombstone-delete-forest"
+DELETE_METHODS = (DYNAMIC_DELETE, DYNAMIC_DELETE_FUSED,
+                  DYNAMIC_DELETE_FOREST)
 
 # heuristic thresholds (see module docstring)
 UPDATE_RATE_ABSORB = 0.5       # delta/total above this is a bulk load
 DELETE_RATE_SCOPED = 0.5       # deletes/alive above this is a bulk drop
+# tree-hit-rate routing: min(|V|-1, |E|)/|E| bounds the fraction of
+# alive edges that can be spanning-tree edges — i.e. the expected
+# tree-hit rate of a uniform delete batch. Below the threshold most
+# deletes are non-tree and the forest route's short-circuit/skeleton
+# reconnection wins; near 1 (road-like |E| ~ |V|) nearly every delete
+# IS a tree edge and the plain scoped recompute is already right-sized
+FOREST_TREE_RATIO = 0.75
 MIN_SEGMENT_DENSITY = 1.5      # below: s = round(2E/V) <= 1 segment
 LABELPROP_DENSITY_FRAC = 0.25  # density >= frac*V: near-clique regime
 # k-out sampling routing (Hong et al.): max_degree/mean_degree above
@@ -124,6 +136,16 @@ class GraphFeatures:
             return 0.0
         return self.delta_deletes / max(self.num_edges, 1)
 
+    @property
+    def tree_edge_ratio(self) -> float:
+        """Upper bound on the fraction of alive edges that are
+        spanning-tree edges: min(|V|-1, |E|)/|E| — the expected
+        tree-hit rate of a uniform delete batch (the delete-route
+        feature behind ``FOREST_TREE_RATIO``)."""
+        if self.num_edges <= 0:
+            return 1.0
+        return min(self.num_nodes - 1, self.num_edges) / self.num_edges
+
 
 def extract_features(num_nodes: int, num_edges: int,
                      delta_edges: int | None = None,
@@ -145,6 +167,10 @@ def heuristic_method(f: GraphFeatures) -> str:
     """The paper's segmentation heuristic as a method choice."""
     if f.delta_deletes is not None:
         if f.num_edges > 0 and f.delete_rate <= DELETE_RATE_SCOPED:
+            if f.tree_edge_ratio <= FOREST_TREE_RATIO:
+                # mostly-non-tree regime: the maintained-forest route
+                # short-circuits the common all-non-tree batch
+                return DYNAMIC_DELETE_FOREST
             return DYNAMIC_DELETE
         # bulk drop: a static engine over the surviving edge set beats
         # scoping (most components are affected anyway)
@@ -361,6 +387,12 @@ def select_method(num_nodes: int, num_edges: int, *,
     f = extract_features(num_nodes, num_edges, delta_edges, delta_deletes)
     choice = heuristic_method(f)
     if choice == INCREMENTAL_ABSORB:
+        return choice
+    if choice == DYNAMIC_DELETE_FOREST:
+        # the tree-aware route has no fused variant: its hot path is
+        # the short-circuit (no scan at all), and the scoped phases run
+        # over packed skeleton/crossing sets the fused kernel's
+        # segment-boundary prefetch does not model
         return choice
     cache = default_cache() if cache is None else cache
     if choice == DYNAMIC_DELETE:

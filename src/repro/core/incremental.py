@@ -318,6 +318,129 @@ def _delete_jit(edges, alive, pi, dels, d_true, version, deleted, *,
     return pi1, alive2, version, deleted, work
 
 
+# ---------------------------------------------------------------------------
+# Maintained spanning forest (DESIGN.md §14): forest-threading jits
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("lift_steps",))
+def _absorb_forest_jit(pi, parents, parent_eidx, new_edges, eid_base,
+                       true_count, version, *, lift_steps):
+    """``_absorb_jit`` + forest extension: the batch's true rows were
+    just appended to the EdgeLog at offset ``eid_base`` (a TRACED
+    device scalar — a static offset would recompile once per append
+    cursor value), so batch slot i is log row ``eid_base + i``. A
+    winning hook records its edge AND that log row (same scatter-min
+    win rule as the forest round variants). Labels and version are
+    bit-identical to ``_absorb_jit`` — recording never changes a pi
+    update."""
+    p = new_edges.shape[0]
+    slot = jnp.arange(p, dtype=jnp.int32)
+    eids = jnp.where(slot < true_count, eid_base + slot, -1)
+    new_pi, parents, parent_eidx, work = rounds.forest_cleanup_rounds_ids(
+        pi, parents, parent_eidx, new_edges, eids, WorkCounters.zeros(),
+        true_edges=true_count, lift_steps=lift_steps)
+    work = work.add(sync_rounds=1)
+    version = version + jnp.any(new_pi != pi).astype(version.dtype)
+    return new_pi, parents, parent_eidx, version, work
+
+
+@functools.partial(jax.jit, static_argnames=("lift_steps",))
+def _delete_forest_jit(edges, alive, pi, parents, parent_eidx, dels,
+                       d_true, version, deleted, routes, *, lift_steps):
+    """The tree-aware delete tick, ONE device program (DESIGN.md §14):
+
+    1. tombstone the batch (orientation-blind multiset matching via
+       ``undirected_group_ids`` inside ``tombstone_mask``);
+    2. classify tree vs. non-tree hits with one O(V) gather — vertex r
+       lost its tree edge iff its recorded log row just died
+       (``killed[parent_eidx[r]]``; deleting {u, v} kills EVERY alive
+       copy, including the recorded one, so the gather is exact);
+    3. ``lax.cond``: zero tree hits → labels, forest, and version are
+       UNTOUCHED (the common case bills zero hook rounds and zero
+       sweeps); otherwise ``rounds.forest_scoped_rounds`` reconnects
+       only the components that lost a tree edge via the surviving
+       forest skeleton + crossing replacement edges (unlifted hooks —
+       ``lift_steps`` only keeps this tick's static signature parallel
+       to the absorb jit's).
+
+    ``routes`` is an int32 [2] device counter
+    (nontree_shortcircuit, tree_scoped) — how a batch classified is
+    only known on device and the steady-state tick must not sync to
+    find out; hosts drain it lazily into the obs counters."""
+    from repro.graphs.device import tombstone_mask
+
+    num_nodes = pi.shape[0]
+    alive2, killed = tombstone_mask(edges, alive, dels, d_true)
+    deleted = deleted + jnp.sum(killed).astype(deleted.dtype)
+    has_parent = parent_eidx >= 0
+    safe = jnp.maximum(parent_eidx, 0)
+    tree_hit = has_parent & killed[safe]
+    any_hit = jnp.any(tree_hit)
+
+    def tree_scoped(_):
+        aff = jnp.zeros((num_nodes,), jnp.bool_).at[pi].max(tree_hit)
+        in_aff = aff[pi]                   # vertex in an affected comp?
+        edge_aff = alive2 & in_aff[edges[:, 0]]
+        forest_keep = in_aff & has_parent & ~killed[safe]
+        eids = jnp.arange(edges.shape[0], dtype=jnp.int32)
+        return rounds.forest_scoped_rounds(
+            pi, parents, parent_eidx, edges, eids, edge_aff,
+            forest_keep, in_aff, WorkCounters.zeros())
+
+    def no_op(_):
+        return pi, parents, parent_eidx, WorkCounters.zeros()
+
+    pi1, parents1, eidx1, work = jax.lax.cond(any_hit, tree_scoped,
+                                              no_op, None)
+    work = work.add(sync_rounds=1)
+    version = version + jnp.any(pi1 != pi).astype(version.dtype)
+    routes = routes + jnp.stack([(~any_hit).astype(jnp.int32),
+                                 any_hit.astype(jnp.int32)])
+    return pi1, alive2, parents1, eidx1, version, deleted, routes, work
+
+
+@functools.partial(jax.jit, static_argnames=("num_nodes", "lift_steps",
+                                             "num_segments"))
+def _rebuild_forest_jit(edges, alive, *, num_nodes, lift_steps,
+                        num_segments):
+    """From-scratch forest (re)derivation over the surviving log — the
+    lazy fallback when a bulk route (static rebuild, tombstone-only
+    delete) left the maintained forest stale. Runs the Fig. 4 pipeline
+    with id-recording hooks; the resulting labels are canonical and
+    therefore bit-identical to the live state's, so assigning them is
+    safe and the version must NOT tick."""
+    from repro.core.segmentation import plan_segmentation
+
+    e = edges.shape[0]
+    ids = jnp.arange(e, dtype=jnp.int32)
+    packed, pids, true = rounds.pack_edge_rows(edges, ids, alive)
+    plan = plan_segmentation(e, num_nodes, num_segments)
+    segments = rounds.pad_and_segment(packed, plan)
+    pad = plan.padded_edges - e
+    seg_ids = pids if pad <= 0 else jnp.concatenate(
+        [pids, jnp.full((pad,), -1, jnp.int32)])
+    seg_ids = seg_ids.reshape(plan.num_segments, plan.segment_size)
+    counts = rounds.segment_true_counts(true, plan)
+    pi0 = jnp.arange(num_nodes, dtype=jnp.int32)
+    pi, parents, eidx, work = rounds.forest_segment_scan_ids(
+        pi0, rounds.empty_forest(num_nodes),
+        rounds.empty_forest_idx(num_nodes), segments, seg_ids,
+        WorkCounters.zeros(), counts, lift_steps=lift_steps)
+    pi, parents, eidx, work = rounds.forest_cleanup_rounds_ids(
+        pi, parents, eidx, packed, pids, work, true_edges=true,
+        lift_steps=lift_steps)
+    work = work.add(sync_rounds=1)
+    return pi, parents, eidx, work
+
+
+@jax.jit
+def _remap_eidx_jit(parent_eidx, perm):
+    """Remap forest log-row pointers through a compaction permutation
+    (roots and retired rows stay -1)."""
+    safe = jnp.maximum(parent_eidx, 0)
+    return jnp.where(parent_eidx >= 0, perm[safe], -1)
+
+
 class DynamicCC(IncrementalCC):
     """Fully-dynamic connectivity: streaming edge insertions AND
     deletions over one device-resident state (DESIGN.md §9; Hong,
@@ -366,6 +489,23 @@ class DynamicCC(IncrementalCC):
         # delete batch matched is only known on device, and the
         # steady-state delete tick must not sync to find out
         self._deleted = jnp.zeros((), jnp.int32)
+        # maintained spanning forest (DESIGN.md §14): parent edges +
+        # the EdgeLog row each was recorded from, extended in-jit by
+        # the forest absorb and consumed by the tree-aware delete.
+        # ``_forest_valid`` is a HOST flag: bulk routes (adopt,
+        # tombstone-only deletes, the plain scoped delete) mutate
+        # labels or the log without maintaining the forest, and the
+        # next forest-routed delete rebuilds it lazily.
+        self._parents = rounds.empty_forest(num_nodes)
+        self._parent_eidx = rounds.empty_forest_idx(num_nodes)
+        self._forest_valid = True
+        # delete-route telemetry: device [nontree_shortcircuit,
+        # tree_scoped] counter (ticked inside the delete jit) + host
+        # rebuild count; drained into obs by delete_route_counts()
+        self._delete_routes = jnp.zeros((2,), jnp.int32)
+        self.forest_rebuilds = 0
+        self._routes_flushed = {"nontree_shortcircuit": 0,
+                                "tree_scoped": 0, "rebuild": 0}
 
     # -- inserts (log-keeping overrides) -----------------------------------
 
@@ -381,9 +521,29 @@ class DynamicCC(IncrementalCC):
     def insert_graph(self, delta) -> jnp.ndarray:
         """Absorb a DeviceGraph insert batch; the delta's true rows are
         appended to the device edge log first (static true count
-        required — same contract as ``DeviceGraph.concat``)."""
+        required — same contract as ``DeviceGraph.concat``). While the
+        maintained forest is valid the absorb runs the forest-extending
+        jit (labels/version bit-identical to the plain absorb; a
+        winning hook also records its log row), so inserts never stale
+        the forest."""
+        rows_before = self.log.rows
         self.log.append(delta)          # validates |V| + static count
-        return super().insert_graph(delta)
+        if not self._forest_valid:
+            return super().insert_graph(delta)
+        self.num_edges_inserted += delta.num_edges
+        self.batches_absorbed += 1
+        if self.num_nodes == 0 or delta.edges.shape[0] == 0:
+            return self._pi
+        padded = delta.pad_pow2(min_rows=_MIN_BATCH_PAD)
+        v0, true_count = self._version, padded.true_edges_device()
+        (self._pi, self._parents, self._parent_eidx, self._version,
+         batch_work) = _absorb_forest_jit(
+            self._pi, self._parents, self._parent_eidx, padded.edges,
+            jax.device_put(np.int32(rows_before)), true_count,
+            self._version, lift_steps=self.lift_steps)
+        self._queue_work(batch_work)
+        self._record_metrics("insert", batch_work, true_count, v0)
+        return self._pi
 
     def stage(self, delta) -> None:
         """Append a delta to the log WITHOUT absorbing — the registry's
@@ -391,6 +551,14 @@ class DynamicCC(IncrementalCC):
         whole log view and ``adopt``s the result (which does the
         version/work accounting)."""
         self.log.append(delta)
+
+    def adopt(self, labels, work=None, num_edges: int = 0) -> jnp.ndarray:
+        """``IncrementalCC.adopt`` + forest invalidation: a static
+        engine recomputed labels without recording parent edges, so the
+        maintained forest is stale until the next forest-routed delete
+        rebuilds it."""
+        self._forest_valid = False
+        return super().adopt(labels, work=work, num_edges=num_edges)
 
     # -- deletes ------------------------------------------------------------
 
@@ -429,6 +597,62 @@ class DynamicCC(IncrementalCC):
                                                self.num_nodes),
             scan_method=self.scan_method,
             interpret=default_interpret())
+        # the plain scoped recompute does not maintain parent edges —
+        # whether it even ran (anything killed?) is device knowledge,
+        # so conservatively stale the forest
+        self._forest_valid = False
+        self._queue_work(batch_work)
+        self._record_metrics("delete", batch_work, true_count, v0)
+        return self._pi
+
+    def ensure_forest(self) -> None:
+        """(Re)derive the maintained forest from the surviving log if a
+        bulk route staled it. The rebuild's labels are canonical and
+        bit-identical to the live state's, so assigning them is safe;
+        the version does not tick. Counts into
+        ``dynamic.deletes.rebuild``."""
+        if self._forest_valid:
+            return
+        from repro.core.segmentation import adaptive_num_segments
+        from repro.obs import trace as obs
+        (self._pi, self._parents, self._parent_eidx,
+         work) = _rebuild_forest_jit(
+            self.log.edges, self.log.alive, num_nodes=self.num_nodes,
+            lift_steps=self.lift_steps,
+            num_segments=adaptive_num_segments(self.log.capacity,
+                                               self.num_nodes))
+        self._queue_work(work)
+        self._forest_valid = True
+        self.forest_rebuilds += 1
+        obs.count("dynamic.deletes.rebuild")
+
+    def delete_graph_forest(self, dels) -> jnp.ndarray:
+        """Tree-aware delete (DESIGN.md §14): one device program
+        tombstones the batch, classifies tree vs. non-tree hits against
+        the maintained forest, short-circuits the all-non-tree case
+        (labels, forest, and version untouched — ~zero hook_ops), and
+        otherwise reconnects only the components that lost a tree edge
+        via the surviving forest skeleton + crossing replacement
+        edges. Transfer-free on the steady-state path (the lazy
+        ``ensure_forest`` fallback is the only exception, and only
+        after a bulk route)."""
+        if dels.num_nodes != self.num_nodes:
+            raise ValueError(f"dels num_nodes {dels.num_nodes} != "
+                             f"{self.num_nodes}")
+        self.delete_batches += 1
+        if self.num_nodes == 0 or dels.edges.shape[0] == 0 \
+                or self.log.rows == 0:
+            return self._pi
+        self.ensure_forest()
+        padded = dels.pad_pow2(min_rows=_MIN_BATCH_PAD)
+        v0, true_count = self._version, padded.true_edges_device()
+        (self._pi, self.log.alive, self._parents, self._parent_eidx,
+         self._version, self._deleted, self._delete_routes,
+         batch_work) = _delete_forest_jit(
+            self.log.edges, self.log.alive, self._pi, self._parents,
+            self._parent_eidx, padded.edges, true_count, self._version,
+            self._deleted, self._delete_routes,
+            lift_steps=self.lift_steps)
         self._queue_work(batch_work)
         self._record_metrics("delete", batch_work, true_count, v0)
         return self._pi
@@ -451,8 +675,53 @@ class DynamicCC(IncrementalCC):
                                  padded.true_edges_device())
         self._deleted = self._deleted + \
             jnp.sum(killed).astype(self._deleted.dtype)
+        # rows died without forest maintenance (the caller rebuilds
+        # labels via a static engine + adopt, which also invalidates)
+        self._forest_valid = False
+
+    def compact(self) -> None:
+        """Compact the EdgeLog in place and remap the maintained
+        forest's ``parent_eidx`` through the compaction permutation —
+        the two must move together or every forest pointer silently
+        refers to the wrong post-compaction row (the seeded bug in
+        ``analysis/fixtures.py``). One host sync (the log cursor);
+        maintenance operation, not a tick."""
+        perm = self.log.compact()
+        if self._forest_valid:
+            self._parent_eidx = _remap_eidx_jit(self._parent_eidx, perm)
 
     # -- views / introspection ----------------------------------------------
+
+    @property
+    def forest(self) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """(parents [V, 2], parent_eidx [V]) — the maintained spanning
+        forest (device arrays; -1 rows are component roots). Check
+        ``forest_valid`` (or call ``ensure_forest()``) first if a bulk
+        route may have staled it."""
+        return self._parents, self._parent_eidx
+
+    @property
+    def forest_valid(self) -> bool:
+        return self._forest_valid
+
+    def delete_route_counts(self, flush_obs: bool = True) -> dict:
+        """Drain the delete-route telemetry: syncs the device
+        [nontree_shortcircuit, tree_scoped] counter (introspection
+        point — never on the steady-state tick) and, unless told
+        otherwise, folds the deltas into the host obs counters
+        ``dynamic.deletes.{nontree_shortcircuit,tree_scoped,rebuild}``."""
+        vals = np.asarray(jax.device_get(self._delete_routes))
+        counts = {"nontree_shortcircuit": int(vals[0]),
+                  "tree_scoped": int(vals[1]),
+                  "rebuild": self.forest_rebuilds}
+        if flush_obs:
+            from repro.obs import trace as obs
+            for k in ("nontree_shortcircuit", "tree_scoped"):
+                delta = counts[k] - self._routes_flushed[k]
+                if delta:
+                    obs.count(f"dynamic.deletes.{k}", delta)
+                self._routes_flushed[k] = counts[k]
+        return counts
 
     def graph(self):
         """The surviving edge set as a compacted DeviceGraph (traced

@@ -265,8 +265,19 @@ class DeviceGraph:
         true = int(sum(trues))
         plan = _plan_for(int(edges.shape[0]), graphs[0].num_nodes, true,
                          None)
+        # degree-skew None-join rule: a part without a measured skew
+        # (device-side ingest skips the host measurement) must not
+        # erase another part's known value — routing on a silently
+        # dropped skew flips method="auto" mid-session. Unknown parts
+        # are ignored; known parts join by max (skew is a max-over-mean
+        # statistic, and the union's skew is at least each part's
+        # numerator over a no-smaller edge count scaled by parts —
+        # max-of-known is the conservative router-facing bound);
+        # all-unknown stays None.
+        skews = [g.degree_skew for g in graphs if g.degree_skew is not None]
+        skew = max(skews) if skews else None
         return cls(edges, graphs[0].num_nodes, true, plan,
-                   name=name or graphs[0].name)
+                   name=name or graphs[0].name, degree_skew=skew)
 
     def shard(self, mesh: Mesh, axis_names: tuple[str, ...] = ("data",)
               ) -> "DeviceGraph":
@@ -367,14 +378,37 @@ def compact_alive(edges: jnp.ndarray, alive: jnp.ndarray
     true-count billing and the fused kernel's edge masking both read
     "first ``true`` rows are real". Returns ``(edges, true_count)``
     with ``true_count`` a traced int32 scalar."""
+    packed, true, _ = compact_alive_perm(edges, alive)
+    return packed, true
+
+
+def compact_alive_perm(edges: jnp.ndarray, alive: jnp.ndarray
+                       ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """``compact_alive`` + the old→new row permutation. Compaction
+    renumbers edge slots, and any holder of log-row indices — the
+    maintained spanning forest's ``parent_eidx`` — must remap through
+    it or silently point at the wrong (or a dead) edge. Returns
+    ``(packed, true_count, perm)`` with ``perm[i]`` the compacted
+    position of old row ``i``, or -1 if the row was dead."""
+    e = alive.shape[0]
     order = jnp.argsort(~alive, stable=True)        # alive rows first
     packed = jnp.where(alive[order][:, None], edges[order], 0)
-    return packed, jnp.sum(alive).astype(jnp.int32)
+    perm = jnp.zeros((e,), jnp.int32).at[order].set(
+        jnp.arange(e, dtype=jnp.int32))
+    perm = jnp.where(alive, perm, -1)
+    return packed, jnp.sum(alive).astype(jnp.int32), perm
 
 
 @jax.jit
 def _log_delete_jit(edges, alive, dels, d_true):
     return tombstone_mask(edges, alive, dels, d_true)
+
+
+@jax.jit
+def _compact_perm_jit(edges, alive):
+    packed, true, perm = compact_alive_perm(edges, alive)
+    new_alive = jnp.arange(alive.shape[0], dtype=jnp.int32) < true
+    return packed, new_alive, perm, true
 
 
 @jax.jit
@@ -495,6 +529,20 @@ class EdgeLog:
         packed, true = compact_alive(self.edges, self.alive)
         plan = _plan_for(self.capacity, self.num_nodes, true, None)
         return DeviceGraph(packed, self.num_nodes, true, plan, name="log")
+
+    def compact(self) -> jnp.ndarray:
+        """In-place compaction: pack alive rows to the prefix, scrub the
+        tail, and pull the append cursor back to the alive count (ONE
+        host sync, for the cursor — this is a maintenance operation,
+        not a steady-state tick). Returns the old→new row permutation
+        (int32 [cap], -1 for retired rows) so holders of log-row
+        indices — ``DynamicCC``'s maintained ``parent_eidx`` — can
+        remap; dropping it on the floor is the seeded bug
+        ``fixture.stale_forest_idx`` demonstrates."""
+        self.edges, self.alive, perm, true = _compact_perm_jit(
+            self.edges, self.alive)
+        self.rows = int(true)
+        return perm
 
     def __repr__(self) -> str:
         return (f"EdgeLog(|V|={self.num_nodes}, cap={self.capacity}, "

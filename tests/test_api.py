@@ -49,27 +49,29 @@ EXPECTED_BACKENDS = [
 ]
 
 # (static, batched, streaming, deletions, sharded, device_loop,
-#  bit_exact_counters, spanning_forest) per backend — the DESIGN.md §10
-# capability matrix
+#  bit_exact_counters, spanning_forest, maintained_forest) per backend —
+# the DESIGN.md §10 capability matrix (maintained_forest = keeps the
+# forest as a device resident across mutations, DESIGN.md §14)
 EXPECTED_CAPABILITIES = {
-    "soman":         (1, 0, 0, 0, 0, 1, 1, 1),
-    "multijump":     (1, 0, 0, 0, 0, 1, 1, 1),
-    "atomic_hook":   (1, 0, 0, 0, 0, 1, 1, 1),
-    "adaptive":      (1, 0, 0, 0, 0, 1, 1, 1),
-    "labelprop":     (1, 0, 0, 0, 0, 1, 1, 0),
-    "pallas":        (1, 0, 0, 0, 0, 1, 0, 0),
-    "pallas_fused":  (1, 0, 0, 0, 0, 1, 1, 0),
-    "sampled":       (1, 0, 0, 0, 0, 1, 1, 1),
-    "sampled_fused": (1, 0, 0, 0, 0, 1, 1, 0),
-    "hostloop":      (1, 0, 0, 0, 0, 0, 0, 0),
-    "batched":       (1, 1, 0, 0, 0, 1, 1, 0),
-    "incremental":   (1, 0, 1, 0, 0, 1, 1, 0),
-    "dynamic":       (1, 0, 1, 1, 0, 1, 1, 0),
-    "distributed":   (1, 0, 0, 0, 1, 1, 0, 0),
+    "soman":         (1, 0, 0, 0, 0, 1, 1, 1, 0),
+    "multijump":     (1, 0, 0, 0, 0, 1, 1, 1, 0),
+    "atomic_hook":   (1, 0, 0, 0, 0, 1, 1, 1, 0),
+    "adaptive":      (1, 0, 0, 0, 0, 1, 1, 1, 0),
+    "labelprop":     (1, 0, 0, 0, 0, 1, 1, 0, 0),
+    "pallas":        (1, 0, 0, 0, 0, 1, 0, 0, 0),
+    "pallas_fused":  (1, 0, 0, 0, 0, 1, 1, 0, 0),
+    "sampled":       (1, 0, 0, 0, 0, 1, 1, 1, 0),
+    "sampled_fused": (1, 0, 0, 0, 0, 1, 1, 0, 0),
+    "hostloop":      (1, 0, 0, 0, 0, 0, 0, 0, 0),
+    "batched":       (1, 1, 0, 0, 0, 1, 1, 0, 0),
+    "incremental":   (1, 0, 1, 0, 0, 1, 1, 0, 0),
+    "dynamic":       (1, 0, 1, 1, 0, 1, 1, 0, 1),
+    "distributed":   (1, 0, 0, 0, 1, 1, 0, 0, 0),
 }
 
 _CAP_FIELDS = ("static", "batched", "streaming", "deletions", "sharded",
-               "device_loop", "bit_exact_counters", "spanning_forest")
+               "device_loop", "bit_exact_counters", "spanning_forest",
+               "maintained_forest")
 
 
 def test_public_api_surface_is_stable():
@@ -363,6 +365,35 @@ def test_solver_steady_state_mutations_are_transfer_free():
     s.insert(edges[:64])
     s.insert(DeviceGraph.from_edges(edges[64:72], n))
     s.delete(DeviceGraph.from_edges(edges[:8], n))
+
+    with jax.transfer_guard("disallow"):
+        s.insert(DeviceGraph.from_edges(edges[72:80], n))
+        s.delete(DeviceGraph.from_edges(edges[8:16], n))
+
+    oracle = DynamicConnectivityOracle(n)
+    oracle.insert(edges[:80])
+    oracle.delete(edges[:16])
+    np.testing.assert_array_equal(np.asarray(s.labels), oracle.labels())
+
+
+def test_solver_forest_route_steady_state_transfer_free():
+    """ISSUE 9: the forest-maintaining absorb and the tree-aware delete
+    are single-device-program ticks too — the steady state stays
+    transfer-free under ``jax.transfer_guard("disallow")`` once warmed
+    (the lazy ``ensure_forest`` rebuild is the only syncing exception
+    and runs outside the guard here)."""
+    import jax
+    from repro.graphs.device import DeviceGraph
+
+    rng = np.random.default_rng(5)
+    n = 64
+    edges = rng.integers(0, n, (96, 2)).astype(np.int32)
+    s = Solver.open(num_nodes=n, delete_route="tombstone-delete-forest")
+    s.insert(edges[:64])                 # bulk seed (may adopt)
+    s.state.ensure_forest()              # repair + warm outside the guard
+    s.insert(DeviceGraph.from_edges(edges[64:72], n))
+    s.delete(DeviceGraph.from_edges(edges[:8], n))
+    assert s.state.forest_valid
 
     with jax.transfer_guard("disallow"):
         s.insert(DeviceGraph.from_edges(edges[72:80], n))

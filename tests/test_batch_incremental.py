@@ -266,6 +266,75 @@ def test_dynamic_scoped_recompute_cheaper_than_full():
         (scoped_ops, int(full.work.hook_ops))
 
 
+def test_dynamic_forest_compaction_remaps_parent_eidx():
+    """ISSUE 9 satellite: ``DynamicCC.compact()`` packs the tombstone
+    log AND remaps the maintained forest's ``parent_eidx`` through the
+    compaction permutation in one step — afterwards every recorded
+    pointer still names the ALIVE log row holding its parent edge, and
+    the forest route keeps working over the renumbered log."""
+    from repro.graphs.device import DeviceGraph
+
+    rng = np.random.default_rng(11)
+    n = 32
+    edges = rng.integers(0, n, (48, 2)).astype(np.int32)
+    dyn = DynamicCC(n)
+    oracle = DynamicConnectivityOracle(n)
+    dyn.insert(edges)
+    oracle.insert(edges)
+    assert dyn.forest_valid                  # inserts never stale it
+    kills = edges[::3].copy()
+    dyn.delete_graph_forest(DeviceGraph.from_edges(kills, n))
+    oracle.delete(kills)
+    np.testing.assert_array_equal(np.asarray(dyn.labels), oracle.labels())
+
+    labels_before = np.asarray(dyn.labels).copy()
+    rows_before = dyn.log.rows
+    dyn.compact()
+    assert dyn.log.rows < rows_before        # tombstones dropped
+    assert dyn.forest_valid
+    np.testing.assert_array_equal(np.asarray(dyn.labels), labels_before)
+    parents = np.asarray(dyn.forest[0])
+    eidx = np.asarray(dyn.forest[1])
+    log_e = np.asarray(dyn.log.edges)
+    log_a = np.asarray(dyn.log.alive)
+    recorded = np.flatnonzero(parents[:, 0] >= 0)
+    assert recorded.size > 0
+    for r in recorded:
+        k = int(eidx[r])
+        assert 0 <= k < dyn.log.rows, (int(r), k)
+        assert bool(log_a[k]), (int(r), k)
+        assert (sorted(map(int, log_e[k]))
+                == sorted(map(int, parents[r]))), (int(r), k)
+    # the forest keeps working post-compaction: kill a live tree edge
+    tree0 = [sorted(map(int, parents[recorded[0]]))]
+    dyn.delete_graph_forest(DeviceGraph.from_edges(tree0, n))
+    oracle.delete(tree0)
+    np.testing.assert_array_equal(np.asarray(dyn.labels), oracle.labels())
+
+
+def test_dynamic_plain_delete_stales_forest_lazy_rebuild():
+    """A plain (non-forest) delete leaves the maintained forest stale;
+    the next forest-route call lazily rebuilds it exactly once (counted
+    in ``delete_route_counts()['rebuild']``) and lands on the same
+    labels as the oracle."""
+    from repro.graphs.device import DeviceGraph
+
+    n = 16
+    ring = [[i, (i + 1) % n] for i in range(n)]
+    dyn = DynamicCC(n)
+    oracle = DynamicConnectivityOracle(n)
+    dyn.insert(ring)
+    oracle.insert(ring)
+    dyn.delete([[0, 1]])                     # plain route: forest stales
+    oracle.delete([[0, 1]])
+    assert not dyn.forest_valid
+    dyn.delete_graph_forest(DeviceGraph.from_edges([[4, 5]], n))
+    oracle.delete([[4, 5]])
+    assert dyn.forest_valid and dyn.forest_rebuilds == 1
+    assert dyn.delete_route_counts()["rebuild"] == 1
+    np.testing.assert_array_equal(np.asarray(dyn.labels), oracle.labels())
+
+
 def test_dynamic_fused_scan_bit_identical():
     """scan_method='pallas_fused' runs the scoped recompute through the
     fused kernel: labels AND work counters bit-identical to jnp."""

@@ -257,6 +257,22 @@ def test_spanning_forest_via_solver_facade():
     _assert_valid_forest("mutated", 6, np.asarray(f2.labels),
                          np.asarray(f2.parents))
 
+    # ISSUE 9 satellite: the cache is keyed on the label VERSION, not
+    # on mutation count — an insert whose absorb provably merged
+    # nothing (version unticked) keeps the cached object alive...
+    v = int(s2.version)
+    s2.insert([[0, 1]])                     # redundant: merges nothing
+    assert int(s2.version) == v
+    assert s2.spanning_forest() is f2       # cache survives the insert
+    # ...while a merging insert ticks the version and re-derives
+    s2.insert([[4, 5]])
+    assert int(s2.version) == v + 1
+    f3 = s2.spanning_forest()
+    assert f3 is not f2
+    # and delete() always invalidates, version tick or not
+    s2.delete([[4, 5]])
+    assert s2.spanning_forest() is not f3
+
 
 # ---------------------------------------------------------------------------
 # Shim column (ISSUE 5): legacy entrypoints == facade, warn exactly once
@@ -398,6 +414,143 @@ def test_conformance_dynamic_scripts_cross_mode(case):
         got = solve(survivors, n, backend=backend)
         np.testing.assert_array_equal(np.asarray(got.labels), want,
                                       err_msg=f"{backend} {script}")
+
+
+# ---------------------------------------------------------------------------
+# Maintained forest + tree-aware deletes (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+def _forest_pairs(dyn):
+    """The maintained forest's edge set as normalized host tuples."""
+    parents = np.asarray(dyn.forest[0])
+    has = parents[:, 0] >= 0
+    return {tuple(sorted(map(int, parents[r])))
+            for r in np.flatnonzero(has)}
+
+
+def _assert_maintained_forest(tag, s):
+    """Full maintained-forest invariant: a valid spanning forest of the
+    live labels (acyclic, exactly |V| - C edges, roots = component
+    minima) AND every recorded ``parent_eidx`` points at an ALIVE log
+    row holding that very edge (the compaction-permutation contract)."""
+    dyn = s.state
+    assert dyn.forest_valid, tag
+    n = dyn.num_nodes
+    labels = np.asarray(s.labels)
+    parents = np.asarray(dyn.forest[0])
+    parent_eidx = np.asarray(dyn.forest[1])
+    _assert_valid_forest(tag, n, labels, parents)
+    log_edges = np.asarray(dyn.log.edges)
+    log_alive = np.asarray(dyn.log.alive)
+    has = parents[:, 0] >= 0
+    np.testing.assert_array_equal(parent_eidx[~has],
+                                  np.full(int((~has).sum()), -1),
+                                  err_msg=f"{tag}: root rows must be -1")
+    for r in np.flatnonzero(has):
+        eid = int(parent_eidx[r])
+        assert 0 <= eid < dyn.log.rows, (tag, int(r), eid)
+        assert bool(log_alive[eid]), (tag, int(r), eid, "dead log row")
+        assert (sorted(map(int, log_edges[eid]))
+                == sorted(map(int, parents[r]))), (tag, int(r), eid)
+
+
+def test_maintained_forest_interleaved_scripts_vs_oracle():
+    """ISSUE 9 conformance rows: three interleaved insert/delete
+    scripts through the forced forest delete route — deletes hitting
+    only NON-tree edges (short-circuit: labels, version and hook work
+    untouched), only TREE edges (scoped reconnection), and a mixed
+    batch. After EVERY step: labels canonically identical to the
+    union-find oracle, version ticked iff the partition changed (i.e.
+    iff a component actually split), and the maintained forest acyclic
+    with exactly |V| - C alive parent edges."""
+    n = 12
+    ring = [[i, (i + 1) % n] for i in range(n)]
+    chords = [[0, 6], [3, 9], [1, 4], [5, 8]]
+    base = np.asarray(ring + chords, np.int32)
+    alive0 = {tuple(sorted(map(int, e))) for e in base}
+
+    def fresh():
+        s = Solver.open(num_nodes=n,
+                        delete_route="tombstone-delete-forest")
+        oracle = DynamicConnectivityOracle(n)
+        s.insert(base)
+        oracle.insert(base)
+        s.state.ensure_forest()     # the bulk insert may have adopted
+        return s, oracle
+
+    def step(s, oracle, op, batch, tag):
+        batch = np.asarray(batch, np.int32).reshape(-1, 2)
+        before = np.asarray(s.labels).copy()
+        v0 = int(s.version)
+        (s.insert if op == "ins" else s.delete)(batch)
+        (oracle.insert if op == "ins" else oracle.delete)(batch)
+        after = np.asarray(s.labels)
+        np.testing.assert_array_equal(after, oracle.labels(),
+                                      err_msg=tag)
+        changed = not np.array_equal(before, after)
+        assert (int(s.version) != v0) == changed, (tag, v0,
+                                                   int(s.version))
+        _assert_maintained_forest(tag, s)
+
+    # -- script A: every delete hits only non-tree edges --------------
+    s, oracle = fresh()
+    non_tree = sorted(alive0 - _forest_pairs(s.state))
+    assert len(non_tree) >= 5           # 16 edges, spanning tree is 11
+    hook0 = s.work["hook_ops"]
+    step(s, oracle, "del", non_tree[:2], "A1")
+    step(s, oracle, "del", [non_tree[2]], "A2")
+    # the short-circuit bills ZERO hook work for all-non-tree batches
+    assert s.work["hook_ops"] == hook0
+    rc = s.state.delete_route_counts()
+    assert rc["nontree_shortcircuit"] == 2 and rc["tree_scoped"] == 0
+    step(s, oracle, "ins", [[2, 7]], "A3")   # redundant: stays non-tree
+    step(s, oracle, "del", [non_tree[3]], "A4")
+    rc = s.state.delete_route_counts()
+    assert rc["nontree_shortcircuit"] == 3 and rc["tree_scoped"] == 0
+
+    # -- script B: every delete hits the live tree ---------------------
+    s, oracle = fresh()
+    for i in range(4):
+        tree = sorted(_forest_pairs(s.state))
+        step(s, oracle, "del", [tree[i % len(tree)]], f"B{i}")
+    rc = s.state.delete_route_counts()
+    assert rc["nontree_shortcircuit"] == 0 and rc["tree_scoped"] == 4
+
+    # -- script C: mixed batches (tree + non-tree rows together) -------
+    s, oracle = fresh()
+    tree = sorted(_forest_pairs(s.state))
+    non_tree = sorted(alive0 - set(tree))
+    step(s, oracle, "del", [tree[0], non_tree[0]], "C1")
+    step(s, oracle, "ins", [tree[0]], "C2")  # resurrect the tree edge
+    tree2 = sorted(_forest_pairs(s.state))
+    step(s, oracle, "del", [tree2[0], tree2[1], non_tree[1]], "C3")
+    rc = s.state.delete_route_counts()
+    assert rc["nontree_shortcircuit"] == 0 and rc["tree_scoped"] == 2
+
+
+@settings(max_examples=6, deadline=None)
+@given(dynamic_scripts(max_n=12, max_ops=6))
+def test_maintained_forest_random_scripts(case):
+    """Property form of the ISSUE 9 rows: ANY interleaved script on
+    the forced forest route stays canonical-label-identical to the
+    oracle, ticks the version iff the partition changed, and keeps the
+    maintained forest valid after every step."""
+    n, script = case
+    s = Solver.open(num_nodes=n, delete_route="tombstone-delete-forest")
+    oracle = DynamicConnectivityOracle(n)
+    for op, batch in script:
+        edges = edges_array(batch)
+        before = np.asarray(s.labels).copy()
+        v0 = int(s.version)
+        (s.insert if op == 0 else s.delete)(edges)
+        (oracle.insert if op == 0 else oracle.delete)(edges)
+        after = np.asarray(s.labels)
+        np.testing.assert_array_equal(after, oracle.labels(),
+                                      err_msg=str(script))
+        changed = not np.array_equal(before, after)
+        assert (int(s.version) != v0) == changed, str(script)
+        if s._dyn is not None and s.state.forest_valid:
+            _assert_maintained_forest(str((op, batch)), s)
 
 
 # ---------------------------------------------------------------------------

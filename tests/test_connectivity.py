@@ -146,6 +146,29 @@ def test_policy_heuristic_regimes():
         policy.STATIC_METHODS
 
 
+def test_policy_delete_routes_on_tree_edge_ratio():
+    """ISSUE 9: the delete-side heuristic splits on the tree-edge-ratio
+    feature — dense graphs (most deletes provably non-tree) take the
+    maintained-forest route, road-like |E| ~ |V| graphs stay on the
+    plain scoped recompute, and bulk drops still fall through to a
+    static rebuild over the survivors."""
+    fresh = policy.AutotuneCache()          # no measured overrides
+    # dense regime: ratio = 99/1000 << FOREST_TREE_RATIO
+    assert policy.select_method(100, 1000, delta_deletes=10,
+                                cache=fresh) == \
+        policy.DYNAMIC_DELETE_FOREST
+    # road-like regime: ratio ~ 1 -> nearly every delete IS a tree edge
+    assert policy.select_method(100, 99, delta_deletes=5,
+                                cache=fresh) == policy.DYNAMIC_DELETE
+    # bulk drop falls through to a static rebuild either way
+    assert policy.select_method(100, 1000, delta_deletes=900,
+                                cache=fresh) in policy.STATIC_METHODS
+    f = policy.extract_features(100, 1000, delta_deletes=10)
+    assert f.tree_edge_ratio == pytest.approx(99 / 1000)
+    assert policy.extract_features(100, 99).tree_edge_ratio == \
+        pytest.approx(1.0)
+
+
 def test_method_auto_matches_oracle_across_families():
     for g in generator_family_graphs():
         res = connected_components(g.edges, g.num_nodes, method="auto")

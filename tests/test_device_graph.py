@@ -58,6 +58,58 @@ def test_concat_sums_true_counts_and_trims_padding():
         connected_components_oracle(np.asarray(c.edges)[:3], 6))
 
 
+def test_concat_joins_degree_skew_none_aware():
+    """ISSUE 9 satellite: ``concat`` folds per-graph ``degree_skew``
+    with a None-aware max — device-resident inputs (skew unknown) must
+    not poison the router-facing bound, and an all-unknown concat stays
+    None instead of inventing a number."""
+    host_a = DeviceGraph.from_edges([[0, 1], [0, 2], [0, 3]], 8)  # star
+    host_b = DeviceGraph.from_edges([[4, 5]], 8)
+    dev = DeviceGraph.from_edges(jnp.asarray([[6, 7]], jnp.int32), 8)
+    assert host_a.degree_skew is not None
+    assert host_b.degree_skew is not None
+    assert dev.degree_skew is None                 # device ingest: unknown
+    c = DeviceGraph.concat([host_a, dev, host_b])
+    assert c.degree_skew == pytest.approx(
+        max(host_a.degree_skew, host_b.degree_skew))
+    c2 = DeviceGraph.concat(
+        [dev, DeviceGraph.from_edges(jnp.asarray([[1, 2]], jnp.int32), 8)])
+    assert c2.degree_skew is None
+
+
+def test_compact_alive_perm_and_edgelog_compact():
+    """ISSUE 9 satellite: ``compact_alive_perm`` returns the old→new
+    row permutation alongside the packed prefix (dead rows map to -1),
+    and ``EdgeLog.compact()`` applies it in place, pulling the append
+    cursor back to the alive count."""
+    from repro.graphs.device import (EdgeLog, compact_alive,
+                                     compact_alive_perm)
+    edges = jnp.asarray([[0, 1], [2, 3], [4, 5], [6, 7]], jnp.int32)
+    alive = jnp.asarray([False, True, False, True])
+    packed, true, perm = compact_alive_perm(edges, alive)
+    assert int(true) == 2
+    np.testing.assert_array_equal(np.asarray(packed),
+                                  [[2, 3], [6, 7], [0, 0], [0, 0]])
+    np.testing.assert_array_equal(np.asarray(perm), [-1, 0, -1, 1])
+    # the 2-tuple spelling stays bit-identical (it delegates)
+    packed2, true2 = compact_alive(edges, alive)
+    np.testing.assert_array_equal(np.asarray(packed2), np.asarray(packed))
+    assert int(true2) == int(true)
+
+    log = EdgeLog(8)
+    log.append(DeviceGraph.from_edges([[0, 1], [2, 3], [4, 5]], 8))
+    from repro.graphs.device import _log_delete_jit
+    log.alive, _ = _log_delete_jit(log.edges, log.alive,
+                                   jnp.asarray([[3, 2]], jnp.int32),
+                                   jnp.asarray(1, jnp.int32))
+    rows_before = log.rows
+    perm = log.compact()
+    assert log.rows == 2 and rows_before == 3
+    np.testing.assert_array_equal(np.asarray(log.edges)[:2],
+                                  [[0, 1], [4, 5]])
+    np.testing.assert_array_equal(np.asarray(perm)[:3], [0, -1, 1])
+
+
 def test_pytree_roundtrip_and_jit_boundary():
     dg = DeviceGraph.from_host(G.star(9)).pad_pow2()
     leaves, treedef = jax.tree.flatten(dg)
