@@ -888,12 +888,248 @@ def api(scale: float) -> None:
     _emit_bench("api", rows)
 
 
+def fleet(scale: float) -> None:
+    """Fleet serving table (DESIGN.md §15): the SAME mixed multi-tenant
+    open-loop arrival stream driven through (a) the mesh-wide
+    ``FleetService`` — per-device shards, cross-tenant batched query
+    kernels, double-buffered pipelined ticks, one sharded whale tenant
+    across the whole mesh — and (b) the single-device
+    ``ConnectivityService`` baseline holding every tenant. Open loop:
+    the schedule is pre-drawn and advanced by TICK, not by completion,
+    so arrival pressure is identical for both paths and queue wait is
+    part of the measured latency.
+
+    Acceptance gate (ISSUE 10): on an 8-device mesh the fleet's
+    aggregate request throughput must be >= 2x the single-device
+    service on the same workload. The win on a host-parallelism-free
+    CPU mesh comes from dispatch structure, not cores: the baseline
+    pays one kernel launch + one version sync + one device->host
+    materialization per (tenant, kind) group per tick, the fleet pays
+    ~one stacked launch per (shard, kind, |V|) group and syncs a whole
+    tick's answers one tick later. Query answers are cross-checked
+    request-by-request between the two paths, and final labels against
+    the union-find oracle."""
+    import jax
+    from repro import obs
+    from repro.connectivity.service import (QUERY_KINDS,
+                                            ConnectivityService)
+    from repro.core.unionfind import connected_components_oracle
+    from repro.fleet import FleetService
+
+    n_dev = len(jax.devices())
+    names = [f"t{i:04d}" for i in range(128 * n_dev)]
+    n = max(64, int(2e5 * scale))
+    whale_nodes = max(1 << 11, 4 * n)
+    ticks, pairs_per_q, ins_edges = 6, 128, 24
+
+    rng = np.random.default_rng(0)
+    base_edges = {t: rng.integers(0, n, (n // 2, 2)).astype(np.int32)
+                  for t in names}
+    whale_edges = np.stack(
+        [np.arange(4 * n, dtype=np.int32),
+         np.arange(1, 4 * n + 1, dtype=np.int32)], axis=1)
+    # pre-drawn open-loop arrivals, per tick: query-heavy with a
+    # round-robin trickle of inserts (each tick a different slice of
+    # tenants mutates). Both serving planes coalesce per (tenant,
+    # kind), so per tick the baseline dispatches one kernel per tenant
+    # per query kind while the fleet dispatches one STACKED kernel per
+    # shard per query kind — the tenants-per-device ratio is the
+    # dispatch-amplification the fleet removes.
+    schedule = []
+    for tick in range(ticks):
+        arrivals = []
+        for i, t in enumerate(names):
+            if i % 256 == tick % 256:
+                arrivals.append((t, "insert", rng.integers(
+                    0, n, (ins_edges, 2)).astype(np.int32)))
+            arrivals.append((t, "same_component", rng.integers(
+                0, n, (pairs_per_q, 2)).astype(np.int32)))
+            arrivals.append((t, "component_size", rng.integers(
+                0, n, (pairs_per_q,)).astype(np.int32)))
+        arrivals.append(("whale", "same_component", rng.integers(
+            0, whale_nodes, (pairs_per_q, 2)).astype(np.int32)))
+        schedule.append(arrivals)
+    n_requests = sum(len(a) for a in schedule)
+
+    probe = np.zeros((pairs_per_q, 2), np.int32)
+
+    def preload(submit, submit_insert, run):
+        for t in names:
+            submit_insert(t, base_edges[t])
+        submit_insert("whale", whale_edges)
+        run()
+        # one probe query per tenant: resolves every label array and
+        # (fleet path) builds the cached label planes, so the timed
+        # stream starts from serving steady state on BOTH paths
+        for t in names:
+            submit(t, "same_component", probe)
+        submit("whale", "same_component", probe)
+        run()
+
+    def drive(submit, step, run):
+        """Replay the open-loop schedule; returns {(tenant, kind, i):
+        i-th answer of that kind} so the two paths cross-check exactly.
+        Request uids are per-shard (not fleet-global), but retirement
+        is FIFO per (tenant, kind), so the sequence number is a stable
+        key even though the two paths interleave kinds differently."""
+        retired = []
+        for arrivals in schedule:
+            for t, kind, payload in arrivals:
+                submit(t, kind, payload)
+            retired.extend(step())
+        retired.extend(run())
+        answers, seq = {}, {}
+        for r in retired:
+            assert r.error is None, (r.tenant, r.kind, r.error)
+            if r.kind in QUERY_KINDS:
+                i = seq.get((r.tenant, r.kind), 0)
+                seq[(r.tenant, r.kind)] = i + 1
+                answers[(r.tenant, r.kind, i)] = np.asarray(r.result)
+        return answers
+
+    shared_runners = []   # one compiled shard_map cache, every rep
+
+    def build_fleet():
+        fs = FleetService(slots_per_device=1024, rebalance_every=0,
+                          shard_threshold=whale_nodes,
+                          runners=shared_runners[0] if shared_runners
+                          else None)
+        if not shared_runners:
+            shared_runners.append(fs.runners)
+        for t in names:
+            fs.admit(t, n, expected_edges=n)
+        fs.admit("whale", whale_nodes, expected_edges=4 * n)
+        assert fs.placement_of("whale") == "mesh"
+        preload(fs.submit, fs.submit_insert, fs.run)
+        return fs
+
+    def build_single():
+        svc = ConnectivityService(slots=4096)
+        for t in names:
+            svc.registry.create(t, n)
+        svc.registry.create("whale", whale_nodes)
+        preload(svc.submit, svc.submit_insert, svc.run)
+        return svc
+
+    def run_fleet():
+        fs = build_fleet()
+        return fs, drive(fs.submit, fs.step, fs.run)
+
+    def run_single():
+        svc = build_single()
+        return svc, drive(svc.submit, svc.step, svc.run)
+
+    def bench_streams(reps: int = 5):
+        """Median wall time of the serving STREAM only, for both
+        paths. A fresh service is built and preloaded per rep (tenant
+        state mutates during the stream) but admission + bulk load are
+        setup, not arrival traffic, so they stay outside the clock.
+        The two paths' reps INTERLEAVE so machine-wide drift between
+        measurement blocks cancels out of the throughput ratio, and
+        the reported speedup is the MEDIAN OF PER-REP PAIRWISE ratios
+        — each ratio compares adjacent-in-time runs, so slow-machine
+        episodes hit both sides of the division."""
+        ts = {"fleet": [], "single": []}
+        for _ in range(reps):
+            for label, build in (("fleet", build_fleet),
+                                 ("single", build_single)):
+                svc = build()
+                t0 = time.perf_counter()
+                drive(svc.submit, svc.step, svc.run)
+                ts[label].append(time.perf_counter() - t0)
+        ratio = float(np.median([s / f for f, s in
+                                 zip(ts["fleet"], ts["single"])]))
+        return (float(np.median(ts["fleet"])),
+                float(np.median(ts["single"])), ratio)
+
+    # warmup pass, identical shapes: compiles every kernel (including
+    # the whale's shard_map program) so neither the counted SLO run
+    # nor the timed reps pay compile time
+    run_fleet()
+    run_single()
+
+    # counted run, tracing on: SLO percentiles + correctness
+    tracer = obs.enable(capacity=1 << 14)
+    tracer.reset()
+    fs, fleet_answers = run_fleet()
+    _, single_answers = run_single()
+    assert fleet_answers.keys() == single_answers.keys()
+    for k in fleet_answers:
+        np.testing.assert_array_equal(fleet_answers[k],
+                                      single_answers[k], err_msg=str(k))
+    # oracle gate on one packed tenant + the sharded whale
+    t0 = names[0]
+    acc = np.concatenate([base_edges[t0]] + [
+        p for a in schedule for (t, kind, p) in a
+        if t == t0 and kind == "insert"])
+    shard = fs.shards[fs.placement_of(t0)]
+    np.testing.assert_array_equal(
+        np.asarray(shard.registry.get(t0).labels),
+        connected_components_oracle(acc, n))
+    np.testing.assert_array_equal(
+        np.asarray(fs._sharded["whale"].labels),
+        connected_components_oracle(whale_edges, whale_nodes))
+    fleet_slo = fs.slo()
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "fleet_slo.json"), "w") as fh:
+        json.dump(fs.slo_summary(), fh, indent=1, sort_keys=True)
+    obs.disable()
+
+    # timed runs, tracing off for both paths (identical settings)
+    t_fleet, t_single, throughput_x = bench_streams()
+    tput_fleet = n_requests / t_fleet
+    tput_single = n_requests / t_single
+
+    def q_ms(quantile):
+        return round(fleet_slo.percentile(
+            quantile, kinds=("same_component",)) * 1e3, 4)
+
+    def tenant_q_ms(tenant):
+        # per-tenant query percentiles for the BENCH row: one
+        # representative packed tenant + the sharded whale (the full
+        # per-tenant table is results/fleet_slo.json)
+        return {q: round(fleet_slo.percentile(
+                    p, tenant=tenant, kinds=("same_component",)) * 1e3, 4)
+                for q, p in (("p50_ms", 0.50), ("p99_ms", 0.99))}
+
+    engine = fs.engine.stats
+    rows = [{
+        "workload": "open-loop-mixed",
+        "devices": n_dev,
+        "tenants": len(names) + 1,
+        "sharded_tenants": 1,
+        "ticks": ticks,
+        "requests": n_requests,
+        "ms_fleet": round(t_fleet * 1e3, 2),
+        "ms_single_device": round(t_single * 1e3, 2),
+        "requests_per_s_fleet": round(tput_fleet, 1),
+        "requests_per_s_single": round(tput_single, 1),
+        "throughput_x": round(throughput_x, 2),
+        "batched_dispatches": engine["batched_dispatches"],
+        "query_calls_fleet": sum(s.stats["query_calls"]
+                                 for s in fs.shards),
+        "runner_cache": dict(fs.runners.stats),
+        "p50_ms_query_fleet": q_ms(0.50),
+        "p99_ms_query_fleet": q_ms(0.99),
+        "per_tenant_query_ms": {t: tenant_q_ms(t)
+                                for t in (names[0], "whale")},
+        "per_tenant_slo_table": "results/fleet_slo.json",
+    }]
+    # the ISSUE 10 acceptance bar: >= 2x aggregate throughput on the
+    # 8-device mesh (single-device runs report the ratio, no gate)
+    if n_dev >= 8:
+        assert throughput_x >= 2.0, rows
+    _emit_bench("fleet", rows)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=["table1", "fig5", "fig6", "kernels",
                              "batched", "incremental", "service",
-                             "dynamic", "fused", "sampled", "api"])
+                             "dynamic", "fused", "sampled", "api",
+                             "fleet"])
     ap.add_argument("--scale", type=float, default=1 / 256,
                     help="Table I graph scale factor")
     args = ap.parse_args()
@@ -907,7 +1143,8 @@ def main() -> None:
             "dynamic": lambda: dynamic(args.scale),
             "fused": lambda: fused(args.scale),
             "sampled": lambda: sampled(args.scale),
-            "api": lambda: api(args.scale)}
+            "api": lambda: api(args.scale),
+            "fleet": lambda: fleet(args.scale)}
     for name, job in jobs.items():
         if args.only and name != args.only:
             continue

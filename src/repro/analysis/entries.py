@@ -277,8 +277,58 @@ def _query_specs():
     ]
 
 
+@register_trace_spec("fleet")
+def _fleet_specs():
+    """The fleet's pipelined query phase (DESIGN.md §15): the
+    cross-tenant BATCHED kernels ``repro.fleet.engine`` dispatches —
+    one stacked program answering a query kind for a whole same-|V|
+    tenant group. The mutation phase is deliberately absent here: the
+    fleet reuses ``ConnectivityService._run_mutations`` verbatim, so
+    the ``service.tick.*`` entries above already pin it. The 4-tenant
+    stack mirrors the engine's (kind, |V|) grouping; the batch rows
+    are pow2-padded (``padded=True``) exactly as ``_dispatch_batched``
+    stages them, and a host sync creeping into the stacked vmap would
+    surface in the ``transfer`` pass against these entries."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.fleet.engine import _batched_query_jit
+
+    n_tenants = 4
+
+    def build_batched_same_component(v, e):
+        qb = max(e // 16, 8)
+
+        def fn(labels, batch):
+            return _batched_query_jit(labels, batch,
+                                      kind="same_component")
+        return (fn,
+                (jax.ShapeDtypeStruct((n_tenants, v), jnp.int32),
+                 jax.ShapeDtypeStruct((n_tenants, qb, 2), jnp.int32)),
+                [VarInfo(range=(0, v - 1)),
+                 VarInfo(range=(0, v - 1), padded=True)])
+
+    def build_batched_component_size(v, e):
+        qb = max(e // 16, 8)
+
+        def fn(labels, batch):
+            return _batched_query_jit(labels, batch,
+                                      kind="component_size")
+        return (fn,
+                (jax.ShapeDtypeStruct((n_tenants, v), jnp.int32),
+                 jax.ShapeDtypeStruct((n_tenants, qb), jnp.int32)),
+                [VarInfo(range=(0, v - 1)),
+                 VarInfo(range=(0, v - 1), padded=True)])
+
+    return [TraceEntry("fleet.query.same_component",
+                       build_batched_same_component, _TF),
+            TraceEntry("fleet.query.component_size",
+                       build_batched_component_size, _TF)]
+
+
 def all_entries() -> list:
-    """Every registered ``TraceEntry`` (backends + service + queries),
-    importing the spec-bearing modules for their side effects."""
+    """Every registered ``TraceEntry`` (backends + service + queries +
+    fleet), importing the spec-bearing modules for their side
+    effects."""
     import repro.api.backends  # noqa: F401  — registers backend specs
     return trace_entries()

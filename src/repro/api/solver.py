@@ -39,6 +39,7 @@ True
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Optional, Sequence
 
 import numpy as np
@@ -71,8 +72,10 @@ class Solver:
                  mesh=None, axis_names=("data",),
                  policy_cache: policy.AutotuneCache | None = None,
                  scan_method: str | None = None,
-                 delete_route: str | None = None, name: str = "solver"):
+                 delete_route: str | None = None, name: str = "solver",
+                 device=None):
         self._graph = graph            # opened static snapshot (or None)
+        self._device = device          # pinned device (None = default)
         self.num_nodes = int(num_nodes)
         self.lift_steps = lift_steps
         self.num_segments = num_segments
@@ -110,7 +113,7 @@ class Solver:
              policy_cache: policy.AutotuneCache | None = None,
              scan_method: str | None = None,
              delete_route: str | None = None,
-             name: str = "solver") -> "Solver":
+             name: str = "solver", device=None) -> "Solver":
         """Open a session.
 
         Args:
@@ -131,6 +134,11 @@ class Solver:
             the delete-rate + tree-edge-ratio features). Benchmarks
             use this to compare routes on identical streams.
           name: label for introspection.
+          device: pin the session to ONE device: host payloads
+            device_put there, dynamic state allocated there, static
+            solves/rebuilds dispatched there. This is the fleet's
+            per-device shell mode (``repro.fleet`` packs many pinned
+            sessions across a mesh); None keeps the process default.
         """
         if graph is None:
             if num_nodes is None:
@@ -144,7 +152,17 @@ class Solver:
         return cls(g, n, lift_steps=lift_steps, num_segments=num_segments,
                    mesh=mesh, axis_names=axis_names,
                    policy_cache=policy_cache, scan_method=scan_method,
-                   delete_route=delete_route, name=name)
+                   delete_route=delete_route, name=name, device=device)
+
+    def _device_scope(self):
+        """``jax.default_device`` context for a pinned session (a
+        no-op context when unpinned) — wraps every path that CREATES
+        device state (dynamic-state init, static solves), so a fleet
+        shard's arrays land on its own device without per-array puts."""
+        if self._device is None:
+            return contextlib.nullcontext()
+        import jax
+        return jax.default_device(self._device)
 
     def graph(self) -> DeviceGraph:
         """The CURRENT edge set as a DeviceGraph: the dynamic log's
@@ -264,12 +282,13 @@ class Solver:
         work)`` with canonical min-id labels. Routing == ``plan()``."""
         plan = self.plan(method, backend=backend,
                          num_segments=num_segments, **opts)
-        if obs.enabled():
-            with obs.span("solver.solve", tenant=self.name,
-                          **plan.trace_tags()):
+        with self._device_scope():
+            if obs.enabled():
+                with obs.span("solver.solve", tenant=self.name,
+                              **plan.trace_tags()):
+                    res = plan.run()
+            else:
                 res = plan.run()
-        else:
-            res = plan.run()
         self.stats["solves"] += 1
         self.last_method = plan.backend
         self._labels = res.labels
@@ -350,7 +369,8 @@ class Solver:
         arr = np.asarray(edges, np.int32).reshape(-1, 2)
         validate_edge_bounds(arr, self.num_nodes)
         return DeviceGraph.from_edges(arr, self.num_nodes,
-                                      name=self.name)
+                                      name=self.name,
+                                      device=self._device)
 
     @property
     def state(self):
@@ -362,9 +382,14 @@ class Solver:
 
     def _ensure_dyn(self):
         if self._dyn is None:
-            self._dyn = get_backend("dynamic").make_state(
-                self.num_nodes, lift_steps=self.lift_steps,
-                scan_method=self._scan_method)
+            # pinned sessions allocate the dynamic state (labels, edge
+            # log, forest) under their device scope: the init jits run
+            # there, so the state commits to the shard's device and
+            # every later mutation jit follows it — no per-tick puts
+            with self._device_scope():
+                self._dyn = get_backend("dynamic").make_state(
+                    self.num_nodes, lift_steps=self.lift_steps,
+                    scan_method=self._scan_method)
             if obs.enabled():
                 # span tracing on => carry the on-device Metrics pytree
                 # through every mutation jit (still transfer-free; host
@@ -385,7 +410,8 @@ class Solver:
         plan = self.plan(method)
         plan.reason = "policy"
         self.last_plan = plan
-        return plan.run()
+        with self._device_scope():
+            return plan.run()
 
     def _route_insert(self, delta: DeviceGraph) -> None:
         dyn = self._dyn
@@ -475,7 +501,8 @@ class Solver:
         if self._dyn is not None:
             return self._dyn.labels
         if self._labels is None:
-            self._labels = self._build_plan().run().labels
+            with self._device_scope():
+                self._labels = self._build_plan().run().labels
         return self._labels
 
     @property

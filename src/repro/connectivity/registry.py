@@ -71,14 +71,17 @@ class TenantGraph:
     steady-state contract; the tenant layer adds naming + stats)."""
 
     def __init__(self, name: str, num_nodes: int, *, lift_steps: int = 2,
-                 policy_cache: policy.AutotuneCache | None = None):
+                 policy_cache: policy.AutotuneCache | None = None,
+                 device=None):
         from repro.api import Solver       # lazy: the api chain imports us
         self.name = name
         self.num_nodes = num_nodes
         self.solver = Solver.open(num_nodes=num_nodes,
                                   lift_steps=lift_steps,
-                                  policy_cache=policy_cache, name=name)
+                                  policy_cache=policy_cache, name=name,
+                                  device=device)
         self.policy_cache = policy_cache
+        self.device = device
         self.stats = TenantStats()
 
     @property
@@ -160,9 +163,13 @@ class GraphRegistry:
     """Registry of named live graphs with version-stamped query caching."""
 
     def __init__(self, *, lift_steps: int = 2,
-                 policy_cache: policy.AutotuneCache | None = None):
+                 policy_cache: policy.AutotuneCache | None = None,
+                 device=None):
         self.lift_steps = lift_steps
         self.policy_cache = policy_cache
+        # pin every tenant session to one device (the fleet's per-device
+        # shell mode); None keeps the process default
+        self.device = device
         self._tenants: dict[str, TenantGraph] = {}
         # per-tenant result cache: key -> (version, result); entries are
         # dropped wholesale when the tenant's version ticks (a merge)
@@ -174,7 +181,8 @@ class GraphRegistry:
         if name in self._tenants:
             raise ValueError(f"tenant {name!r} already registered")
         t = TenantGraph(name, num_nodes, lift_steps=self.lift_steps,
-                        policy_cache=self.policy_cache)
+                        policy_cache=self.policy_cache,
+                        device=self.device)
         self._tenants[name] = t
         self._qcache[name] = {}
         return t

@@ -70,14 +70,26 @@ class Request:
     result: Any = None
     done: bool = False
     error: Optional[str] = None
+    # wall-clock admission stamp — the fleet's pipelined collect phase
+    # records END-TO-END latency (collect minus submit), which needs
+    # the submit time to ride on the request
+    t_submit: float = 0.0
 
 
 class ConnectivityService:
-    """Continuous-microbatching engine over a ``GraphRegistry``."""
+    """Continuous-microbatching engine over a ``GraphRegistry``.
+
+    ``device=`` pins the shard: admission device_puts every payload to
+    that device and the registry's sessions allocate their dynamic
+    state there — this is what lets ``repro.fleet`` run one service
+    per mesh device as a thin per-device shell (DESIGN.md §15)."""
 
     def __init__(self, registry: GraphRegistry | None = None, *,
-                 slots: int = 32):
-        self.registry = registry if registry is not None else GraphRegistry()
+                 slots: int = 32, device=None):
+        if registry is None:
+            registry = GraphRegistry(device=device)
+        self.registry = registry
+        self.device = device
         self.slots = slots
         self.queue: list[Request] = []
         self._uid = 0
@@ -111,14 +123,25 @@ class ConnectivityService:
         elif kind in ("same_component", "component_size"):
             if payload is None:
                 raise ValueError(f"kind {kind!r} requires a payload")
-            payload = np.asarray(payload, np.int32)
+            # admission is the front door's per-request hot path (a
+            # fleet tick admits thousands): skip the asarray copy
+            # machinery when the caller already hands well-typed rows
+            if not (isinstance(payload, np.ndarray)
+                    and payload.dtype == np.int32):
+                payload = np.asarray(payload, np.int32)
             payload = payload.reshape(-1) if kind == "component_size" \
                 else payload.reshape(-1, 2)
         else:
             payload = None
         self._uid += 1
-        with obs.span("service.admit", tenant=tenant, kind=kind):
-            self.queue.append(Request(self._uid, tenant, kind, payload))
+        if obs.enabled():
+            with obs.span("service.admit", tenant=tenant, kind=kind):
+                self.queue.append(Request(self._uid, tenant, kind,
+                                          payload,
+                                          t_submit=time.perf_counter()))
+        else:
+            self.queue.append(Request(self._uid, tenant, kind, payload,
+                                      t_submit=time.perf_counter()))
         return self._uid
 
     def _ingest_edges(self, tenant: str, kind: str, payload
@@ -141,11 +164,13 @@ class ConnectivityService:
             # are the no-sync fast lane — the caller owns bounds there)
             if num_nodes is not None:
                 validate_edge_bounds(np.asarray(edges), num_nodes)
+            if self.device is not None:
+                edges = jax.device_put(edges, self.device)
         else:
             arr = np.asarray(payload, np.int32).reshape(-1, 2)
             if num_nodes is not None:
                 validate_edge_bounds(arr, num_nodes)
-            edges = jax.device_put(arr)
+            edges = jax.device_put(arr, self.device)
         if num_nodes is None:
             # unknown tenant: the tick's failure path will reject the
             # group; a zero-|V| DeviceGraph just carries the payload
@@ -263,14 +288,28 @@ class ConnectivityService:
             self.stats["queries_served"] += 1
             self.stats["recomputes_avoided"] += 1
 
+    def _pop_admitted(self) -> list[Request]:
+        """Atomically snapshot and remove this tick's admitted slice.
+
+        The snapshot is taken ONCE and exactly that many entries are
+        deleted from the head — a ``submit()`` landing between the read
+        and the delete (a query callback enqueueing follow-up work
+        mid-tick) appends past the snapshot and survives to the next
+        tick. The old ``self.queue = self.queue[self.slots:]`` reslice
+        re-read the list: with fewer queued requests than slots, a
+        mid-tick append landed below ``slots`` and the reslice silently
+        dropped it — admitted by nobody, never retired."""
+        admitted = self.queue[: self.slots]
+        del self.queue[: len(admitted)]
+        return admitted
+
     def step(self) -> list[Request]:
         """One tick: admit up to ``slots`` requests, coalesce inserts
         then deletes, microbatch queries, retire. Returns the retired
         requests."""
-        admitted = self.queue[: self.slots]
+        admitted = self._pop_admitted()
         if not admitted:
             return []
-        self.queue = self.queue[self.slots:]
         self.stats["ticks"] += 1
 
         # step= maps to jax.profiler.StepTraceAnnotation under the

@@ -1,0 +1,342 @@
+"""Pipelined tick engine: dispatch everything, sync once, one tick
+late (DESIGN.md §15).
+
+The single-device ``ConnectivityService`` tick is synchronous per
+query group: every (tenant, kind) microbatch pays a registry cache
+check (a host version sync), a kernel dispatch, and a device->host
+materialization before the NEXT group even dispatches — with 32
+tenants that is ~32+ round-trip stalls per tick, and every stall
+idles every device in a mesh. This engine restructures the tick into
+three phases that never interleave a sync between dispatches:
+
+  1. **mutation phase** — each shard's coalesced insert/delete calls
+     (``ConnectivityService._run_mutations``, reused verbatim: the
+     per-device shell IS the service) dispatch asynchronously; results
+     ride as device version scalars, nothing syncs;
+  2. **query phase** — queries batch ACROSS tenants per shard: every
+     same-|V| tenant group on a device answers ALL pairs in one
+     vmapped kernel (``_batched_query_jit``) over a cached stacked
+     label plane (``_label_plane`` — rebuilt only when a member
+     re-resolved), so a 16-tenant shard pays ~1 dispatch per
+     (kind, |V|) instead of 16, with O(1) not O(T) host work per
+     dispatch. Results stay on device;
+  3. **collect phase** — LAST tick's pending results materialize
+     through the audited ``queries.to_host`` sink while THIS tick's
+     work is still executing on the devices (double buffering: the
+     host's sync time overlaps device compute, and requests retire
+     exactly one tick after dispatch).
+
+The steady-state mutation phase stays transfer-free per shard — same
+``jax.transfer_guard`` contract as the single-device tick, pinned by
+tests and the ``fleet.*`` entries in ``repro.analysis``. Query
+payloads cross host->device once, as ONE explicit ``device_put`` per
+batched group (admission keeps them host-side: they are tiny and the
+batcher wants to stack them anyway); answers cross back in collect,
+after the kernels returned.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.connectivity import queries
+from repro.connectivity.service import (MUTATION_KINDS, ConnectivityService,
+                                        Request)
+from repro.core.batch import next_pow2
+from repro.obs import trace as obs
+
+# kinds the cross-tenant batcher stacks (per-row payloads); the scalar
+# kinds dispatch one tiny kernel per tenant instead
+BATCHED_KINDS = ("same_component", "component_size")
+
+_MIN_QROWS = 8
+
+
+@functools.partial(jax.jit, static_argnames=("kind",))
+def _batched_query_jit(labels, batch, *, kind: str):
+    """ONE program answering a query kind for a whole same-|V| tenant
+    group: ``labels`` is the stacked label plane [T, V] (one array —
+    see ``_label_plane``), ``batch`` is the padded per-tenant query
+    rows ([T, Q, 2] pairs or [T, Q] vertices). vmap over the
+    single-tenant kernels keeps the fleet bit-identical to the
+    per-tenant path."""
+    if kind == "same_component":
+        return jax.vmap(queries.same_component)(labels, batch)
+    return jax.vmap(queries.component_size)(labels, batch)
+
+
+@jax.jit
+def _plane_row_update_jit(plane, row, idx):
+    """Patch ONE tenant's row into a cached label plane. ``idx`` is a
+    traced scalar (not static) so every row position shares one
+    compiled program."""
+    return plane.at[idx].set(row)
+
+
+def _mark_labels_dirty(shard, tenants) -> None:
+    """Invalidate ``_label_plane`` entries containing these tenants
+    (called by the mutation phase — a mutated session REPLACES its
+    label array, so any cached stack holding the old one is stale)."""
+    dirty = getattr(shard, "_fleet_dirty_labels", None)
+    if dirty is None:
+        dirty = shard._fleet_dirty_labels = set()
+    dirty.update(tenants)
+
+
+def _label_plane(shard, v: int, group):
+    """The stacked [T, V] label plane for one same-|V| tenant group,
+    CACHED on the shard across ticks. Passing T separate label arrays
+    into a jit costs O(T) host-side argument processing per dispatch —
+    at 64 tenants/device that is the same order as the per-tenant
+    dispatch loop the batcher exists to remove; even reading T label
+    properties to check freshness costs more than the dispatch itself.
+    So the stack is one device array rebuilt (one ``jnp.stack``
+    launch, no transfer: every operand already lives on this shard)
+    ONLY when the mutation phase marked a member dirty
+    (``_mark_labels_dirty``) — the engine sees every mutation, and
+    membership changes show up in the cache key itself (the sorted
+    tenant tuple; the fleet's migration paths also drop the source
+    shard's cache outright). Steady state reuses the plane with O(1)
+    host work per dispatch."""
+    key = (v, tuple(g[0] for g in group))
+    cache = getattr(shard, "_fleet_label_planes", None)
+    if cache is None:
+        cache = shard._fleet_label_planes = {}
+    dirty = getattr(shard, "_fleet_dirty_labels", ())
+    plane = cache.get(key)
+    if plane is None:
+        plane = jnp.stack([t.labels for _, t, _ in group])
+    elif dirty:
+        # k mutated members -> k O(1) row patches (one small
+        # dynamic_update_slice dispatch each), NOT a T-array restack:
+        # restacking a 128-tenant plane costs ~T host dispatches and
+        # would hand the mutation tick an O(T) bill for k~1 changes
+        for i, name in enumerate(key[1]):
+            if name in dirty:
+                idx = jax.device_put(np.int32(i), shard.device)
+                plane = _plane_row_update_jit(plane, group[i][1].labels,
+                                              idx)
+    else:
+        return plane
+    cache[key] = plane
+    if dirty:
+        shard._fleet_dirty_labels -= set(key[1])
+    return plane
+
+
+@dataclasses.dataclass
+class PendingGroup:
+    """One dispatched query group awaiting collect: either a batched
+    (kind, |V|) tenant stack or a single tenant's scalar-kind call."""
+
+    kind: str
+    tenants: list                    # tenant names, stack order
+    reqs: list                       # list[list[Request]] per tenant
+    rows: list                       # list[list[int]] rows per request
+    result: Any                      # device array(s), not yet synced
+    batched: bool = True
+
+
+def dispatch_queries(shard: ConnectivityService, admitted
+                     ) -> list[PendingGroup]:
+    """Phase-2 dispatch for one shard: group, stack, launch. Returns
+    pending groups whose results are still device-resident."""
+    by_kind: dict[str, dict[str, list]] = {}
+    for r in admitted:
+        by_kind.setdefault(r.kind, {}).setdefault(r.tenant, []).append(r)
+    pending: list[PendingGroup] = []
+    for kind, tenants in by_kind.items():
+        if kind in BATCHED_KINDS:
+            pending.extend(_dispatch_batched(shard, kind, tenants))
+        else:
+            pending.extend(_dispatch_scalar(shard, kind, tenants))
+    return pending
+
+
+def _fail_group(shard, reqs, err) -> None:
+    for r in reqs:
+        shard._fail(r, err)
+
+
+def _dispatch_batched(shard, kind, tenants) -> list[PendingGroup]:
+    # sub-group by |V|: the stacked kernel needs one label shape
+    by_v: dict[int, list] = {}
+    for tenant, reqs in sorted(tenants.items()):
+        try:
+            t = shard.registry.get(tenant)
+        except Exception as err:
+            _fail_group(shard, reqs, err)
+            continue
+        by_v.setdefault(t.num_nodes, []).append((tenant, t, reqs))
+    out = []
+    for v, group in by_v.items():
+        names = [g[0] for g in group]
+        with obs.span(f"fleet.query.{kind}", tenants=len(group),
+                      num_nodes=v) as sp:
+            try:
+                flats, rows = [], []
+                for _, _, reqs in group:
+                    if len(reqs) == 1:      # no concat copy on the
+                        f = np.asarray(reqs[0].payload)   # common path
+                        flats.append(f)
+                        rows.append([f.shape[0]])
+                        continue
+                    parts = [np.asarray(r.payload) for r in reqs]
+                    flats.append(np.concatenate(parts, axis=0))
+                    rows.append([p.shape[0] for p in parts])
+                qb = next_pow2(max(_MIN_QROWS,
+                                   max(f.shape[0] for f in flats)))
+                if all(f.shape[0] == qb for f in flats):
+                    stacked = np.stack(flats)   # uniform: no pad fill
+                else:
+                    shape = (len(group), qb) + flats[0].shape[1:]
+                    stacked = np.zeros(shape, np.int32)
+                    for i, f in enumerate(flats):
+                        stacked[i, : f.shape[0]] = f
+                # the ONE host->device crossing of the query phase:
+                # explicit, batched, legal under transfer_guard
+                batch = jax.device_put(stacked, shard.device)
+                labels = _label_plane(shard, v, group)
+                result = _batched_query_jit(labels, batch, kind=kind)
+                sp.tag(rows=int(sum(f.shape[0] for f in flats)))
+            except Exception as err:      # fail the group, not the tick
+                for _, _, reqs in group:
+                    _fail_group(shard, reqs, err)
+                sp.tag(failed=sum(len(g[2]) for g in group))
+                continue
+        shard.stats["query_calls"] += 1
+        out.append(PendingGroup(kind=kind, tenants=names,
+                                reqs=[g[2] for g in group], rows=rows,
+                                result=result))
+    return out
+
+
+def _dispatch_scalar(shard, kind, tenants) -> list[PendingGroup]:
+    out = []
+    for tenant, reqs in sorted(tenants.items()):
+        with obs.span(f"fleet.query.{kind}", tenant=tenant) as sp:
+            try:
+                labels = shard.registry.get(tenant).labels
+                result = getattr(queries, "count_components"
+                                 if kind == "count_components"
+                                 else "component_histogram")(labels)
+            except Exception as err:
+                _fail_group(shard, reqs, err)
+                sp.tag(failed=len(reqs))
+                continue
+        shard.stats["query_calls"] += 1
+        out.append(PendingGroup(kind=kind, tenants=[tenant],
+                                reqs=[reqs], rows=[[0] * len(reqs)],
+                                result=result, batched=False))
+    return out
+
+
+def collect_group(shard: ConnectivityService, group: PendingGroup
+                  ) -> None:
+    """Phase-3 materialization of one pending group: the audited
+    device->host sink, answer slicing, retire + end-to-end SLO."""
+    record = obs.enabled()
+    try:
+        host = queries.to_host(group.result)
+    except Exception as err:
+        for reqs in group.reqs:
+            _fail_group(shard, reqs, err)
+        return
+    now = time.perf_counter()
+    for i, (tenant, reqs, rows) in enumerate(
+            zip(group.tenants, group.reqs, group.rows)):
+        off = 0
+        for r, nrows in zip(reqs, rows):
+            if group.batched:
+                r.result = host[i, off: off + nrows]
+                off += nrows
+                shard.stats["pairs_answered"] += nrows
+            elif group.kind == "count_components":
+                r.result = int(host)
+            else:
+                r.result = host
+            r.done = True
+            shard.stats["queries_served"] += 1
+            shard.stats["recomputes_avoided"] += 1
+            if record:
+                # END-TO-END: collect minus submit — queue wait,
+                # dispatch, device time, and the one-tick pipeline
+                # delay all included (this is what a user of the
+                # fleet front door actually waits)
+                shard.slo.record(tenant, group.kind, now - r.t_submit)
+
+
+class PipelinedTickEngine:
+    """Double-buffered tick loop over per-device shards.
+
+    ``tick()`` dispatches mutation + query phases for EVERY shard
+    before syncing anything, then collects the PREVIOUS tick's pending
+    results — so the host's only blocking read overlaps the devices
+    executing the current tick. ``flush()`` drains the last in-flight
+    tick when the queues run dry."""
+
+    def __init__(self, shards: list):
+        self.shards = list(shards)
+        self._inflight: list = []     # (shard, admitted, groups)
+        self.stats = {"ticks": 0, "batched_dispatches": 0,
+                      "collects": 0}
+
+    @property
+    def inflight(self) -> bool:
+        return bool(self._inflight)
+
+    def tick(self) -> list:
+        """One pipelined tick; returns the requests RETIRED this tick
+        (admitted one tick earlier — the pipeline's latency price)."""
+        staged = []
+        for shard in self.shards:
+            admitted = shard._pop_admitted()
+            if admitted:
+                shard.stats["ticks"] += 1
+            staged.append((shard, admitted))
+        if any(adm for _, adm in staged):
+            self.stats["ticks"] += 1
+        with obs.span("fleet.tick", step=self.stats["ticks"],
+                      admitted=sum(len(a) for _, a in staged)):
+            # phase 1: EVERY shard's mutations dispatch back-to-back
+            for shard, admitted in staged:
+                for kind in MUTATION_KINDS:
+                    batch = [r for r in admitted if r.kind == kind]
+                    if batch:
+                        _mark_labels_dirty(
+                            shard, (r.tenant for r in batch))
+                        shard._run_mutations(kind, batch)
+            # phase 2: query kernels, still no syncs
+            current = []
+            for shard, admitted in staged:
+                qreqs = [r for r in admitted
+                         if r.kind not in MUTATION_KINDS and not r.done]
+                groups = dispatch_queries(shard, qreqs)
+                self.stats["batched_dispatches"] += sum(
+                    1 for g in groups if g.batched)
+                if admitted:
+                    current.append((shard, admitted, groups))
+            # phase 3: collect LAST tick while this one executes
+            retired = self._collect()
+            self._inflight = current
+        return retired
+
+    def _collect(self) -> list:
+        retired = []
+        for shard, admitted, groups in self._inflight:
+            for g in groups:
+                collect_group(shard, g)
+            self.stats["collects"] += len(groups)
+            retired.extend(admitted)
+        self._inflight = []
+        return retired
+
+    def flush(self) -> list:
+        """Drain the in-flight tick (the pipeline's tail)."""
+        return self._collect()

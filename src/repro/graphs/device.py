@@ -148,21 +148,25 @@ class DeviceGraph:
     @classmethod
     def from_edges(cls, edges, num_nodes: int, *, true_edges=None,
                    num_segments: int | None = None,
-                   name: str = "graph") -> "DeviceGraph":
+                   name: str = "graph", device=None) -> "DeviceGraph":
         """The raw-array shim: accepts host numpy / lists (explicitly
         device_put) or already-device jnp arrays (left in place). Host
         ingest also measures ``degree_skew`` (free while the array is
-        on host; device-resident arrays keep it None)."""
+        on host; device-resident arrays keep it None). ``device=``
+        COMMITS the edges to one device (the fleet's per-device
+        pinning; None keeps today's default placement)."""
         degree_skew = None
         if isinstance(edges, jnp.ndarray):
             edges = edges.astype(jnp.int32).reshape(-1, 2)
+            if device is not None:
+                edges = jax.device_put(edges, device)
         else:
             host = np.asarray(edges, np.int32).reshape(-1, 2)
             t = true_edges if isinstance(true_edges, (int, np.integer)) \
                 else host.shape[0]
             degree_skew = measure_degree_skew(host[:int(t)],
                                               int(num_nodes))
-            edges = jax.device_put(host)
+            edges = jax.device_put(host, device)
         e_stored = int(edges.shape[0])
         if true_edges is None:
             true_edges = e_stored
@@ -310,14 +314,20 @@ class DeviceGraph:
         return self._csr
 
     def trim(self) -> "DeviceGraph":
-        """Drop padded rows (requires a static true count)."""
+        """Drop padded rows (requires a static true count). Metadata —
+        ``degree_skew`` in particular — is PRESERVED: the trimmed graph
+        is the same edge set, so rebuilding through ``from_edges`` (a
+        device-array ingest, which cannot re-measure) would silently
+        erase a measured skew and flip ``method="auto"`` routing after
+        a shard/trim round trip."""
         t = self.true_edges_static
         if t is None:
             raise ValueError("trim() needs a static true_edges")
         if t == int(self.edges.shape[0]):
             return self
-        return DeviceGraph.from_edges(self.edges[:t], self.num_nodes,
-                                      name=self.name)
+        plan = _plan_for(t, self.num_nodes, t, None)
+        return DeviceGraph(self.edges[:t], self.num_nodes, t, plan,
+                           name=self.name, degree_skew=self.degree_skew)
 
     def __repr__(self) -> str:
         t = self.true_edges_static

@@ -27,7 +27,7 @@ from repro.obs.metrics import (COUNTERS, HIST_KINDS, WORK_SPEC,
                                HistogramSpec, Metrics, flush,
                                record_mutation, record_rebuild)
 from repro.obs.slo import (DEFAULT_LATENCY_SPEC, LatencyHistogram,
-                           SLORecorder)
+                           SLORecorder, merge_recorders)
 from repro.obs.trace import (EventLog, Span, Tracer, count, disable,
                              enable, enabled, span, tracer)
 
@@ -40,4 +40,5 @@ __all__ = [
     "record_mutation", "record_rebuild", "flush",
     # slo
     "SLORecorder", "LatencyHistogram", "DEFAULT_LATENCY_SPEC",
+    "merge_recorders",
 ]

@@ -87,13 +87,25 @@ class SLORecorder:
 
     def merged(self, tenant: str | None = None,
                kinds=None) -> LatencyHistogram:
-        """One histogram over every matching (tenant, kind) stream."""
+        """One histogram over every matching (tenant, kind) stream.
+
+        Bucket-edge compatibility is asserted per stream: summing raw
+        ``counts`` across histograms is only exact when every stream
+        shares the recorder's bucket layout, and a recorder whose
+        ``_hists`` were populated externally (the fleet's per-device
+        merge path) could otherwise silently mix layouts — the merged
+        percentiles would read from the wrong edges."""
         out = LatencyHistogram(self.spec)
         for (t, k), h in self._hists.items():
             if tenant is not None and t != tenant:
                 continue
             if kinds is not None and k not in kinds:
                 continue
+            if h.spec != self.spec:
+                raise ValueError(
+                    f"histogram for {(t, k)!r} has spec {h.spec}, "
+                    f"recorder has {self.spec}: bucket counts are not "
+                    "mergeable across different edge layouts")
             out.counts += h.counts
         return out
 
@@ -119,3 +131,31 @@ class SLORecorder:
         return {"global": {k: row(self.merged(kinds=(k,)))
                            for k in self.kinds()},
                 "tenants": tenants}
+
+
+def merge_recorders(recorders) -> SLORecorder:
+    """Fold several recorders into one — the fleet's global view over
+    per-device ``SLORecorder``s. Exact by the same argument as
+    ``merged()``: bucket counts add associatively, so the global
+    percentiles equal those of one recorder that saw every request.
+    Edge compatibility is asserted across ALL inputs (recorder specs
+    and each per-stream histogram) before any counts are summed."""
+    recorders = list(recorders)
+    spec = recorders[0].spec if recorders else DEFAULT_LATENCY_SPEC
+    out = SLORecorder(spec)
+    for rec in recorders:
+        if rec.spec != spec:
+            raise ValueError(
+                f"cannot merge recorders with specs {rec.spec} != {spec}"
+                ": bucket counts are not mergeable across different "
+                "edge layouts")
+        for (t, k), h in rec._hists.items():
+            if h.spec != spec:
+                raise ValueError(
+                    f"histogram for {(t, k)!r} has spec {h.spec}, "
+                    f"merge target has {spec}")
+            tgt = out._hists.get((t, k))
+            if tgt is None:
+                tgt = out._hists[(t, k)] = LatencyHistogram(spec)
+            tgt.counts = tgt.counts + h.counts
+    return out

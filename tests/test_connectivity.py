@@ -601,3 +601,47 @@ def test_service_respects_slot_budget():
     assert len(svc.step()) == 2
     assert len(svc.queue) == 3
     assert len(svc.run()) == 3
+
+def test_service_tick_keeps_midtick_submissions():
+    """Regression: ``step()`` must snapshot the admitted slice ONCE
+    and delete exactly that many entries. The old ``self.queue =
+    self.queue[self.slots:]`` reslice re-read the list, so a submit
+    landing DURING the tick (a collect callback enqueueing follow-up
+    work) below the slot budget was silently dropped — admitted by
+    nobody, never retired."""
+    reg = GraphRegistry()
+    reg.create("g", 8)
+    svc = ConnectivityService(reg, slots=4)
+
+    class MidTickQueue(list):
+        """Appends one follow-up request the first time the tick
+        reads the admitted slice (before the deletion happens)."""
+        def __init__(self, svc):
+            super().__init__()
+            self.svc = svc
+            self.armed = False
+
+        def __getitem__(self, item):
+            out = super().__getitem__(item)
+            if self.armed and isinstance(item, slice):
+                self.armed = False
+                # lands mid-tick, below the slot budget
+                super().append(_mk(self.svc, "late"))
+            return out
+
+    def _mk(svc, tag):
+        from repro.connectivity.service import Request
+        svc._uid += 1
+        return Request(svc._uid, "g", "count_components")
+
+    q = MidTickQueue(svc)
+    svc.queue = q
+    svc.submit_query("g", "count_components")   # 1 queued < slots=4
+    q.armed = True
+    first = svc.step()
+    # only the pre-tick request retired; the mid-tick one SURVIVES
+    assert len(first) == 1
+    assert len(svc.queue) == 1, "mid-tick submission was dropped"
+    second = svc.step()
+    assert len(second) == 1 and second[0].done
+    assert svc.queue == []

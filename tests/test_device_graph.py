@@ -204,3 +204,68 @@ def test_shard_single_device_mesh():
     np.testing.assert_array_equal(
         np.asarray(fn(dg)),
         connected_components_oracle(g.edges, g.num_nodes))
+
+def test_shard_concat_roundtrip_nondivisible_single_device():
+    """shard() on a non-divisible edge count pads with (0, 0) no-ops
+    but must preserve the TRUE count and the degree-skew aux — and a
+    trim + concat round trip recovers the exact edge set with the
+    None-aware skew join intact."""
+    from jax.sharding import Mesh
+    edges = np.array([[0, i + 1] for i in range(13)], np.int32)  # star
+    dg = DeviceGraph.from_edges(edges, 16)
+    assert dg.degree_skew is not None and dg.degree_skew > 1.0
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    sh = dg.shard(mesh, ("data",))
+    # 1 device: 13 rows need no padding, metadata rides through
+    assert sh.true_edges_static == 13
+    assert sh.degree_skew == dg.degree_skew
+    # round trip: trim drops any padding, rows match exactly
+    np.testing.assert_array_equal(np.asarray(sh.trim().edges), edges)
+    # concat with a padded, skewless (device-ingest) part: true counts
+    # sum, pads are trimmed out of the interior, skew joins None-aware
+    other = DeviceGraph.from_edges(
+        jnp.asarray([[14, 15], [15, 14]], jnp.int32), 16).pad_pow2()
+    assert other.degree_skew is None
+    assert int(other.edges.shape[0]) > 2          # really padded
+    cat = DeviceGraph.concat([sh.trim(), other])
+    assert cat.true_edges_static == 15
+    assert cat.degree_skew == dg.degree_skew      # max of known
+    np.testing.assert_array_equal(
+        np.asarray(cat.edges)[:15],
+        np.concatenate([edges, [[14, 15], [15, 14]]]))
+
+
+def test_shard_roundtrip_nondivisible_8dev():
+    """8-way shard of non-divisible counts: rows pad to a multiple of
+    8, true count + skew survive, the padded tail is (0, 0), and the
+    round trip back through trim/concat reproduces the original edges
+    on every shard layout."""
+    from test_distributed import run_sub
+    out = run_sub("""
+        from repro.graphs.device import DeviceGraph
+        mesh = jax.sharding.Mesh(np.array(jax.devices()), ("data",))
+        for e_count in (13, 30, 64):           # 2 non-divisible, 1 exact
+            edges = np.stack([np.zeros(e_count, np.int32),
+                              np.arange(1, e_count + 1, dtype=np.int32)],
+                             axis=1)
+            dg = DeviceGraph.from_edges(edges, e_count + 2)
+            skew = dg.degree_skew
+            assert skew is not None
+            sh = dg.shard(mesh, ("data",))
+            assert sh.edges.shape[0] % 8 == 0
+            assert sh.true_edges_static == e_count
+            assert sh.degree_skew == skew
+            host = np.asarray(sh.edges)
+            np.testing.assert_array_equal(host[:e_count], edges)
+            assert (host[e_count:] == 0).all()     # (0,0) no-op pads
+            # round trip: trim -> re-concat shards' worth of parts
+            back = DeviceGraph.concat(
+                [sh.trim(), DeviceGraph.from_edges(
+                    np.zeros((0, 2), np.int32), e_count + 2)])
+            assert back.true_edges_static == e_count
+            assert back.degree_skew == skew
+            np.testing.assert_array_equal(np.asarray(back.edges)[:e_count],
+                                          edges)
+        print("SHARD_ROUNDTRIP_OK")
+    """)
+    assert "SHARD_ROUNDTRIP_OK" in out

@@ -407,6 +407,48 @@ def test_slo_recorder_per_tenant_and_exact_global_merge():
     assert 1 / bound <= est_p50 / true_p50 <= bound
 
 
+def test_slo_merge_rejects_mismatched_bucket_specs():
+    """Bucket counts only add exactly when every stream shares one
+    edge layout. A recorder whose ``_hists`` were populated externally
+    (the fleet's per-device merge path) with a different spec must
+    raise, not silently read percentiles off the wrong edges — and the
+    same check guards ``merge_recorders`` at both the recorder and the
+    per-stream level."""
+    from repro.obs.metrics import HistogramSpec
+    from repro.obs.slo import LatencyHistogram, merge_recorders
+
+    other_spec = HistogramSpec(lo=1e-3, hi=1.0, num_bins=8)
+    rec = SLORecorder()
+    rec.record("a", "insert", 0.01)
+    # smuggle a foreign-layout stream in, the way an external populator
+    # (bad merge code) would
+    rec._hists[("b", "insert")] = LatencyHistogram(other_spec)
+    rec._hists[("b", "insert")].record(0.01)
+    with pytest.raises(ValueError, match="not mergeable"):
+        rec.merged()
+    # per-tenant read that avoids the bad stream still works
+    assert rec.merged(tenant="a").count == 1
+
+    # recorder-level mismatch
+    r1, r2 = SLORecorder(), SLORecorder(other_spec)
+    r1.record("a", "insert", 0.01)
+    r2.record("a", "insert", 0.01)
+    with pytest.raises(ValueError, match="not mergeable"):
+        merge_recorders([r1, r2])
+    # stream-level mismatch behind a matching recorder spec
+    r3 = SLORecorder()
+    r3._hists[("c", "insert")] = LatencyHistogram(other_spec)
+    with pytest.raises(ValueError, match="spec"):
+        merge_recorders([r1, r3])
+    # clean merge is exact: counts sum per (tenant, kind)
+    r4 = SLORecorder()
+    r4.record("a", "insert", 0.02)
+    r4.record("d", "query", 0.001)
+    out = merge_recorders([r1, r4])
+    assert out.merged(tenant="a").count == 2
+    assert out.merged(tenant="d").count == 1
+
+
 # ---------------------------------------------------------------------------
 # the headline contract: instrumented tick stays transfer-free
 # ---------------------------------------------------------------------------
